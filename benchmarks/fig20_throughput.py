@@ -1,0 +1,29 @@
+"""Paper Fig. 20: throughput gain in low-end networks.
+
+Gain = ABY3 batch time / Trident batch time as bandwidth shrinks; the gap
+widens because Trident moves ~3-9x fewer online bits."""
+from repro.core import paper_costs as PC
+from repro.core.costs import NetworkModel
+
+
+def run():
+    print("=" * 72)
+    print("Fig. 20 -- Prediction throughput gain vs bandwidth (d=784, B=100)")
+    print("=" * 72)
+    from .table_prediction import predict_cost
+    print(f"{'bw (Mbps)':>10s} " + " ".join(
+        f"{k:>9s}" for k in ("linreg", "logreg", "nn", "cnn")))
+    for bw in (40, 20, 10, 5, 2, 1):
+        net = NetworkModel("x", rtt_s=274.83e-3, bandwidth_bps=bw * 1e6)
+        row = []
+        for kind, layers in (("linreg", ()), ("logreg", ()),
+                             ("nn", (128, 128, 10)),
+                             ("cnn", (980, 100, 10))):
+            ra, ba = predict_cost("aby3", kind, 784, 100, layers)
+            rt, bt = predict_cost("trident", kind, 784, 100, layers)
+            row.append(net.seconds(ra, ba) / net.seconds(rt, bt))
+        print(f"{bw:>10d} " + " ".join(f"{g:>8.1f}x" for g in row))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+
+    from . import (table_conversions, table_ml_blocks, table_training,
+                   table_prediction, table_gordon_aes, table_monetary,
+                   fig20_throughput)
+    t0 = time.time()
+    table_conversions.run()
+    print()
+    table_ml_blocks.run()
+    print()
+    table_training.run(fast=args.fast)
+    print()
+    table_prediction.run()
+    print()
+    table_gordon_aes.run()
+    print()
+    table_monetary.run()
+    print()
+    fig20_throughput.run()
+    print(f"\n[benchmarks done in {time.time()-t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Paper Tables I & IX: sharing-conversion costs, Trident vs ABY3.
+
+Columns are (rounds, bits) per element, offline and online, ell = 64.
+The Trident online numbers are additionally VERIFIED against the executed
+CostTally of the real protocols (the same check tests/test_costs.py makes).
+"""
+import numpy as np
+
+from repro.core import paper_costs as PC
+from repro.core import protocols as PR
+from repro.core import conversions as CV
+from repro.core import boolean as BW
+from repro.core.context import make_context
+from repro.core.ring import RING64
+
+ELL = 64
+ROWS = ["g2b", "g2a", "b2g", "a2g", "a2b", "bit2a", "b2a", "bitinj"]
+
+
+def executed_online(name):
+    """Run the real protocol once; return (online_rounds, online_bits)."""
+    ctx = make_context(RING64, seed=0)
+    one = PR.share(ctx, ctx.ring.encode(np.asarray([0.5])))
+    r0, b0 = ctx.tally.online.rounds, ctx.tally.online.bits
+    if name == "a2b":
+        CV.a2b(ctx, one)
+    elif name == "b2a":
+        vb = BW.share_bool(ctx, ctx.ring.encode(np.asarray([0.5])))
+        r0, b0 = ctx.tally.online.rounds, ctx.tally.online.bits
+        CV.b2a(ctx, vb)
+    elif name == "bit2a":
+        b = CV.bit_extract(ctx, one)
+        r0, b0 = ctx.tally.online.rounds, ctx.tally.online.bits
+        CV.bit2a(ctx, b)
+    elif name == "bitinj":
+        b = CV.bit_extract(ctx, one)
+        r0, b0 = ctx.tally.online.rounds, ctx.tally.online.bits
+        CV.bit_inject(ctx, b, one)
+    else:
+        return None
+    return (ctx.tally.online.rounds - r0, ctx.tally.online.bits - b0)
+
+
+def run():
+    print("=" * 72)
+    print("Table I/IX -- Sharing conversions (ell=64, kappa=128), per element")
+    print("=" * 72)
+    hdr = (f"{'conv':8s} {'':8s} {'off.R':>6s} {'off.bits':>10s} "
+           f"{'on.R':>6s} {'on.bits':>10s} {'executed(on)':>14s}")
+    print(hdr)
+    for name in ROWS:
+        for scheme, table in (("ABY3", PC.ABY3), ("This", PC.TRIDENT)):
+            if name not in table:
+                continue
+            fr, fb, nr, nb = table[name](ELL)
+            ex = ""
+            if scheme == "This":
+                impl = PC.TRIDENT_IMPL.get(name, table[name])(ELL)
+                got = executed_online(name)
+                if got is not None:
+                    ok = got == impl[2:]
+                    ex = f"{got} {'OK' if ok else 'MISMATCH'}"
+            print(f"{name:8s} {scheme:8s} {fr:>6d} {fb:>10d} "
+                  f"{nr:>6d} {nb:>10d} {ex:>14s}")
+    print()
+    print("Headline gains at ell=64 (paper Section I-A):")
+    b2a_r = PC.ABY3['b2a'](ELL)[2] / PC.TRIDENT['b2a'](ELL)[2]
+    b2a_c = PC.ABY3['b2a'](ELL)[3] / PC.TRIDENT['b2a'](ELL)[3]
+    print(f"  B2A: {b2a_r:.0f}x rounds, {b2a_c:.1f}x communication")
+    a2g = PC.ABY3['a2g'](ELL)[3] / PC.TRIDENT['a2g'](ELL)[3]
+    print(f"  A2G: {a2g:.0f}x online communication")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Table XI: 4PC comparison vs Gordon et al. on an AES-128 circuit.
+
+AES-128 (Bristol-fashion): 6400 AND gates, multiplicative depth 60.
+Per-party online send per AND: Gordon et al. 4 parties x 1 element; Trident
+3 parties x 1 element with P0 silent.  Time model per party:
+rounds*rtt + bits_sent/bw (WAN), matching the paper's monetary-cost frame.
+"""
+from repro.core.costs import WAN
+
+AES_ANDS = 6400
+AES_DEPTH = 60
+ELL = 1                     # boolean circuit: 1-bit ring
+
+
+def run():
+    print("=" * 72)
+    print("Table XI -- AES-128 evaluation vs Gordon et al. (WAN, per-party"
+          " online time)")
+    print("=" * 72)
+    # per-party online bits sent per AND gate
+    gordon = {f"P{i}": AES_ANDS * ELL for i in range(4)}
+    ours = {"P0": 0, "P1": AES_ANDS * ELL, "P2": AES_ANDS * ELL,
+            "P3": AES_ANDS * ELL}
+    # amortized over 128-bit lanes like the implementation batches; use
+    # rounds = depth for both (masked evaluation is depth-bound)
+    print(f"{'':8s} {'P0':>8s} {'P1':>8s} {'P2':>8s} {'P3':>8s} "
+          f"{'total':>8s}")
+    for name, sched in (("Gordon", gordon), ("This", ours)):
+        ts = []
+        for p in ("P0", "P1", "P2", "P3"):
+            bits = sched[p] * 128          # 128 blocks batch
+            t = (AES_DEPTH * WAN.rtt_s if sched[p] else 0.0) \
+                + bits / WAN.bandwidth_bps
+            ts.append(t)
+        print(f"{name:8s} " + " ".join(f"{t:>8.2f}" for t in ts)
+              + f" {sum(ts):>8.2f}")
+    print()
+    print("P0 is OFFLINE during the online phase in our protocol (paper's")
+    print("monetary-cost advantage: the 4th server can be shut down);")
+    print("paper's measured Table XI: Gordon total 21.52 s vs This 16.19 s.")
+
+
+if __name__ == "__main__":
+    run()

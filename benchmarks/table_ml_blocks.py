@@ -1,0 +1,64 @@
+"""Paper Tables II & X: ML building blocks, Trident vs ABY3 (ell = 64)."""
+import numpy as np
+
+from repro.core import paper_costs as PC
+from repro.core import protocols as PR
+from repro.core import conversions as CV
+from repro.core import activations as ACT
+from repro.core.context import make_context
+from repro.core.ring import RING64
+
+ELL = 64
+ROWS = ["mult_tr", "bitext", "relu", "sigmoid"]
+LABEL = {"mult_tr": "Mult+Trunc", "bitext": "SecComp/BitExt",
+         "relu": "ReLU", "sigmoid": "Sigmoid"}
+
+
+def executed(name):
+    ctx = make_context(RING64, seed=0)
+    one = PR.share(ctx, ctx.ring.encode(np.asarray([0.5])))
+    r0 = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+          ctx.tally.online.rounds, ctx.tally.online.bits)
+    if name == "mult_tr":
+        PR.mult_tr(ctx, one, one)
+    elif name == "bitext":
+        CV.bit_extract(ctx, one, method="mul")
+    elif name == "relu":
+        ACT.relu(ctx, one)
+    elif name == "sigmoid":
+        ACT.sigmoid(ctx, one)
+    r1 = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+          ctx.tally.online.rounds, ctx.tally.online.bits)
+    return tuple(b - a for a, b in zip(r0, r1))
+
+
+def run():
+    print("=" * 72)
+    print("Table II/X -- ML building blocks (ell=64), per element")
+    print("=" * 72)
+    print(f"{'block':16s} {'':6s} {'off.R':>6s} {'off.bits':>9s} "
+          f"{'on.R':>5s} {'on.bits':>8s}   executed(off+on)")
+    for name in ROWS:
+        for scheme, table in (("ABY3", PC.ABY3), ("This", PC.TRIDENT)):
+            fr, fb, nr, nb = table[name](ELL)
+            ex = ""
+            if scheme == "This":
+                got = executed(name)
+                impl = PC.TRIDENT_IMPL.get(name, table[name])(ELL)
+                ok = got == impl
+                ex = f"{got} {'OK' if ok else 'MISMATCH vs ' + str(impl)}"
+            print(f"{LABEL[name]:16s} {scheme:6s} {fr:>6d} {fb:>9d} "
+                  f"{nr:>5d} {nb:>8d}   {ex}")
+    print()
+    print("Dot product (Pi_DotP) communication vs vector length d:")
+    print(f"{'d':>6s} {'ABY3 on.bits':>14s} {'This on.bits':>14s}")
+    for d in (1, 10, 100, 1000):
+        a = PC.ABY3["dotp"](ELL, d)[3]
+        t = PC.TRIDENT["dotp"](ELL, d)[3]
+        print(f"{d:>6d} {a:>14d} {t:>14d}")
+    print("  (This is independent of d -- the paper's headline property;")
+    print("   executed check in tests/test_costs.py)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table XII + Appendix E: monetary cost / total online runtime.
+
+Total online runtime (rounds*rtt + bits/bw over WAN) for training (1 iter,
+B=128, d=784) and prediction; our P0 is idle online, so the 4-server
+monetary cost is 3 active servers x time + P0's sharing/reconstruction
+slice -- cheaper than ABY3's 3 always-on servers at higher per-iter time.
+"""
+from repro.core import paper_costs as PC
+from repro.core.costs import WAN
+
+
+def runtime(scheme, kind, layers=()):
+    _, _, on_r, on_b = PC.model_iteration_cost(scheme, 64, 784, 128, kind,
+                                               layers)
+    return WAN.seconds(on_r, on_b)
+
+
+def run():
+    print("=" * 72)
+    print("Table XII -- Total online runtime over WAN (s), d=784, B=128")
+    print("=" * 72)
+    rows = (("linreg", (), "Linear Reg."), ("logreg", (), "Logistic Reg."),
+            ("nn", (128, 128, 10), "NN"), ("cnn", (980, 100, 10), "CNN"))
+    print(f"{'model':15s} {'ABY3 (s)':>10s} {'This (s)':>10s} "
+          f"{'servers busy':>24s}")
+    for kind, layers, label in rows:
+        a = runtime("aby3", kind, layers)
+        t = runtime("trident", kind, layers)
+        print(f"{label:15s} {a:>10.2f} {t:>10.2f} "
+              f"{'ABY3: 3 full-time; This: 3 + idle P0':>24s}")
+    print()
+    print("Monetary-cost estimate (n1-standard-8 at ~$0.38/h):")
+    for kind, layers, label in rows:
+        a = runtime("aby3", kind, layers) * 3
+        t = runtime("trident", kind, layers) * 3   # P0 shut down online
+        print(f"  {label:15s} ABY3 {a*0.38/3600:.2e} $/iter   "
+              f"This {t*0.38/3600:.2e} $/iter   ({a/t:.1f}x)")
+
+
+if __name__ == "__main__":
+    run()

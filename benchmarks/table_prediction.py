@@ -1,0 +1,86 @@
+"""Paper Tables VII & VIII: secure-prediction latency and throughput."""
+import numpy as np
+
+from repro.core import paper_costs as PC
+from repro.core.costs import LAN, WAN
+from repro.configs.paper_models import PREDICTION_DATASETS
+
+
+def predict_cost(scheme, kind, d, batch, layers=()):
+    """(online_rounds, online_bits) of one prediction batch (fwd only)."""
+    ell = 64
+    if kind == "linreg":
+        c = PC.dotp_tr_cost(scheme, ell, d)
+        return c[2], c[3] * batch
+    if kind == "logreg":
+        c = PC.dotp_tr_cost(scheme, ell, d)
+        table = PC.TRIDENT if scheme == "trident" else PC.ABY3
+        s = table["sigmoid"](ell)
+        return c[2] + s[2], (c[3] + s[3]) * batch
+    # nn/cnn: stack of matmul+relu + smx output via garbled division
+    dims = (d,) + tuple(layers)
+    table = PC.TRIDENT if scheme == "trident" else PC.ABY3
+    rounds, bits = 0, 0
+    for i in range(1, len(dims)):
+        c = PC.dotp_tr_cost(scheme, ell, dims[i - 1])
+        rounds += c[2]
+        bits += c[3] * batch * dims[i]
+        if i < len(dims) - 1:
+            r = table["relu"](ell)
+            rounds += r[2]
+            bits += r[3] * batch * dims[i]
+    r = table["relu"](ell)
+    g = table["a2g"](ell)
+    g2 = table["g2a"](ell)
+    n_out = batch * dims[-1]
+    rounds += r[2] + g[2] + g2[2]
+    bits += (r[3] + g[3] + g2[3]) * n_out
+    return rounds, bits
+
+
+def run():
+    print("=" * 72)
+    print("Table VII -- Online prediction latency, d=784 (LAN ms / WAN s)")
+    print("=" * 72)
+    print(f"{'model':10s} {'B':>4s} | {'LAN ms':>21s} | {'WAN s':>19s}")
+    print(f"{'':10s} {'':>4s} | {'ABY3':>10s} {'This':>10s} |"
+          f" {'ABY3':>9s} {'This':>9s}")
+    nets = (("linreg", ()), ("logreg", ()), ("nn", (128, 128, 10)),
+            ("cnn", (980, 100, 10)))
+    for kind, layers in nets:
+        for B in (1, 100):
+            la_r, la_b = predict_cost("aby3", kind, 784, B, layers)
+            lt_r, lt_b = predict_cost("trident", kind, 784, B, layers)
+            lan_a = LAN.seconds(la_r, la_b) * 1e3
+            lan_t = LAN.seconds(lt_r, lt_b) * 1e3
+            wan_a = WAN.seconds(la_r, la_b)
+            wan_t = WAN.seconds(lt_r, lt_b)
+            print(f"{kind:10s} {B:>4d} | {lan_a:>10.2f} {lan_t:>10.2f} |"
+                  f" {wan_a:>9.2f} {wan_t:>9.2f}")
+    print()
+    print("=" * 72)
+    print("Table VIII -- Online throughput over LAN (queries/s, 32 threads"
+          " x 100 queries)")
+    print("=" * 72)
+    assign = {"BT": "linreg", "WR": "linreg", "CI": "linreg",
+              "CD": "logreg", "EP": "logreg", "RE": "logreg"}
+    print(f"{'dataset':9s} {'d':>5s} {'model':8s} "
+          f"{'ABY3 q/s':>10s} {'This q/s':>10s} {'gain':>7s}")
+    for ds, d in PREDICTION_DATASETS.items():
+        kinds = [assign[ds]] if ds in assign else [
+            ("nn", (128, 128, 10)), ("cnn", (980, 100, 10))]
+        for k in kinds:
+            kind, layers = (k, ()) if isinstance(k, str) else k
+            qa = _tp("aby3", kind, d, layers)
+            qt = _tp("trident", kind, d, layers)
+            print(f"{ds:9s} {d:>5d} {kind:8s} {qa:>10.2f} {qt:>10.2f} "
+                  f"{qt/qa:>6.1f}x")
+
+
+def _tp(scheme, kind, d, layers, threads=32, per_batch=100):
+    r, b = predict_cost(scheme, kind, d, per_batch, layers)
+    return threads * per_batch / LAN.seconds(r, b)
+
+
+if __name__ == "__main__":
+    run()

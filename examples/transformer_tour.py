@@ -1,0 +1,61 @@
+"""Tour: train + decode a (reduced) assigned architecture under 4PC.
+
+    PYTHONPATH=src python examples/transformer_tour.py --arch qwen3-1.7b
+"""
+import argparse
+
+import numpy as np
+
+from repro import configs as CFGS
+from repro.core.context import make_context
+from repro.core.costs import LAN, WAN
+from repro.nn.engine import TridentEngine
+from repro.nn import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    help=f"one of {sorted(CFGS.ALIASES)}")
+    ap.add_argument("--steps", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = CFGS.get(args.arch).SMOKE
+    print(f"arch {args.arch} (reduced config: {cfg.n_layers}L "
+          f"d={cfg.d_model} {cfg.family})")
+    rng = np.random.RandomState(0)
+    ctx = make_context(seed=0, collapse=True)
+    eng = TridentEngine(ctx)
+    params = M.params_to_engine(eng, M.init_params(cfg, seed=0))
+
+    B, S = 2, 8
+    kw = {}
+    if cfg.family == "vlm":
+        kw["frontend_embs"] = eng.from_plain(
+            rng.randn(B, cfg.frontend_tokens, cfg.d_model) * 0.1)
+    if cfg.family == "encdec":
+        kw["enc_inputs"] = eng.from_plain(
+            rng.randn(B, cfg.frontend_tokens, cfg.d_model) * 0.1)
+    for step in range(args.steps):
+        ids = rng.randint(0, cfg.vocab, (B, S))
+        labels = rng.randint(0, cfg.vocab, (B, S))
+        params, loss, _ = M.train_step(eng, cfg, params, ids, labels,
+                                       lr=2.0 ** -6, **kw)
+        print(f"  step {step}: loss {float(loss):.4f}  "
+              f"abort={bool(ctx.abort_flag())}")
+
+    if cfg.family not in ("encdec", "vlm"):
+        ids = rng.randint(0, cfg.vocab, (B, S + 1))
+        _, caches = M.serve_prefill(eng, cfg, params, ids[:, :S])
+        logits, _ = M.serve_decode(eng, cfg, params, ids[:, S:], caches,
+                                   pos=S)
+        tok = np.argmax(np.asarray(eng.to_plain(logits))[:, 0], -1)
+        print(f"  decoded next tokens: {tok}")
+
+    r, b = ctx.tally.online.rounds, ctx.tally.online.bits
+    print(f"total online: {r} rounds, {b/8e6:.2f} MB "
+          f"(LAN {LAN.seconds(r, b)*1e3:.0f} ms / WAN {WAN.seconds(r, b):.1f} s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""ABY3 (Mohassel & Rindal, CCS'18) 3PC baseline -- the paper's comparison.
+
+Functional 2-out-of-3 replicated secret sharing with semi-honest
+multiplication, plus the paper-claimed malicious cost formulas (see
+paper_costs.ABY3) used by the comparison benchmarks.  The joint simulation
+stores the three additive legs as a stacked (3, *shape) array; party i holds
+legs (i, i+1 mod 3).
+
+Implemented: share / reveal / add / mult / matmul / SecureML-style
+truncation pair.  This is enough to run the paper's four ML workloads
+end-to-end as a baseline and to measure local-compute wall time; the
+malicious variant is cost-modeled (the paper itself benchmarks its own
+reimplementation of ABY3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .context import TridentContext
+from .ring import Ring
+
+
+def _n(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RShare:
+    """Replicated 3PC share: data (3, *shape), legs sum to the value."""
+
+    data: jax.Array
+
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @property
+    def shape(self):
+        return self.data.shape[1:]
+
+    def reveal(self) -> jax.Array:
+        return self.data[0] + self.data[1] + self.data[2]
+
+    def __add__(self, other):
+        if isinstance(other, RShare):
+            return RShare(self.data + other.data)
+        return RShare(self.data.at[0].add(jnp.asarray(other, self.data.dtype)))
+
+    def __sub__(self, other):
+        if isinstance(other, RShare):
+            return RShare(self.data - other.data)
+        return RShare(self.data.at[0].add(-jnp.asarray(other, self.data.dtype)))
+
+    def __neg__(self):
+        return RShare(-self.data)
+
+    def mul_public(self, c):
+        return RShare(self.data * jnp.asarray(c, self.data.dtype))
+
+
+def share(ctx: TridentContext, v: jax.Array, malicious: bool = True) -> RShare:
+    ring = ctx.ring
+    v = jnp.asarray(v, ring.dtype)
+    a = ctx.sample((0, 1), v.shape)
+    b = ctx.sample((1, 2), v.shape)
+    c = v - a - b
+    ctx.tally.add("ABY3.share", "online", rounds=1,
+                  bits=(3 if malicious else 2) * ring.ell * _n(v.shape))
+    return RShare(jnp.stack([a, b, c]))
+
+
+def reveal(ctx: TridentContext, x: RShare, malicious: bool = True):
+    ctx.tally.add("ABY3.rec", "online", rounds=1,
+                  bits=(6 if malicious else 3) * ctx.ring.ell * _n(x.shape))
+    return x.reveal()
+
+
+def _zero3(ctx: TridentContext, shape) -> jax.Array:
+    f1 = ctx.sample((0, 1), shape)
+    f2 = ctx.sample((1, 2), shape)
+    f3 = ctx.sample((2, 0), shape)
+    return jnp.stack([f1 - f3, f2 - f1, f3 - f2])
+
+
+def mult(ctx: TridentContext, x: RShare, y: RShare,
+         malicious: bool = True) -> RShare:
+    """Replicated multiplication + resharing.  Semi-honest: 3 elements,
+    1 round; malicious tallied at the paper-claimed 9 elements online."""
+    ring = ctx.ring
+    z = _zero3(ctx, jnp.broadcast_shapes(x.shape, y.shape))
+    legs = []
+    for i in range(3):
+        j = (i + 1) % 3
+        legs.append(x.data[i] * y.data[i] + x.data[i] * y.data[j]
+                    + x.data[j] * y.data[i] + z[i])
+    n = _n(legs[0].shape)
+    ctx.tally.add("ABY3.mult", "online", rounds=1,
+                  bits=(9 if malicious else 3) * ring.ell * n)
+    ctx.tally.add("ABY3.mult", "offline", rounds=1,
+                  bits=(3 if malicious else 0) * ring.ell * n)
+    return RShare(jnp.stack(legs))
+
+
+def matmul(ctx: TridentContext, x: RShare, y: RShare,
+           malicious: bool = True) -> RShare:
+    """ABY3 dot-product/matmul: communication scales with the contraction
+    length in the malicious case (the paper's headline comparison)."""
+    ring = ctx.ring
+    d = x.shape[-1]
+    out_shape = tuple(x.shape[:-1]) + tuple(y.shape[1:])
+    z = _zero3(ctx, out_shape)
+    mm = lambda a, b: jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=ring.dtype)
+    legs = []
+    for i in range(3):
+        j = (i + 1) % 3
+        legs.append(mm(x.data[i], y.data[i]) + mm(x.data[i], y.data[j])
+                    + mm(x.data[j], y.data[i]) + z[i])
+    n = _n(out_shape)
+    ctx.tally.add("ABY3.dotp", "online", rounds=1,
+                  bits=(9 * d if malicious else 3) * ring.ell * n)
+    ctx.tally.add("ABY3.dotp", "offline", rounds=1,
+                  bits=(3 * d if malicious else 0) * ring.ell * n)
+    return RShare(jnp.stack(legs))
+
+
+def truncate(ctx: TridentContext, x: RShare, malicious: bool = True) -> RShare:
+    """SecureML-style pair truncation; ABY3's offline pair generation uses
+    (2*ell-2)-round RCA circuits -- tallied, value emulated via the pair."""
+    ring = ctx.ring
+    shape = x.shape
+    r1 = ctx.sample((0, 1), shape)
+    r2 = ctx.sample((1, 2), shape)
+    r3 = ctx.sample((2, 0), shape)
+    r = r1 + r2 + r3
+    rt = ring.truncate(r)
+    # offline RCA evaluation: 2*ell-2 rounds (paper Table X)
+    ctx.tally.add("ABY3.trunc_pair", "offline", rounds=2 * ring.ell - 2,
+                  bits=(96 * ring.ell - 84) * _n(shape))
+    opened = x.reveal() - r
+    zt = ring.truncate(opened)
+    ctx.tally.add("ABY3.trunc", "online", rounds=1,
+                  bits=3 * ring.ell * _n(shape))
+    legs = jnp.stack([zt + r1, r2, r3])
+    return RShare(legs - jnp.stack([r, jnp.zeros_like(r), jnp.zeros_like(r)])
+                  + jnp.stack([rt, jnp.zeros_like(r), jnp.zeros_like(r)]))
+
+
+def matmul_tr(ctx: TridentContext, x: RShare, y: RShare,
+              malicious: bool = True) -> RShare:
+    return truncate(ctx, matmul(ctx, x, y, malicious), malicious)

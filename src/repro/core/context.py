@@ -1,0 +1,158 @@
+"""Trident execution context: ring + keys + cost tally + phase mode.
+
+A ``TridentContext`` is created per traced step function.  It provides:
+
+  * PRF sampling with statically-allocated counters (pure traces),
+  * the communication CostTally,
+  * malicious-security check collection (recompute-and-compare emulation of
+    the paper's hash exchanges; aggregated into an ``abort`` flag),
+  * the offline/online material channel that realizes the paper's
+    offline-online paradigm as twin traces of the same program.
+
+Modes:
+  fused    -- offline + online inlined in one program (default).
+  offline  -- runs only the data-independent part; every protocol pushes its
+              preprocessing material (gamma shares, truncation pairs, ...)
+              into ``materials``.
+  online   -- consumes a materials pytree produced by an offline trace of the
+              *same* program (identical call order), pops by index.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .costs import CostTally
+from .prf import SetupKeys, make_setup_keys, prf_bits, prf_bounded
+from .ring import Ring, RING64
+
+
+@dataclasses.dataclass
+class TridentContext:
+    ring: Ring
+    keys: SetupKeys
+    tally: CostTally
+    mode: str = "fused"                 # fused | offline | online
+    malicious_checks: bool = True
+    # Beyond-paper "component-collapsed" evaluation (DESIGN.md section 6):
+    # the joint simulation computes reconstructed wire values from collapsed
+    # lambda sums (4 matmuls per secure matmul instead of 16).  Identical
+    # outputs and identical communication tallies; HLO-flop optimization only.
+    collapse: bool = False
+    # BitExt (Fig. 19) guard bits: |r| < 2^{ell-1-guard}; correctness holds
+    # for |v| < 2^guard.  See DESIGN.md section 3 (paper precondition).
+    bitext_guard: int = 24
+    # "mul" = paper-faithful Fig. 19 (constant rounds, guarded r);
+    # "ppa" = robust boolean-PPA msb (log ell rounds, no precondition).
+    bitext_method: str = "mul"
+    # Leading-one window [lo, hi) for the NR reciprocal/rsqrt normalization
+    # (bit positions of the ring); covers reals in [2^{lo-f}, 2^{hi-f}).
+    norm_window: tuple = (4, 40)
+
+    def __post_init__(self):
+        self._counter = 0
+        self.materials: list[Any] = []
+        self._mat_idx = 0
+        self.checks: list[jax.Array] = []
+        # Inside jax.lax.scan bodies (layer stacks, SSM chunk scans) the
+        # per-iteration PRF stream comes from a traced key passed as scan
+        # input; static counters then disambiguate call sites within the body.
+        self.key_override = None
+
+    # --- PRF sampling ---------------------------------------------------
+    def fresh_counter(self) -> int:
+        c = self._counter
+        self._counter += 1
+        return c
+
+    def _subset_key(self, subset) -> jax.Array:
+        if self.key_override is not None:
+            from .prf import subset_id
+            return jax.random.fold_in(self.key_override, subset_id(subset))
+        return self.keys.subset_key(subset)
+
+    def sample(self, subset, shape) -> jax.Array:
+        """Non-interactive joint sampling by `subset` (F_setup stream)."""
+        return prf_bits(self._subset_key(subset), self.fresh_counter(),
+                        shape, self.ring)
+
+    def sample_bounded(self, subset, shape, bits: int) -> jax.Array:
+        return prf_bounded(self._subset_key(subset), self.fresh_counter(),
+                           shape, self.ring, bits)
+
+    @contextlib.contextmanager
+    def scan_keys(self, key: jax.Array):
+        """Use `key` (a traced PRNG key, e.g. a scan xs element) as the PRF
+        root inside a scan body; restores the previous root on exit."""
+        prev = self.key_override
+        self.key_override = key
+        try:
+            yield
+        finally:
+            self.key_override = prev
+
+    # --- offline/online material channel ---------------------------------
+    def put_material(self, mat) -> None:
+        self.materials.append(mat)
+
+    def get_material(self):
+        mat = self.materials[self._mat_idx]
+        self._mat_idx += 1
+        return mat
+
+    def offer(self, mat):
+        """fused: pass through; offline: record; online: replace w/ recorded."""
+        if self.mode == "fused":
+            return mat
+        if self.mode == "offline":
+            self.put_material(mat)
+            return mat
+        return self.get_material()
+
+    # --- malicious-security checks ---------------------------------------
+    def check_equal(self, a: jax.Array, b: jax.Array, tag: str = "") -> None:
+        """Emulates a hash-consistency exchange: both senders' copies must
+        agree.  Tampering (tested by fault-injection tests) flips `abort`."""
+        if not self.malicious_checks:
+            return
+        self.checks.append(jnp.all(a == b))
+
+    # --- scan-body check plumbing -----------------------------------------
+    # Checks created inside a jax.lax.scan body are traced values that must
+    # leave the body through scan outputs, not via this Python list.  Scan
+    # wrappers bracket the body with begin_body/end_body and re-attach the
+    # folded result outside with absorb_checks.
+    def begin_body(self) -> int:
+        return len(self.checks)
+
+    def end_body(self, mark: int) -> jax.Array:
+        cs = self.checks[mark:]
+        del self.checks[mark:]
+        ok = jnp.asarray(True)
+        for c in cs:
+            ok = jnp.logical_and(ok, c)
+        return ok
+
+    def absorb_checks(self, oks) -> None:
+        if self.malicious_checks:
+            self.checks.append(jnp.all(oks))
+
+    def abort_flag(self) -> jax.Array:
+        """False if all consistency checks passed (continue), True = abort."""
+        if not self.checks:
+            return jnp.asarray(False)
+        ok = self.checks[0]
+        for c in self.checks[1:]:
+            ok = jnp.logical_and(ok, c)
+        return jnp.logical_not(ok)
+
+
+def make_context(ring: Ring = RING64, seed: int = 0, mode: str = "fused",
+                 malicious_checks: bool = True, **kw) -> TridentContext:
+    return TridentContext(ring=ring, keys=make_setup_keys(seed),
+                          tally=CostTally(), mode=mode,
+                          malicious_checks=malicious_checks, **kw)

@@ -1,0 +1,163 @@
+"""Garbled world: faithful cost accounting + value-level emulation.
+
+The paper uses the 4PC-adapted MRZ garbling scheme (P1,P2,P3 garble, P0
+evaluates; free-XOR, half-gates, fixed-key AES).  Bit-level garbling has no
+TPU/MXU analogue (DESIGN.md section 3), and the paper itself only enters the
+garbled world for division (softmax) and as conversion endpoints.  We
+therefore model the garbled world at two levels:
+
+  * cost: every protocol tallies the paper's exact rounds/bits (Table IX),
+    including the kappa factors -- validated in tests/test_costs.py;
+  * value: the garbled evaluation computes the same function the circuit
+    would, on the joint-simulation wire values, and the result re-enters the
+    arithmetic world as a fresh [[.]]-share (exactly what Pi_G2A produces).
+
+kappa = 128 (computational security parameter, as in the paper).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .context import TridentContext
+from .prf import PARTIES
+from .shares import AShare, BShare
+
+KAPPA = 128
+
+
+def _n(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+# Garbled-circuit size estimates (ANDs) for the ell-bit primitives we use.
+def sub_circuit_ands(ell: int) -> int:          # ripple-borrow subtractor
+    return ell
+
+
+def add_circuit_ands(ell: int) -> int:
+    return ell
+
+
+def div_circuit_ands(ell: int) -> int:
+    # Long division: ell iterations of subtract-compare-select ~ 2*ell ANDs.
+    return 2 * ell * ell
+
+
+def _fresh_ashare(ctx: TridentContext, value: jax.Array) -> AShare:
+    """Re-share a value produced by a garbled evaluation as [[.]]: the
+    Pi_vSh(P3, P0, .) step of Figs. 10/11."""
+    ring = ctx.ring
+    lams = []
+    for j in (1, 2, 3):
+        subset = PARTIES if j in (0, 3) else tuple(
+            p for p in PARTIES if p != j)
+        lams.append(ctx.sample(subset, value.shape))
+    lam = jnp.stack(lams)
+    m = value.astype(ring.dtype) + lam[0] + lam[1] + lam[2]
+    return AShare(jnp.concatenate([m[None], lam], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Conversion endpoints -- cost per Table IX ("This" rows).
+# ---------------------------------------------------------------------------
+def a2g_cost(ctx: TridentContext, shape) -> None:
+    ring = ctx.ring
+    n = _n(shape)
+    ctx.tally.add("A2G", "offline", rounds=1,
+                  bits=(ring.ell * KAPPA + 2 * KAPPA * sub_circuit_ands(ring.ell)) * n)
+    ctx.tally.add("A2G", "online", rounds=1, bits=ring.ell * KAPPA * n)
+
+
+def g2a_cost(ctx: TridentContext, shape) -> None:
+    ring = ctx.ring
+    n = _n(shape)
+    ctx.tally.add("G2A", "offline", rounds=1,
+                  bits=(ring.ell * KAPPA + ring.ell
+                        + 2 * KAPPA * sub_circuit_ands(ring.ell)) * n)
+    ctx.tally.add("G2A", "online", rounds=1, bits=3 * ring.ell * n)
+
+
+def b2g_cost(ctx: TridentContext, shape, nbits: int) -> None:
+    n = _n(shape) * nbits
+    ctx.tally.add("B2G", "offline", rounds=1, bits=KAPPA * n)
+    ctx.tally.add("B2G", "online", rounds=1, bits=KAPPA * n)
+
+
+def g2b_cost(ctx: TridentContext, shape, nbits: int) -> None:
+    n = _n(shape) * nbits
+    ctx.tally.add("G2B", "offline", rounds=1, bits=(KAPPA + 1) * n)
+    ctx.tally.add("G2B", "online", rounds=1, bits=3 * n)
+
+
+def garbled_eval_cost(ctx: TridentContext, shape, n_ands: int) -> None:
+    """P1 ships the garbled tables (2*kappa bits per AND, half-gates) to P0
+    in the offline phase; online evaluation is local to P0."""
+    ctx.tally.add("GC.tables", "offline", rounds=1,
+                  bits=2 * KAPPA * n_ands * _n(shape))
+
+
+# ---------------------------------------------------------------------------
+# Garbled division (paper Section VI-A: the smx softmax denominator).
+# ---------------------------------------------------------------------------
+def garbled_div(ctx: TridentContext, num: AShare, den: AShare) -> AShare:
+    """[[num / den]] (fixed point) via the garbled world, as the paper's NN
+    benchmarks do: A2G both operands, evaluate a division circuit, G2A back.
+    """
+    ring = ctx.ring
+    shape = jnp.broadcast_shapes(num.shape, den.shape)
+    a2g_cost(ctx, shape)
+    a2g_cost(ctx, shape)
+    garbled_eval_cost(ctx, shape, div_circuit_ands(ring.ell))
+    g2a_cost(ctx, shape)
+    # Value-level emulation of the division circuit on the wire values:
+    n = ring.to_signed(num.reveal()).astype(jnp.float64)
+    d = ring.to_signed(den.reveal()).astype(jnp.float64)
+    safe = jnp.where(d == 0, 1.0, d)
+    q = jnp.where(d == 0, jnp.zeros_like(n),
+                  jnp.round(n * ring.scale / safe))
+    return _fresh_ashare(ctx, q.astype(ring.sdtype))
+
+
+def rsqrt_circuit_ands(ell: int) -> int:
+    # normalization + 3 Newton iterations: ~3 multiplier circuits of
+    # ell^2 ANDs each plus shifts => ~4*ell^2.
+    return 4 * ell * ell
+
+
+def recip_circuit_ands(ell: int) -> int:
+    return 3 * ell * ell
+
+
+def _garbled_unary(ctx: TridentContext, x: AShare, n_ands: int,
+                   fn) -> AShare:
+    """Shared skeleton: A2G -> garbled circuit -> G2A, per Figs. 11/13.
+    Cost per element is tallied with the Table IX formulas; the circuit's
+    value is emulated on the joint-simulation wire values."""
+    ring = ctx.ring
+    shape = x.shape
+    a2g_cost(ctx, shape)
+    garbled_eval_cost(ctx, shape, n_ands)
+    g2a_cost(ctx, shape)
+    v = ring.to_signed(x.reveal()).astype(jnp.float64) / ring.scale
+    y = fn(v)
+    y = jnp.round(y * ring.scale).astype(ring.sdtype)
+    return _fresh_ashare(ctx, y)
+
+
+def garbled_rsqrt(ctx: TridentContext, x: AShare) -> AShare:
+    """[[x^{-1/2}]] via the garbled world (the paper's route for division-
+    like ops, Section VI-A); clamped at tiny positives like the NR variant."""
+    return _garbled_unary(
+        ctx, x, rsqrt_circuit_ands(ctx.ring.ell),
+        lambda v: jnp.where(v <= 0, 0.0, 1.0 / jnp.sqrt(jnp.maximum(
+            v, 2.0 ** -ctx.ring.frac))))
+
+
+def garbled_reciprocal(ctx: TridentContext, x: AShare) -> AShare:
+    return _garbled_unary(
+        ctx, x, recip_circuit_ands(ctx.ring.ell),
+        lambda v: jnp.where(jnp.abs(v) < 2.0 ** -ctx.ring.frac, 0.0,
+                            1.0 / jnp.where(v == 0, 1.0, v)))

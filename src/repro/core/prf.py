@@ -1,0 +1,70 @@
+"""Shared-key setup (F_setup, paper Fig. 21) and counter-mode PRF sampling.
+
+The paper establishes PRF keys between every pair / triple of parties and one
+global key; all lambda-masks and zero-shares are then sampled
+*non-interactively* from these keys.  We realize F with JAX's counter-based
+threefry: a key per party-subset, and every protocol invocation folds in a
+fresh *statically allocated* counter so traced programs are pure functions of
+(inputs, base key, static counters) -- which is what makes deterministic
+replay (fault tolerance) and offline/online twin-tracing work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from .ring import Ring
+
+PARTIES = (0, 1, 2, 3)
+
+
+def subset_id(subset: Iterable[int]) -> int:
+    """Encode a party subset as a bitmask (e.g. {0,1} -> 0b0011)."""
+    m = 0
+    for p in subset:
+        m |= 1 << p
+    return m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SetupKeys:
+    """F_setup output: one master key; subset keys derived by fold_in.
+
+    In a real deployment each party only holds the subset keys it belongs to;
+    the joint simulation holds the master and derives per-subset streams with
+    identical semantics (a party outside subset S cannot predict S's stream).
+    """
+
+    master: jax.Array  # jax PRNG key
+
+    def subset_key(self, subset: Iterable[int]) -> jax.Array:
+        return jax.random.fold_in(self.master, subset_id(subset))
+
+    def tree_flatten(self):
+        return (self.master,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+
+def make_setup_keys(seed: int = 0) -> SetupKeys:
+    return SetupKeys(jax.random.key(seed))
+
+
+def prf_bits(key: jax.Array, counter: int, shape, ring: Ring) -> jax.Array:
+    """F_k(counter) -> uniform ring elements of `shape` (counter-mode PRF)."""
+    k = jax.random.fold_in(key, counter)
+    return jax.random.bits(k, shape, dtype=ring.dtype)
+
+
+def prf_bounded(key: jax.Array, counter: int, shape, ring: Ring,
+                bits: int) -> jax.Array:
+    """Uniform over [0, 2^bits) embedded in the ring (used by guarded BitExt)."""
+    k = jax.random.fold_in(key, counter)
+    raw = jax.random.bits(k, shape, dtype=ring.dtype)
+    return raw >> (ring.ell - bits)

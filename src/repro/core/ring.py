@@ -1,0 +1,118 @@
+"""Ring Z_{2^ell} arithmetic and fixed-point encoding.
+
+Trident operates over the ring Z_{2^ell} (ell = 64 in the paper) with signed
+two's-complement fixed point: the top bit is the sign, the low ``frac`` bits
+are the fractional part (paper/SecureML convention: frac = 13).
+
+All share components are stored as unsigned integers of the ring width;
+addition/multiplication wrap mod 2^ell natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The 64-bit ring needs x64. CPU-only container: safe to enable globally.
+jax.config.update("jax_enable_x64", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ring:
+    """Configuration of the algebraic ring + fixed-point embedding."""
+
+    ell: int = 64          # ring bit width (32 or 64)
+    frac: int = 13         # fractional bits of the fixed-point embedding
+
+    def __post_init__(self):
+        if self.ell not in (32, 64):
+            raise ValueError(f"unsupported ring width {self.ell}")
+        if not 0 <= self.frac < self.ell - 1:
+            raise ValueError(f"bad frac {self.frac} for ell {self.ell}")
+
+    # --- dtypes -----------------------------------------------------------
+    @property
+    def dtype(self):
+        return jnp.uint64 if self.ell == 64 else jnp.uint32
+
+    @property
+    def sdtype(self):
+        return jnp.int64 if self.ell == 64 else jnp.int32
+
+    @property
+    def np_dtype(self):
+        return np.uint64 if self.ell == 64 else np.uint32
+
+    @property
+    def bytes(self) -> int:
+        return self.ell // 8
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac
+
+    # --- casts ------------------------------------------------------------
+    def to_unsigned(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.dtype)
+
+    def to_signed(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.sdtype)
+
+    # --- fixed point ------------------------------------------------------
+    def encode(self, x) -> jax.Array:
+        """float -> ring fixed point (round to nearest)."""
+        x = jnp.asarray(x, jnp.float64)
+        v = jnp.round(x * self.scale).astype(self.sdtype)
+        return v.astype(self.dtype)
+
+    def decode(self, v: jax.Array) -> jax.Array:
+        """ring fixed point -> float64."""
+        return self.to_signed(v).astype(jnp.float64) / self.scale
+
+    def encode_int(self, x) -> jax.Array:
+        """integer -> ring element (no fractional scaling)."""
+        return jnp.asarray(x).astype(self.sdtype).astype(self.dtype)
+
+    def decode_int(self, v: jax.Array) -> jax.Array:
+        return self.to_signed(v)
+
+    # --- ring ops (all wrap mod 2^ell by dtype semantics) ------------------
+    def add(self, a, b):
+        return (a + b).astype(self.dtype)
+
+    def sub(self, a, b):
+        return (a - b).astype(self.dtype)
+
+    def neg(self, a):
+        return (-self.to_signed(a)).astype(self.dtype)
+
+    def mul(self, a, b):
+        return (a * b).astype(self.dtype)
+
+    def matmul(self, a, b):
+        # XLA lowers integer dot_general; wraps mod 2^ell in the ring dtype.
+        return jax.lax.dot_general(
+            a, b, (((a.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=self.dtype)
+
+    def msb(self, a) -> jax.Array:
+        """Most significant bit (the fixed-point sign) as 0/1 ring element."""
+        return (a >> (self.ell - 1)).astype(self.dtype)
+
+    def truncate(self, a, bits: int | None = None) -> jax.Array:
+        """Arithmetic (sign-preserving) right shift by `bits` (default frac)."""
+        bits = self.frac if bits is None else bits
+        return (self.to_signed(a) >> bits).astype(self.dtype)
+
+    def low_bits(self, a, bits: int) -> jax.Array:
+        mask = (1 << bits) - 1
+        return (a & self.dtype.dtype.type(mask)).astype(self.dtype)
+
+    def const(self, value: float) -> jax.Array:
+        return self.encode(value)
+
+
+RING64 = Ring(ell=64, frac=13)
+RING32 = Ring(ell=32, frac=13)

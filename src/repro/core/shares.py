@@ -1,0 +1,218 @@
+"""Share containers for the three Trident worlds.
+
+Arithmetic [[v]]-sharing (paper III-A):  m_v = v + lambda_v with
+lambda = l1 + l2 + l3;  P1,P2,P3 know m_v, each P_i misses l_i, P0 knows all
+l_i.  The joint simulation stores the 4 distinct values as one stacked array
+``data`` of shape (4, *shape):  data[0] = m_v, data[1:] = l1..l3.
+
+Boolean [[v]]^B-sharing is identical with XOR replacing +; ring words carry
+ell independent bit positions (bit-sliced), so word ops act on all bit planes
+at once.
+
+Linearity (paper III-A d): linear gates act component-wise on the stack, so
+they are single fused array ops -- the "non-interactive local evaluation" of
+the paper, for free under XLA fusion.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .ring import Ring
+
+NCOMP = 4  # m, l1, l2, l3
+
+
+def _is_share(x) -> bool:
+    return isinstance(x, (AShare, BShare))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AShare:
+    """Arithmetic [[.]]-share over Z_{2^ell}: data (4, *shape)."""
+
+    data: jax.Array
+
+    # -- pytree ----------------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    # -- views -----------------------------------------------------------
+    @property
+    def shape(self):
+        return self.data.shape[1:]
+
+    @property
+    def ndim(self):
+        return self.data.ndim - 1
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def m(self) -> jax.Array:
+        return self.data[0]
+
+    def lam(self, i: int) -> jax.Array:
+        assert 1 <= i <= 3
+        return self.data[i]
+
+    @property
+    def lam_sum(self) -> jax.Array:
+        return self.data[1] + self.data[2] + self.data[3]
+
+    def reveal(self) -> jax.Array:
+        """Joint-simulation plaintext (Pi_Rec without the network)."""
+        return self.data[0] - self.lam_sum
+
+    # -- linear algebra (local ops, zero communication) --------------------
+    def __add__(self, other):
+        if isinstance(other, AShare):
+            return AShare(self.data + other.data)
+        return AShare(self.data.at[0].add(jnp.asarray(other, self.dtype)))
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        if isinstance(other, AShare):
+            return AShare(self.data - other.data)
+        return AShare(self.data.at[0].add(-jnp.asarray(other, self.dtype)))
+
+    def __rsub__(self, other):
+        return (-self) + other
+
+    def __neg__(self):
+        return AShare(-self.data)
+
+    def mul_public(self, c) -> "AShare":
+        """Multiply by a public *integer* (ring) constant/array."""
+        c = jnp.asarray(c, self.dtype)
+        return AShare(self.data * c[None] if c.ndim else self.data * c)
+
+    def matmul_public(self, w: jax.Array, right: bool = True) -> "AShare":
+        """[[x]] @ W_pub (or W_pub @ [[x]] if right=False); local."""
+        w = jnp.asarray(w, self.dtype)
+        if right:
+            f = lambda d: jax.lax.dot_general(
+                d, w, (((d.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=self.dtype)
+        else:
+            f = lambda d: jax.lax.dot_general(
+                w, d, (((w.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=self.dtype)
+        return AShare(jax.vmap(f)(self.data))
+
+    # -- shape ops ---------------------------------------------------------
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return AShare(self.data.reshape((NCOMP,) + tuple(shape)))
+
+    def transpose(self, axes=None):
+        if axes is None:
+            axes = tuple(reversed(range(self.ndim)))
+        return AShare(self.data.transpose((0,) + tuple(a + 1 for a in axes)))
+
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return AShare(self.data[(slice(None),) + idx])
+
+    def astype_ring(self, ring: Ring):
+        return AShare(self.data.astype(ring.dtype))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BShare:
+    """Boolean [[.]]^B-share: XOR-sharing, bit-sliced in ring words.
+
+    ``nbits`` = number of valid bit positions (ell for full words, 1 for a
+    single bit stored at bit 0).  Communication tallies use nbits, so a
+    one-bit share costs 1 bit, not ell.
+    """
+
+    data: jax.Array
+    nbits: int
+
+    def tree_flatten(self):
+        return (self.data,), self.nbits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.data.shape[1:]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def m(self) -> jax.Array:
+        return self.data[0]
+
+    def reveal(self) -> jax.Array:
+        return self.data[0] ^ self.data[1] ^ self.data[2] ^ self.data[3]
+
+    # XOR is the boolean world's addition: local.
+    def __xor__(self, other):
+        if isinstance(other, BShare):
+            return BShare(self.data ^ other.data,
+                          max(self.nbits, other.nbits))
+        return BShare(self.data.at[0].set(
+            self.data[0] ^ jnp.asarray(other, self.dtype)), self.nbits)
+
+    __rxor__ = __xor__
+
+    def __invert__(self):
+        """NOT = XOR with public all-ones (over valid bits)."""
+        ones = (1 << self.nbits) - 1
+        return self ^ jnp.asarray(ones, self.dtype).astype(self.dtype)
+
+    def and_public(self, mask) -> "BShare":
+        return BShare(self.data & jnp.asarray(mask, self.dtype), self.nbits)
+
+    def shift_left(self, k: int) -> "BShare":
+        return BShare(self.data << k, self.nbits)
+
+    def shift_right(self, k: int) -> "BShare":
+        return BShare(self.data >> k, self.nbits)
+
+    def bit(self, k: int) -> "BShare":
+        """Extract bit plane k as a 1-bit share."""
+        return BShare((self.data >> k) & jnp.asarray(1, self.dtype), 1)
+
+    def __getitem__(self, idx):
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        return BShare(self.data[(slice(None),) + idx], self.nbits)
+
+
+def zeros_like_share(x: AShare) -> AShare:
+    return AShare(jnp.zeros_like(x.data))
+
+
+def public_to_ashare(v: jax.Array, ring: Ring) -> AShare:
+    """Non-interactive sharing of a value all of P1,P2,P3 know (paper IV-B a):
+    lambda = 0, m = v.  Zero communication."""
+    v = jnp.asarray(v, ring.dtype)
+    z = jnp.zeros((3,) + v.shape, ring.dtype)
+    return AShare(jnp.concatenate([v[None], z], axis=0))
+
+
+def public_to_bshare(v: jax.Array, ring: Ring, nbits: int | None = None) -> BShare:
+    v = jnp.asarray(v, ring.dtype)
+    z = jnp.zeros((3,) + v.shape, ring.dtype)
+    return BShare(jnp.concatenate([v[None], z], axis=0),
+                  ring.ell if nbits is None else nbits)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the protocol hot spots (DESIGN.md section 3):
+
+  limb_matmul       ring matmul (Z_2^32/64) on the MXU via 4-bit limbs
+  mpc_matmul_fused  all online-phase products of Pi_MatMulTr in one pass
+  ppa_msb           fused local math of a boolean PPA/AND level
+  prf_mask          counter-mode lambda-mask generation (keyed-lambda)
+
+ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the
+pure-jnp oracles every kernel is asserted against (tests/test_kernels.py).
+"""

@@ -1,0 +1,102 @@
+"""Ring matmul (Z_2^32 / Z_2^64) on the TPU MXU via 4-bit limb decomposition.
+
+TPU MXUs multiply bf16/f32/int8, not u32/u64 -- XLA emulates wide-integer
+dot products on the VPU, orders of magnitude under the matmul roofline.
+This kernel adapts the CryptGPU/Piranha float-limb idea to the MXU
+(DESIGN.md section 3):
+
+  * split each ring element into L 4-bit limbs (L = 8 for u32, 16 for u64)
+    embedded exactly in f32;
+  * ONE MXU matmul of the limb-stacked operands
+        A' (L*bm, bk) @ B' (bk, L*bn) -> P (L*bm, L*bn)
+    computes every limb-pair product A_i B_j at full MXU rate.  Exactness:
+    products < 2^8 and bk <= 2^16 keep every accumulation inside f32's
+    24-bit exact-integer window;
+  * the VPU combine folds P blocks back mod 2^ell:
+        C = sum_{i+j=s} P_{ij} << 4s
+    (s >= ell/4 wraps away).  The combine is O(bm*bn*L) integer ops --
+    negligible next to the O(bm*bn*bk*L^2) MXU flops; on TPU the u64 adds
+    lower to 2xu32 pairs, still VPU-cheap.
+
+Grid: (M/bm, N/bn, K/bk) with revisiting accumulation on the k axis.
+VMEM at the default bm=bn=64, bk=256, u64: A' 1 MB + B' 1 MB + P 4 MB +
+acc 32 KB -- comfortably inside a v5e core's 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _limbs(ell: int) -> int:
+    return ell // 4
+
+
+def _limb_kernel(a_ref, b_ref, out_ref, *, ell: int, bk_steps: int):
+    """One (bm, bn) output tile; k-grid accumulates into out_ref."""
+    L = _limbs(ell)
+    dtype = out_ref.dtype
+    a = a_ref[...]                       # (bm, bk) ring ints
+    b = b_ref[...]                       # (bk, bn)
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    # ---- limb expansion (VPU): stack L 4-bit limbs ------------------------
+    mask = jnp.asarray(15, a.dtype)
+    a_l = [((a >> (4 * i)) & mask).astype(jnp.float32) for i in range(L)]
+    b_l = [((b >> (4 * j)) & mask).astype(jnp.float32) for j in range(L)]
+    a_stack = jnp.concatenate(a_l, axis=0)           # (L*bm, bk) f32
+    b_stack = jnp.concatenate(b_l, axis=1)           # (bk, L*bn) f32
+
+    # ---- one MXU matmul for all limb pairs --------------------------------
+    p = jax.lax.dot_general(a_stack, b_stack, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # ---- combine mod 2^ell (VPU) ------------------------------------------
+    acc = jnp.zeros((bm, bn), dtype)
+    for i in range(L):
+        for j in range(L):
+            s = i + j
+            if 4 * s >= ell:
+                continue                              # wraps away mod 2^ell
+            blk = p[i * bm:(i + 1) * bm, j * bn:(j + 1) * bn]
+            acc = acc + (blk.astype(dtype) << (4 * s))
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(pl.program_id(2) != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def limb_matmul(a: jax.Array, b: jax.Array, bm: int = 64, bn: int = 64,
+                bk: int = 256, interpret: bool = True) -> jax.Array:
+    """C = A @ B mod 2^ell for u32/u64 operands.  interpret=True validates
+    the kernel body on CPU; on TPU set interpret=False."""
+    assert a.dtype == b.dtype and a.dtype in (jnp.uint32, jnp.uint64)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    ell = a.dtype.itemsize * 8
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    assert bk <= 1 << 16, "f32 exactness window"
+    grid = (M // bm, N // bn, K // bk)
+    kernel = functools.partial(_limb_kernel, ell=ell, bk_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )(a, b)

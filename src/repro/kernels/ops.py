@@ -1,0 +1,44 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container every kernel runs with interpret=True (the body
+executes as Python/XLA ops -- correctness-exact).  On TPU, pass
+interpret=False (or set TRIDENT_KERNELS_COMPILED=1).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .limb_matmul import limb_matmul as _limb_matmul
+from .mpc_matmul_fused import mpc_matmul_fused as _mpc_matmul_fused
+from .ppa_msb import and_level as _and_level, ppa_msb as _ppa_msb
+from .prf_mask import prf_mask as _prf_mask
+
+INTERPRET = os.environ.get("TRIDENT_KERNELS_COMPILED", "") != "1"
+
+
+def ring_matmul(a, b, **kw):
+    """A @ B mod 2^ell on the MXU (4-bit limb decomposition)."""
+    return _limb_matmul(a, b, interpret=INTERPRET, **kw)
+
+
+def mpc_matmul_online(mx, lx, my, ly):
+    """Fused online-phase products (mm, cross, gamma)."""
+    return _mpc_matmul_fused(mx, lx, my, ly, interpret=INTERPRET)
+
+
+def bool_and_level(x, y, lamz, zero, **kw):
+    """Fused local math of one boolean AND level on share stacks."""
+    return _and_level(x, y, lamz, zero, interpret=INTERPRET, **kw)
+
+
+def msb_of_sum_words(x, y, lamz_levels, zero_levels):
+    """msb(x + y) per word via the fused Sklansky driver."""
+    return _ppa_msb(x, y, lamz_levels, zero_levels, interpret=INTERPRET)
+
+
+def lambda_masks(key, n, counter0=0):
+    """Keyed-lambda mask regeneration (squares counter PRF)."""
+    return _prf_mask(key, n, counter0=counter0, interpret=INTERPRET)

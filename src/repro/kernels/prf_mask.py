@@ -1,0 +1,61 @@
+"""Counter-mode PRF lambda-mask generation in-kernel ("keyed-lambda").
+
+The keyed-lambda representation (DESIGN.md section 5) stores only m_W for
+serving weights and regenerates lambda from (key, counter) at the point of
+use, trading HBM bytes for VPU flops.  This kernel generates a tile of
+ring-uniform masks from a 64-bit key and a counter base using the
+`squares` counter RNG (Widynski 2020) -- 4 rounds of mul/add/rotate, pure
+VPU, no table state.  It stands in for the paper's fixed-key AES-CTR F_k
+(F's only protocol-relevant property is pseudorandomness; documented).
+
+Matches ref.prf_mask_ref bit-exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _rot32(x):
+    return (x >> 32) | (x << 32)
+
+
+def _squares_kernel(key_ref, out_ref, *, counter0: int, bn: int):
+    i = pl.program_id(0).astype(jnp.uint64)
+    key = key_ref[0]
+    base = (jnp.asarray(counter0, jnp.uint64) + i * jnp.uint64(bn)
+            + jax.lax.broadcasted_iota(jnp.uint64, (bn,), 0))
+    x = base * key
+    y = x
+    z = y + key
+    x = x * x + y
+    x = _rot32(x)
+    x = x * x + z
+    x = _rot32(x)
+    x = x * x + y
+    x = _rot32(x)
+    x = x * x + z
+    t = x
+    x = _rot32(x)
+    out_ref[...] = t ^ ((x * x + y) >> 32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "counter0", "bn", "interpret"))
+def prf_mask(key: jax.Array, n: int, counter0: int = 0, bn: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """key: (1,) uint64 -> (n,) uint64 pseudorandom ring elements."""
+    bn = min(bn, n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_squares_kernel, counter0=counter0, bn=bn),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        interpret=interpret,
+    )(key)

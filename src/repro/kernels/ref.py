@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def limb_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Ring matmul mod 2^ell in the native integer dtype."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=a.dtype)
+
+
+def mpc_matmul_fused_ref(mx, lx, my, ly):
+    """Online-phase local terms of Pi_MatMulTr for the joint simulation
+    (component-collapsed): returns (mm, cross) with
+        mm    = m_x @ m_y
+        cross = lam_x_sum @ m_y + m_x @ lam_y_sum
+    lx, ly are the (3, ...) lambda stacks."""
+    dt = mx.dtype
+    lxs = (lx[0] + lx[1] + lx[2]).astype(dt)
+    lys = (ly[0] + ly[1] + ly[2]).astype(dt)
+    mm = limb_matmul_ref(mx, my)
+    cross = limb_matmul_ref(lxs, my) + limb_matmul_ref(mx, lys)
+    return mm, cross.astype(dt)
+
+
+def ppa_msb_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """msb(x + y) over the ring (bit-sliced oracle)."""
+    s = x + y
+    ell = x.dtype.itemsize * 8
+    return (s >> (ell - 1)) & jnp.asarray(1, x.dtype)
+
+
+def prf_mask_ref(key_lo: jax.Array, key_hi: jax.Array, counter0: int,
+                 shape) -> jax.Array:
+    """Counter-mode squares-like PRF oracle (matches the kernel's rounds).
+
+    One 64-bit output per counter via 4 rounds of the `squares` RNG
+    (Widynski 2020): x = (x*x + key) rotated; cheap add/xor/rot -- the same
+    structure the kernel executes on the VPU, stated over uint64."""
+    n = int(np.prod(shape))
+    ctr = jnp.arange(counter0, counter0 + n, dtype=jnp.uint64)
+    key = (key_hi.astype(jnp.uint64) << 32) | key_lo.astype(jnp.uint64)
+    x = ctr * key
+    y = x
+    z = y + key
+    # round 1..4
+    x = x * x + y
+    x = (x >> 32) | (x << 32)
+    x = x * x + z
+    x = (x >> 32) | (x << 32)
+    x = x * x + y
+    x = (x >> 32) | (x << 32)
+    x = x * x + z
+    t = x
+    x = (x >> 32) | (x << 32)
+    out = t ^ ((x * x + y) >> 32)
+    return out.reshape(shape)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every jax import (jax locks the device count on init).
+
+"""Multi-pod dry-run: .lower().compile() for every (arch x shape x mesh).
+
+Proves the distribution config is coherent without hardware: the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh must both lower and compile
+for all 40 (architecture x input-shape) cells.  Reports per-device memory
+(memory_analysis), HLO flops/bytes (cost_analysis), the traced MPC
+communication tally, and collective bytes parsed from the optimized HLO
+-- the roofline inputs (launch/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--collapse] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .mesh import make_production_mesh, data_axes
+from . import specs as SP
+from . import steps as ST
+from .. import configs as CFGS
+from ..core.ring import RING64
+from ..nn import model as M
+
+
+def _batch_rescale(cfg, shape_name, global_batch):
+    """Microbatching knob per shape (activation memory control)."""
+    if shape_name == "train_4k":
+        return dataclasses_replace(cfg, microbatch=0)
+    return cfg
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             collapse: bool = False, trident: bool = True,
+             verbose: bool = True, fsdp: bool | None = None,
+             ring=None):
+    """Lower + compile one (arch, shape, mesh) cell.  Returns the metrics
+    dict (and prints memory/cost analysis when verbose).
+    ring: override the ring (e.g. RING32 for the serving-memory perf
+    iteration)."""
+    from ..core.ring import RING32
+    mod = CFGS.get(arch)
+    cfg = mod.CONFIG
+    seq, batch, kind = CFGS.SHAPES[shape_name]
+    long_ctx = kind == "long_decode"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    ring = ring or RING64
+
+    if fsdp is None:
+        # big archs need weights sharded over the data axis too
+        from .roofline import active_params
+        fsdp = active_params(cfg) >= 5e9
+
+    params = SP.param_specs(cfg, ring, trident=trident)
+    p_shard = SP.param_shardings(cfg, mesh, trident=trident, fsdp=fsdp)
+    args, a_shard = SP.input_specs(cfg, shape_name, mesh=mesh, ring=ring,
+                                   trident=trident)
+
+    from ..core.context import make_context
+    from ..nn.engine import TridentEngine
+
+    fe = args.get("frontend_embs")
+    enc = args.get("enc_inputs")
+    fe_s = a_shard.get("frontend_embs")
+    enc_s = a_shard.get("enc_inputs")
+    if kind == "train":
+        step = ST.make_train_step(cfg, ring=ring, trident=trident,
+                                  collapse=collapse)
+        lower_args = (params, args["ids"], args["labels"], fe, enc)
+        shardings = (p_shard, a_shard["ids"], a_shard["labels"], fe_s,
+                     enc_s)
+    elif kind == "prefill":
+        step = ST.make_prefill_step(cfg, ring=ring, trident=trident,
+                                    collapse=collapse)
+        lower_args = (params, args["ids"], fe, enc)
+        shardings = (p_shard, a_shard["ids"], fe_s, enc_s)
+    else:
+        step = ST.make_decode_step(cfg, ring=ring, trident=trident,
+                                   collapse=collapse, long_ctx=long_ctx,
+                                   pos=seq)
+        lower_args = (params, args["ids"], args["caches"])
+        shardings = (p_shard, a_shard["ids"], a_shard["caches"])
+    fn = jax.jit(step, in_shardings=shardings)
+
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(*lower_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+
+    from .roofline import collective_bytes, roofline_terms
+    coll = collective_bytes(compiled)
+    metrics = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(n_dev),
+        "ring": ring.ell,
+        "collapse": collapse, "fsdp": bool(fsdp),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+        "mem": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes",
+                                           None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+    }
+    metrics.update(roofline_terms(metrics, cfg, batch, seq, kind))
+    if verbose:
+        print(f"[{arch} x {shape_name} x {metrics['mesh']}] "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print("  memory_analysis:", metrics["mem"])
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (metrics["flops"], metrics["bytes_accessed"]))
+        print("  collective_bytes=%.3e" % coll)
+        for k in ("t_compute", "t_memory", "t_collective", "bottleneck",
+                  "model_flops", "useful_ratio"):
+            print(f"  {k} = {metrics[k]}")
+    return metrics
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--collapse", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.all:
+        cells = [(a, s) for a, s, r in CFGS.cells() if r == "run"]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+    for arch, shape in cells:
+        try:
+            m = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         collapse=args.collapse)
+        except Exception as e:  # noqa: BLE001 -- sweep must report failures
+            m = {"arch": arch, "shape": shape, "error": repr(e)[:500]}
+            print(f"[{arch} x {shape}] FAILED: {e!r}", file=sys.stderr)
+        results.append(m)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: compiles the three chosen cells under each
+iteration's configuration and records the roofline terms before/after.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --out perf_results.json
+"""
+import argparse
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="perf_results.json")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from .dryrun import run_cell
+    from ..core.ring import RING32, RING64
+
+    ITERS = [
+        # --- Cell A: qwen3-1.7b x train_4k (paper's technique end-to-end)
+        ("A0_faithful", dict(arch="qwen3_1_7b", shape_name="train_4k",
+                             collapse=False)),
+        ("A1_collapse", dict(arch="qwen3_1_7b", shape_name="train_4k",
+                             collapse=True)),
+        # --- Cell B: qwen3-1.7b x decode_32k (memory-bound serving)
+        ("B0_ring64", dict(arch="qwen3_1_7b", shape_name="decode_32k",
+                           collapse=True)),
+        ("B1_ring32", dict(arch="qwen3_1_7b", shape_name="decode_32k",
+                           collapse=True, ring=RING32)),
+        # --- Cell C: minitron-8b x train_4k (collective/memory trade)
+        ("C0_fsdp", dict(arch="minitron_8b", shape_name="train_4k",
+                         collapse=True, fsdp=True)),
+        ("C1_nofsdp", dict(arch="minitron_8b", shape_name="train_4k",
+                           collapse=True, fsdp=False)),
+    ]
+
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    for name, kw in ITERS:
+        if args.only and args.only not in name:
+            continue
+        if name in results:
+            continue
+        t0 = time.time()
+        try:
+            m = run_cell(verbose=False, **kw)
+            m["iter"] = name
+            print(f"[hillclimb] {name}: compile {m['compile_s']}s "
+                  f"flops={m['flops']:.3e} bytes={m['bytes_accessed']:.3e} "
+                  f"coll={m['collective_bytes']:.3e} "
+                  f"mem={m['mem']}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            m = {"iter": name, "error": repr(e)[:400]}
+            print(f"[hillclimb] {name} FAILED: {e!r}"[:200], flush=True)
+        results[name] = m
+        json.dump(results, open(args.out, "w"), indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction (the multi-pod dry-run target).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (jax locks the device count on first backend init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that carry the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_axis(mesh) -> str:
+    return "model"

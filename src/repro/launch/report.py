@@ -1,0 +1,74 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+import json
+import sys
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    if x is None or x < 0:
+        return "-"
+    for unit, k in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= k:
+            return f"{x/k:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def render(results, mesh_filter="16x16"):
+    rows = []
+    hdr = ("| arch | shape | t_compute(limb) | t_memory | t_collective | "
+           "bottleneck | useful | HLO flops | HLO bytes | coll bytes | "
+           "arg+tmp mem/dev | compile |")
+    sep = "|" + "---|" * 12
+    rows.append(hdr)
+    rows.append(sep)
+    for r in results:
+        if r.get("mesh") != mesh_filter:
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                        f"{r['error'][:60]} | | | | | | | | | |")
+            continue
+        mem = r.get("mem", {})
+        argb = (mem.get("argument_size_bytes") or 0) + \
+            (mem.get("temp_size_bytes") or 0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{fmt_t(r.get('t_compute_limb'))} | {fmt_t(r.get('t_memory'))} |"
+            f" {fmt_t(r.get('t_collective'))} | "
+            f"{r.get('bottleneck', '-').replace('t_', '')} | "
+            f"{r.get('useful_ratio', 0):.3f} | {r.get('flops', 0):.2e} | "
+            f"{fmt_b(r.get('bytes_accessed'))} | "
+            f"{fmt_b(r.get('collective_bytes'))} | {fmt_b(argb)} | "
+            f"{r.get('compile_s', '-')}s |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    results = json.load(open(path))
+    done = [r for r in results if "error" not in r]
+    failed = [r for r in results if "error" in r]
+    print(f"## Dry-run status: {len(done)} cells compiled, "
+          f"{len(failed)} failed\n")
+    print("### Single-pod 16x16 (roofline basis)\n")
+    print(render(results, "16x16"))
+    print("\n### Multi-pod 2x16x16\n")
+    print(render(results, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

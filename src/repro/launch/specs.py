@@ -1,0 +1,397 @@
+"""Abstract parameter / input specs + sharding rules for the dry-run.
+
+param_specs mirrors nn.model.init_params + params_to_engine structurally
+but emits jax.ShapeDtypeStruct leaves -- no allocation, so the 235B-param
+configs lower without touching host memory.  Verified against the real
+init on smoke configs (tests/test_dryrun_small.py).
+
+Sharding rules (DESIGN.md section 5):
+  * batch dims -> ("pod","data");  model axis carries TP (heads / d_ff)
+    and EP (experts);  the share-component axis is NEVER sharded;
+  * fsdp=True additionally shards the d_model axis of the big weight
+    matrices over "data" (XLA inserts the all-gather-on-use inside the
+    layer scan -- FSDP semantics);
+  * KV caches shard batch over data and heads over model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..nn.model import ModelConfig
+from ..nn import model as M
+from ..core.ring import Ring, RING64
+from ..core.shares import AShare
+
+
+# ===========================================================================
+# Abstract parameters
+# ===========================================================================
+def _layer_shapes(cfg: ModelConfig, kind: str) -> dict:
+    d, H, Hk, dh, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh,
+                       cfg.d_ff)
+    if kind in ("attn_mlp", "enc", "shared_attn"):
+        out = {"n1": {"g": (d,)},
+               "attn": _attn_shapes(cfg),
+               "n2": {"g": (d,)},
+               "mlp": _mlp_shapes(cfg)}
+        return out
+    if kind == "attn_moe":
+        E = cfg.n_experts
+        moe = {"router": (d, E), "e_up": (E, d, f), "e_down": (E, f, d)}
+        if cfg.act in ("swiglu", "sigmoid_glu"):
+            moe["e_gate"] = (E, d, f)
+        return {"n1": {"g": (d,)}, "attn": _attn_shapes(cfg),
+                "n2": {"g": (d,)}, "moe": moe}
+    if kind == "retention":
+        return {"n1": {"g": (d,)}, "ret": _ret_shapes(cfg)}
+    if kind == "ret_slstm_pair":
+        return {"n1": {"g": (d,)}, "ret": _ret_shapes(cfg),
+                "n2": {"g": (d,)},
+                "sl": {"wi": (d, d), "wz": (d, d), "wo": (d, d),
+                       "wout": (d, d)}}
+    if kind == "xattn_mlp":
+        return {"n1": {"g": (d,)}, "attn": _attn_shapes(cfg),
+                "nx": {"g": (d,)}, "xattn": _attn_shapes(cfg),
+                "n2": {"g": (d,)}, "mlp": _mlp_shapes(cfg)}
+    raise ValueError(kind)
+
+
+def _attn_shapes(cfg):
+    d, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    s = {"wq": (d, H * dh), "wk": (d, Hk * dh), "wv": (d, Hk * dh),
+         "wo": (H * dh, d)}
+    if cfg.qk_norm:
+        s["qnorm_g"] = (dh,)
+        s["knorm_g"] = (dh,)
+    return s
+
+
+def _mlp_shapes(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"w_up": (d, f), "w_down": (f, d)}
+    if cfg.act in ("swiglu", "sigmoid_glu"):
+        s["w_gate"] = (d, f)
+    return s
+
+
+def _ret_shapes(cfg):
+    r = cfg.ret_cfg()
+    d = cfg.d_model
+    return {"wq": (d, r.n_heads * r.d_k), "wk": (d, r.n_heads * r.d_k),
+            "wv": (d, r.n_heads * r.d_v), "wo": (r.n_heads * r.d_v, d),
+            "wg": (d, r.n_heads * r.d_v)}
+
+
+def param_specs(cfg: ModelConfig, ring: Ring = RING64, trident: bool = True,
+                ncomp: int = 4):
+    """Pytree of ShapeDtypeStruct leaves matching params_to_engine output.
+    ncomp=2 is the compressed [m, lam_sum] representation (section Perf)."""
+    dt = ring.dtype if trident else jnp.float32
+
+    def leaf(shape, stacked_count=None):
+        if trident:
+            if stacked_count is None:
+                full = (ncomp,) + tuple(shape)
+            else:
+                full = (stacked_count, ncomp) + tuple(shape)
+            return AShare(jax.ShapeDtypeStruct(full, dt))
+        if stacked_count is None:
+            return jax.ShapeDtypeStruct(tuple(shape), dt)
+        return jax.ShapeDtypeStruct((stacked_count,) + tuple(shape), dt)
+
+    def conv(tree, count=None):
+        return jax.tree_util.tree_map(lambda s: leaf(s, count), tree,
+                                      is_leaf=lambda s: isinstance(s, tuple))
+
+    out = {"embed": conv({"table": (cfg.vocab, cfg.d_model)}),
+           "final_norm": conv({"g": (cfg.d_model,)}),
+           "lm_head": conv({"w": (cfg.d_model, cfg.vocab)})}
+    segs = []
+    for kind, count in cfg.segments():
+        if kind == "shared_attn":
+            segs.append(None)
+            continue
+        segs.append(conv(_layer_shapes(cfg, kind), count))
+    out["segments"] = segs
+    if any(k == "shared_attn" for k, _ in cfg.segments()):
+        out["shared_attn"] = conv(_layer_shapes(cfg, "shared_attn"))
+    return out
+
+
+# ===========================================================================
+# Sharding rules
+# ===========================================================================
+def fit_sharding(mesh, shape, spec: P) -> NamedSharding:
+    """Drop spec entries whose dimension is not divisible by the mesh-axis
+    product (e.g. whisper's vocab 51865 on a 16-way model axis, batch-1
+    long-context decode) -- those dims stay replicated."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ent in zip(shape, entries):
+        if ent is None:
+            out.append(None)
+            continue
+        axes = ent if isinstance(ent, tuple) else (ent,)
+        k = 1
+        for a in axes:
+            k *= mesh.shape[a]
+        out.append(ent if dim % k == 0 else None)
+    return NamedSharding(mesh, P(*out))
+
+def _pspec(rule: tuple, trident: bool, stacked: bool, ncomp_axes=1):
+    """rule: PartitionSpec entries for the LOGICAL (unstacked, no-component)
+    shape; prepend None for layer-stack / component axes."""
+    pre = (None,) * ((1 if stacked else 0) + (ncomp_axes if trident else 0))
+    return P(*(pre + tuple(rule)))
+
+
+def param_shardings(cfg: ModelConfig, mesh, trident: bool = True,
+                    fsdp: bool = False, ncomp: int = 4):
+    """NamedSharding pytree matching param_specs (divisibility-fitted)."""
+    mdl = "model"
+    dat = "data" if fsdp else None
+    specs = param_specs(cfg, trident=trident, ncomp=ncomp)
+
+    def ns_for(rule, sds, stacked=False):
+        shape = sds.data.shape if hasattr(sds, "data") else sds.shape
+        return fit_sharding(mesh, shape, _pspec(rule, trident, stacked))
+
+    def seg_rules(kind):
+        if kind in ("attn_mlp", "enc", "shared_attn", "xattn_mlp"):
+            r = {"n1": {"g": (None,)}, "n2": {"g": (None,)},
+                 "attn": _attn_rules(cfg, mdl, dat),
+                 "mlp": _mlp_rules(cfg, mdl, dat)}
+            if kind == "xattn_mlp":
+                r["nx"] = {"g": (None,)}
+                r["xattn"] = _attn_rules(cfg, mdl, dat)
+            return r
+        if kind == "attn_moe":
+            moe = {"router": (dat, None),
+                   "e_up": (mdl, dat, None),      # EP: experts over model
+                   "e_down": (mdl, None, dat)}
+            if cfg.act in ("swiglu", "sigmoid_glu"):
+                moe["e_gate"] = (mdl, dat, None)
+            return {"n1": {"g": (None,)}, "n2": {"g": (None,)},
+                    "attn": _attn_rules(cfg, mdl, dat), "moe": moe}
+        if kind == "retention":
+            return {"n1": {"g": (None,)}, "ret": _ret_rules(mdl, dat)}
+        if kind == "ret_slstm_pair":
+            return {"n1": {"g": (None,)}, "ret": _ret_rules(mdl, dat),
+                    "n2": {"g": (None,)},
+                    "sl": {"wi": (dat, mdl), "wz": (dat, mdl),
+                           "wo": (dat, mdl), "wout": (mdl, dat)}}
+        raise ValueError(kind)
+
+    is_rule = lambda r: r is None or isinstance(r, tuple)
+    out = {"embed": {"table": ns_for((mdl, None),
+                                     specs["embed"]["table"])},
+           "final_norm": {"g": ns_for((None,), specs["final_norm"]["g"])},
+           "lm_head": {"w": ns_for((None, mdl), specs["lm_head"]["w"])}}
+    segs = []
+    for i, (kind, count) in enumerate(cfg.segments()):
+        if kind == "shared_attn":
+            segs.append(None)
+            continue
+        rules = seg_rules(kind)
+        segs.append(jax.tree_util.tree_map(
+            lambda r, s: ns_for(r, s, stacked=True), rules,
+            specs["segments"][i], is_leaf=is_rule))
+    out["segments"] = segs
+    if "shared_attn" in [k for k, _ in cfg.segments()]:
+        rules = seg_rules("shared_attn")
+        out["shared_attn"] = jax.tree_util.tree_map(
+            lambda r, s: ns_for(r, s, stacked=False), rules,
+            specs["shared_attn"], is_leaf=is_rule)
+    return out
+
+
+def _attn_rules(cfg, mdl, dat):
+    r = {"wq": (dat, mdl), "wk": (dat, mdl), "wv": (dat, mdl),
+         "wo": (mdl, dat)}
+    if cfg.qk_norm:
+        r["qnorm_g"] = (None,)
+        r["knorm_g"] = (None,)
+    return r
+
+
+def _mlp_rules(cfg, mdl, dat):
+    r = {"w_up": (dat, mdl), "w_down": (mdl, dat)}
+    if cfg.act in ("swiglu", "sigmoid_glu"):
+        r["w_gate"] = (dat, mdl)
+    return r
+
+
+def _ret_rules(mdl, dat):
+    return {"wq": (dat, mdl), "wk": (dat, mdl), "wv": (dat, mdl),
+            "wo": (mdl, dat), "wg": (dat, mdl)}
+
+
+# ===========================================================================
+# Inputs
+# ===========================================================================
+def input_specs(cfg: ModelConfig, shape_name: str, mesh=None,
+                ring: Ring = RING64, trident: bool = True):
+    """ShapeDtypeStruct stand-ins (+ shardings) for every model input of
+    the given workload shape.  Returns (args_dict, shardings_dict)."""
+    from ..configs import SHAPES
+    seq, batch, kind = SHAPES[shape_name]
+    dt = ring.dtype if trident else jnp.float32
+    bdims = None
+    if mesh is not None:
+        bax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        bdims = bax
+
+    def bshard(*rest, shape=None):
+        if mesh is None:
+            return None
+        if shape is None:
+            shape = (batch, seq)
+        return fit_sharding(mesh, shape, P(bdims, *rest))
+
+    args, shards = {}, {}
+    if kind == "train":
+        args["ids"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        args["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        shards["ids"] = bshard(None)
+        shards["labels"] = bshard(None)
+        if cfg.family == "vlm":
+            nf = cfg.frontend_tokens
+            args["frontend_embs"] = _share_sds(
+                (batch, nf, cfg.d_model), dt, trident)
+            shards["frontend_embs"] = _share_shard(
+                mesh, bdims, trident, (None, None),
+                (batch, nf, cfg.d_model))
+        if cfg.family == "encdec":
+            ne = cfg.frontend_tokens
+            args["enc_inputs"] = _share_sds(
+                (batch, ne, cfg.d_model), dt, trident)
+            shards["enc_inputs"] = _share_shard(
+                mesh, bdims, trident, (None, None),
+                (batch, ne, cfg.d_model))
+        return args, shards
+    if kind == "prefill":
+        args["ids"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        shards["ids"] = bshard(None)
+        if cfg.family == "vlm":
+            args["frontend_embs"] = _share_sds(
+                (batch, cfg.frontend_tokens, cfg.d_model), dt, trident)
+            shards["frontend_embs"] = _share_shard(
+                mesh, bdims, trident, (None, None),
+                (batch, cfg.frontend_tokens, cfg.d_model))
+        if cfg.family == "encdec":
+            args["enc_inputs"] = _share_sds(
+                (batch, cfg.frontend_tokens, cfg.d_model), dt, trident)
+            shards["enc_inputs"] = _share_shard(
+                mesh, bdims, trident, (None, None),
+                (batch, cfg.frontend_tokens, cfg.d_model))
+        return args, shards
+    # decode / long_decode: one token + caches of length seq
+    args["ids"] = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    shards["ids"] = bshard(None)
+    long_ctx = kind == "long_decode"
+    args["caches"] = decode_cache_specs(cfg, batch, seq, ring=ring,
+                                        trident=trident, long_ctx=long_ctx)
+    shards["caches"] = decode_cache_shardings(
+        cfg, mesh, bdims, trident=trident, batch=batch, seq=seq,
+        long_ctx=long_ctx) if mesh is not None else None
+    return args, shards
+
+
+def _share_sds(shape, dt, trident, ncomp=4):
+    if trident:
+        return AShare(jax.ShapeDtypeStruct((ncomp,) + tuple(shape), dt))
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _share_shard(mesh, bdims, trident, rest, shape):
+    if mesh is None:
+        return None
+    pre = (None,) if trident else ()
+    full = ((4,) if trident else ()) + tuple(shape)
+    return fit_sharding(mesh, full, P(*(pre + (bdims,) + tuple(rest))))
+
+
+def _effective_kv_len(cfg: ModelConfig, seq: int, long_ctx: bool) -> int:
+    w = cfg.long_window if long_ctx else cfg.window
+    return min(seq, w) if w else seq
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, seq: int,
+                       ring: Ring = RING64, trident: bool = True,
+                       long_ctx: bool = False):
+    """Cache pytree (scan layout, 2-component compressed) matching
+    serve_prefill's outputs, as ShapeDtypeStructs."""
+    dt = ring.dtype if trident else jnp.float32
+    Hk, dh = cfg.n_kv_heads, cfg.dh
+    rcfg = cfg.ret_cfg()
+
+    def sds_stacked(count, *shape):
+        if trident:
+            return jax.ShapeDtypeStruct((count, 2) + shape, dt)
+        return jax.ShapeDtypeStruct((count,) + shape, jnp.float32)
+
+    def sds(*shape):
+        if trident:
+            return jax.ShapeDtypeStruct((2,) + shape, dt)
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def kv_stacked(count, s_len):
+        return {"k": sds_stacked(count, batch, Hk, s_len, dh),
+                "v": sds_stacked(count, batch, Hk, s_len, dh)}
+
+    s_eff = _effective_kv_len(cfg, seq, long_ctx)
+    caches = []
+    for kind, count in cfg.segments():
+        if kind == "enc":
+            caches.append(_share_sds(
+                (batch, cfg.frontend_tokens, cfg.d_model), dt, trident))
+        elif kind == "shared_attn":
+            w = min(seq, cfg.long_window) if long_ctx else seq
+            caches.append({"k": sds(batch, Hk, w, dh),
+                           "v": sds(batch, Hk, w, dh)})
+        elif kind in ("attn_mlp", "attn_moe"):
+            caches.append(kv_stacked(count, s_eff))
+        elif kind == "retention":
+            caches.append({"s": sds_stacked(count, batch, rcfg.n_heads,
+                                            rcfg.d_k, rcfg.d_v)})
+        elif kind == "ret_slstm_pair":
+            dsl = cfg.d_model // cfg.n_heads
+            caches.append({
+                "s1": sds_stacked(count, batch, rcfg.n_heads, rcfg.d_k,
+                                  rcfg.d_v),
+                "s2": sds_stacked(count, batch, cfg.n_heads, 1, dsl)})
+        elif kind == "xattn_mlp":
+            c = kv_stacked(count, s_eff)
+            c["enc_kv"] = kv_stacked(count, cfg.frontend_tokens)
+            caches.append(c)
+        else:
+            raise ValueError(kind)
+    return caches
+
+
+def decode_cache_shardings(cfg: ModelConfig, mesh, bdims,
+                           trident: bool = True, batch: int = 2,
+                           seq: int = 4, long_ctx: bool = False):
+    """Shard every cache leaf's batch axis over the data axes; everything
+    else replicated (Hk is typically < model parallelism)."""
+    specs = decode_cache_specs(cfg, batch, seq, trident=trident,
+                               long_ctx=long_ctx)
+
+    def ns_leaf(x):
+        shape = x.data.shape if hasattr(x, "data") else x.shape
+        spec = [None] * len(shape)
+        for i, s in enumerate(shape):
+            if s == batch:
+                spec[i] = bdims
+                break
+        return fit_sharding(mesh, shape, P(*spec))
+
+    def walk(node):
+        return jax.tree_util.tree_map(
+            lambda x: ns_leaf(x), node,
+            is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, AShare)))
+
+    return [walk(c) for c in specs]

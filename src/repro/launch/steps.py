@@ -1,0 +1,75 @@
+"""Step-function builders shared by the launcher, dry-run and tests.
+
+Each builder returns a pure function suitable for jax.jit: it constructs a
+fresh TridentContext at trace time (PRF counters allocate deterministically
+during tracing, so retrace == replay) and returns the abort flag as an
+output so malicious-check results live inside the compiled program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.context import make_context
+from ..core.ring import Ring, RING64
+from ..nn import model as M
+from ..nn.engine import TridentEngine, PlainEngine
+
+
+def make_train_step(cfg: M.ModelConfig, ring: Ring = RING64,
+                    trident: bool = True, lr: float = 2.0 ** -6,
+                    seed: int = 0, collapse: bool = False,
+                    nonlinear: str = "garbled"):
+    def train_step(params, ids, labels, frontend_embs=None,
+                   enc_inputs=None):
+        if trident:
+            ctx = make_context(ring, seed=seed, collapse=collapse)
+            eng = TridentEngine(ctx, nonlinear=nonlinear)
+        else:
+            eng = PlainEngine()
+        new_params, loss, _ = M.train_step(
+            eng, cfg, params, ids, labels, lr=lr,
+            frontend_embs=frontend_embs, enc_inputs=enc_inputs)
+        abort = ctx.abort_flag() if trident else jnp.asarray(False)
+        return new_params, loss, abort
+
+    return train_step
+
+
+def make_prefill_step(cfg: M.ModelConfig, ring: Ring = RING64,
+                      trident: bool = True, seed: int = 0,
+                      collapse: bool = False, long_ctx: bool = False,
+                      nonlinear: str = "garbled"):
+    def prefill_step(params, ids, frontend_embs=None, enc_inputs=None):
+        if trident:
+            ctx = make_context(ring, seed=seed, collapse=collapse)
+            eng = TridentEngine(ctx, nonlinear=nonlinear)
+        else:
+            eng = PlainEngine()
+        logits, caches = M.serve_prefill(
+            eng, cfg, params, ids, frontend_embs=frontend_embs,
+            enc_inputs=enc_inputs, long_ctx=long_ctx)
+        abort = ctx.abort_flag() if trident else jnp.asarray(False)
+        return logits, caches, abort
+
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig, ring: Ring = RING64,
+                     trident: bool = True, seed: int = 0,
+                     collapse: bool = False, long_ctx: bool = False,
+                     pos: int = 0, nonlinear: str = "garbled"):
+    def decode_step(params, ids_last, caches):
+        if trident:
+            ctx = make_context(ring, seed=seed, collapse=collapse)
+            eng = TridentEngine(ctx, nonlinear=nonlinear)
+        else:
+            eng = PlainEngine()
+        logits, new_caches = M.serve_decode(
+            eng, cfg, params, ids_last, caches, pos=pos, long_ctx=long_ctx)
+        abort = ctx.abort_flag() if trident else jnp.asarray(False)
+        return logits, new_caches, abort
+
+    return decode_step

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Dry-run sweep driver: all cells, cheapest first, single- then multi-pod
+per cell, with incremental JSON output so partial progress is usable.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results.json \
+        [--collapse] [--max-minutes 120]
+"""
+import argparse
+import json
+import sys
+import time
+
+ARCH_ORDER = [
+    "whisper_tiny", "xlstm_350m", "qwen3_1_7b", "phi_3_vision_4_2b",
+    "deepseek_7b", "minitron_8b", "zamba2_7b", "mixtral_8x7b",
+    "nemotron_4_15b", "qwen3_moe_235b_a22b",
+]
+SHAPE_ORDER = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def cell_list():
+    from .. import configs as CFGS
+    cells = []
+    for shape in SHAPE_ORDER:
+        for arch in ARCH_ORDER:
+            if shape == "long_500k" and arch not in CFGS.LONG_CONTEXT_ARCHS:
+                continue
+            cells.append((arch, shape))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--collapse", action="store_true")
+    ap.add_argument("--max-minutes", type=float, default=1e9)
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--start", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from .dryrun import run_cell
+    t_start = time.time()
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r.get("arch"), r.get("shape"), r.get("mesh")) for r in results}
+
+    meshes = []
+    if "single" in args.meshes:
+        meshes.append(False)
+    if "multi" in args.meshes:
+        meshes.append(True)
+
+    for arch, shape in cell_list()[args.start:]:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (arch, shape, mesh_name) in done:
+                continue
+            if (time.time() - t_start) / 60 > args.max_minutes:
+                print("[sweep] time budget reached", file=sys.stderr)
+                json.dump(results, open(args.out, "w"), indent=1)
+                return results
+            t0 = time.time()
+            try:
+                m = run_cell(arch, shape, multi_pod=multi,
+                             collapse=args.collapse, verbose=False)
+                print(f"[sweep] OK  {arch} x {shape} x {mesh_name} "
+                      f"({time.time()-t0:.0f}s) bottleneck="
+                      f"{m['bottleneck']}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                m = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                     "error": repr(e)[:400]}
+                print(f"[sweep] ERR {arch} x {shape} x {mesh_name}: "
+                      f"{e!r}"[:200], flush=True)
+            results.append(m)
+            json.dump(results, open(args.out, "w"), indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,360 @@
+"""MLP / MoE / recurrent blocks with manual backprop over the Engine.
+
+MoE privacy modes (DESIGN.md section 4):
+  * public  -- router top-k indices are declassified (standard PPML routing
+    leakage tradeoff); dispatch/combine become local gathers on shares and
+    experts run on their own tokens only (EP-shardable).  Default.
+  * dense   -- no routing leak: soft routing with full softmax gates, every
+    expert processes every token (E/k x compute, the honest-MPC cost).
+
+Recurrent block (zamba2 Mamba2 / xlstm mLSTM-sLSTM): MPC adaptation uses a
+*public per-head decay* (RetNet-style) with *secret* input/output sigmoid
+gates -- input-dependent forget gates would require per-token reciprocals of
+cumulative products, which underflow fixed point (DESIGN.md
+section Arch-applicability).  Chunked evaluation: intra-chunk = decay-masked
+matmuls (Pi_MatMulTr), inter-chunk = first-order state recurrence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, TridentEngine
+from .layers import linear_init, linear_fwd, linear_bwd
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP: swiglu (llama/qwen), relu2 (nemotron), relu, geglu-as-swiglu.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "swiglu"      # swiglu | relu | relu2 | sigmoid_glu
+
+
+def mlp_init(rng, cfg: MLPConfig):
+    p = {"w_up": linear_init(rng, cfg.d_model, cfg.d_ff)["w"],
+         "w_down": linear_init(rng, cfg.d_ff, cfg.d_model)["w"]}
+    if cfg.act in ("swiglu", "sigmoid_glu"):
+        p["w_gate"] = linear_init(rng, cfg.d_model, cfg.d_ff)["w"]
+    return p
+
+
+def mlp_fwd(eng: Engine, params, cfg: MLPConfig, x):
+    up, c_up = linear_fwd(eng, {"w": params["w_up"]}, x)
+    if cfg.act == "swiglu":
+        gate, c_gate = linear_fwd(eng, {"w": params["w_gate"]}, x)
+        a, c_act = eng.silu(gate)
+        h = eng.mul(a, up)
+        cache_act = (c_gate, c_act, a, up)
+    elif cfg.act == "sigmoid_glu":
+        gate, c_gate = linear_fwd(eng, {"w": params["w_gate"]}, x)
+        a, c_act = eng.sigmoid(gate)
+        h = eng.mul(a, up)
+        cache_act = (c_gate, c_act, a, up)
+    elif cfg.act == "relu2":
+        r, bit = eng.relu(up)
+        h = eng.mul(r, r)
+        cache_act = (bit, r)
+    else:  # relu
+        h, bit = eng.relu(up)
+        cache_act = (bit,)
+    y, c_down = linear_fwd(eng, {"w": params["w_down"]}, h)
+    return y, (c_up, cache_act, c_down)
+
+
+def mlp_bwd(eng: Engine, params, cfg: MLPConfig, cache, dy):
+    c_up, cache_act, c_down = cache
+    dh, g_down = linear_bwd(eng, {"w": params["w_down"]}, c_down, dy)
+    grads = {"w_down": g_down["w"]}
+    if cfg.act in ("swiglu", "sigmoid_glu"):
+        c_gate, c_act, a, up = cache_act
+        da = eng.mul(dh, up)
+        dup = eng.mul(dh, a)
+        if cfg.act == "swiglu":
+            dgate = eng.silu_bwd(c_act, da)
+        else:
+            dgate = eng.sigmoid_bwd(c_act, da)
+        dx_g, g_gate = linear_bwd(eng, {"w": params["w_gate"]}, c_gate, dgate)
+        grads["w_gate"] = g_gate["w"]
+    elif cfg.act == "relu2":
+        bit, r = cache_act
+        dr = eng.mul(dh, eng.scale(r, 2.0))
+        dup = eng.relu_bwd(bit, dr)
+        dx_g = None
+    else:
+        (bit,) = cache_act
+        dup = eng.relu_bwd(bit, dh)
+        dx_g = None
+    dx_u, g_up = linear_bwd(eng, {"w": params["w_up"]}, c_up, dup)
+    grads["w_up"] = g_up["w"]
+    dx = eng.add(dx_u, dx_g) if dx_g is not None else dx_u
+    return dx, grads
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    act: str = "swiglu"
+    routing: str = "public"      # public | dense
+    capacity_factor: float = 1.25
+
+
+def moe_init(rng, cfg: MoEConfig):
+    mcfg = MLPConfig(cfg.d_model, cfg.d_ff, cfg.act)
+    p = {"router": linear_init(rng, cfg.d_model, cfg.n_experts)["w"]}
+    # experts as stacked tensors (E, d, f): batched matmuls, EP-shardable
+    ups, downs, gates = [], [], []
+    for _ in range(cfg.n_experts):
+        e = mlp_init(rng, mcfg)
+        ups.append(e["w_up"])
+        downs.append(e["w_down"])
+        if "w_gate" in e:
+            gates.append(e["w_gate"])
+    p["e_up"] = np.stack(ups)
+    p["e_down"] = np.stack(downs)
+    if gates:
+        p["e_gate"] = np.stack(gates)
+    return p
+
+
+def _expert_mlp_fwd(eng, params, cfg: MoEConfig, x):
+    """x: (E, C, D) tokens grouped per expert; batched expert matmuls."""
+    up = eng.matmul(x, params["e_up"])         # (E,C,F): batched over E
+    if cfg.act == "swiglu":
+        gate = eng.matmul(x, params["e_gate"])
+        a, c_act = eng.silu(gate)
+        h = eng.mul(a, up)
+        cache = (x, c_act, a, up)
+    else:
+        h, bit = eng.relu(up)
+        cache = (x, bit)
+    y = eng.matmul(h, params["e_down"])
+    return y, (cache, h)
+
+
+def _expert_mlp_bwd(eng, params, cfg: MoEConfig, cache, dy):
+    inner, h = cache
+    dh = eng.matmul(dy, eng.transpose(params["e_down"], (0, 2, 1)))
+    g_down = eng.matmul(eng.transpose(h, (0, 2, 1)), dy)
+    grads = {"e_down": g_down}
+    if cfg.act == "swiglu":
+        x, c_act, a, up = inner
+        da = eng.mul(dh, up)
+        dup = eng.mul(dh, a)
+        dgate = eng.silu_bwd(c_act, da)
+        g_gate = eng.matmul(eng.transpose(x, (0, 2, 1)), dgate)
+        grads["e_gate"] = g_gate
+        dx = eng.add(
+            eng.matmul(dup, eng.transpose(params["e_up"], (0, 2, 1))),
+            eng.matmul(dgate, eng.transpose(params["e_gate"], (0, 2, 1))))
+    else:
+        x, bit = inner
+        dup = eng.relu_bwd(bit, dh)
+        dx = eng.matmul(dup, eng.transpose(params["e_up"], (0, 2, 1)))
+    g_up = eng.matmul(eng.transpose(x, (0, 2, 1)), dup)
+    grads["e_up"] = g_up
+    return dx, grads
+
+
+def moe_fwd(eng: Engine, params, cfg: MoEConfig, x):
+    """x: (B,S,D) -> (B,S,D)."""
+    b, s, d = eng.shape_of(x)
+    t = b * s
+    xf = eng.reshape(x, (t, d))
+    logits, c_r = linear_fwd(eng, {"w": params["router"]}, xf)  # (T,E)
+
+    if cfg.routing == "dense":
+        gates, c_sm = eng.softmax(logits, axis=-1)              # (T,E) secret
+        # every expert runs every token: (E,T,D)
+        xe = _tile_experts(eng, xf, cfg.n_experts)
+        ye, c_e = _expert_mlp_fwd(eng, params, cfg, xe)         # (E,T,D)
+        yw = _weight_by_gates(eng, ye, gates)                   # (E,T,D)
+        yf = eng.sum(yw, axis=0)
+        y = eng.reshape(yf, (b, s, d))
+        return y, (c_r, c_sm, c_e, gates, ye)
+
+    # public routing: declassify router scores (documented leakage)
+    scores_pub = eng.declassify(logits)
+    top_idx = jax.lax.top_k(scores_pub, cfg.top_k)[1]           # (T,k) public
+    cap = int(math.ceil(t * cfg.top_k / cfg.n_experts *
+                        cfg.capacity_factor))
+    disp_idx, combine_pos, keep = _dispatch_indices(
+        top_idx, cfg.n_experts, cap)                            # public
+    # gather tokens per expert (local on shares)
+    xe = eng.take(xf, disp_idx.reshape(-1), axis=0)
+    xe = eng.reshape(xe, (cfg.n_experts, cap, d))
+    ye, c_e = _expert_mlp_fwd(eng, params, cfg, xe)             # (E,cap,D)
+    # gates: softmax over the k selected logits (still secret)
+    sel = eng.take(eng.reshape(logits, (-1,)),
+                   (jnp.arange(t)[:, None] * cfg.n_experts
+                    + top_idx).reshape(-1), axis=0)
+    sel = eng.reshape(sel, (t, cfg.top_k))
+    gates, c_sm = eng.softmax(sel, axis=-1)                     # (T,k)
+    # combine: for slot (t, k): y += gate_{t,k} * ye[expert, pos]
+    yflat = eng.reshape(ye, (cfg.n_experts * cap, d))
+    picked = eng.take(yflat, combine_pos.reshape(-1), axis=0)   # (T*k, D)
+    picked = eng.reshape(picked, (t, cfg.top_k, d))
+    keep_f = keep.astype(np.int64)                              # (T,k) public
+    gw = _broadcast_gate(eng, gates, picked)
+    contrib = eng.mul(picked, gw)
+    contrib = eng.mask_public(contrib, keep_f[..., None])
+    yf = eng.sum(contrib, axis=1)                               # (T,D)
+    y = eng.reshape(yf, (b, s, d))
+    cache = (c_r, c_sm, c_e, gates, picked, disp_idx, combine_pos,
+             keep_f, top_idx)
+    return y, cache
+
+
+def moe_bwd(eng: Engine, params, cfg: MoEConfig, cache, dy):
+    b, s, d = eng.shape_of(dy)
+    if cfg.routing == "dense":
+        c_r, c_sm, c_e, gates, ye = cache
+        t = b * s
+        dyf = eng.reshape(dy, (t, d))
+        dye_w = _tile_experts(eng, dyf, cfg.n_experts)          # (E,T,D)
+        # y = sum_e gate_e * ye_e
+        dye = _weight_by_gates(eng, dye_w, gates)
+        dgates_full = eng.sum(eng.mul(dye_w, ye), axis=-1)      # (E,T)
+        dgates = eng.transpose(dgates_full, (1, 0))             # (T,E)
+        dlogits = eng.softmax_bwd(c_sm, dgates)
+        dxe, g_e = _expert_mlp_bwd(eng, params, cfg, c_e, dye)
+        dxf = eng.sum(dxe, axis=0)                              # (T,D)
+        dxr, g_r = linear_bwd(eng, {"w": params["router"]}, c_r, dlogits)
+        dx = eng.add(dxf, dxr)
+        g_e["router"] = g_r["w"]
+        return eng.reshape(dx, (b, s, d)), g_e
+
+    (c_r, c_sm, c_e, gates, picked, disp_idx, combine_pos, keep_f,
+     top_idx) = cache
+    t = b * s
+    dyf = eng.reshape(dy, (t, d))
+    # contrib = gate * picked * keep
+    dyk = _tile_k(eng, dyf, cfg.top_k)                          # (T,k,D)
+    dyk = eng.mask_public(dyk, keep_f[..., None])
+    gw = _broadcast_gate(eng, gates, dyk)
+    dpicked = eng.mul(dyk, gw)                                  # (T,k,D)
+    dgates = eng.sum(eng.mul(dyk, picked), axis=-1)             # (T,k)
+    dsel = eng.softmax_bwd(c_sm, dgates)
+    # scatter dsel back into (T,E) logits grad (public positions)
+    dlogits = _scatter_topk(eng, dsel, top_idx, cfg.n_experts)
+    # scatter dpicked back to expert slots
+    cap = _cap_of(eng, c_e)
+    dye = _scatter_rows(eng, eng.reshape(dpicked, (t * cfg.top_k, d)),
+                        combine_pos.reshape(-1), cfg.n_experts * cap, d)
+    dye = eng.reshape(dye, (cfg.n_experts, cap, d))
+    dxe, g_e = _expert_mlp_bwd(eng, params, cfg, c_e, dye)
+    # scatter expert token grads back to (T,D)
+    dxf = _scatter_rows(eng, eng.reshape(
+        dxe, (cfg.n_experts * _cap_of(eng, c_e), d)),
+        disp_idx.reshape(-1), t, d)
+    dxr, g_r = linear_bwd(eng, {"w": params["router"]}, c_r, dlogits)
+    dx = eng.add(dxf, dxr)
+    g_e["router"] = g_r["w"]
+    return eng.reshape(dx, (b, s, d)), g_e
+
+
+def _cap_of(eng, c_e):
+    # expert cache stores x of shape (E, cap, D) as its first element
+    return eng.shape_of(c_e[0][0])[1]
+
+
+def _tile_experts(eng, xf, e):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(jnp.broadcast_to(xf.data[:, None],
+                                       (4, e) + xf.data.shape[1:]))
+    return jnp.broadcast_to(xf[None], (e,) + xf.shape)
+
+
+def _tile_k(eng, xf, k):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        t, d = xf.shape
+        return AShare(jnp.broadcast_to(xf.data[:, :, None],
+                                       (4, t, k, d)))
+    t, d = xf.shape
+    return jnp.broadcast_to(xf[:, None], (t, k, d))
+
+
+def _weight_by_gates(eng, ye, gates):
+    """ye: (E,T,D); gates: (T,E) -> gate-weighted ye."""
+    gt = eng.transpose(gates, (1, 0))          # (E,T)
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        g = AShare(gt.data[:, :, :, None])
+    else:
+        g = gt[:, :, None]
+    gb = _bcast(eng, g, ye)
+    return eng.mul(ye, gb)
+
+
+def _broadcast_gate(eng, gates, like):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        g = AShare(gates.data[..., None])
+        return AShare(jnp.broadcast_to(g.data, like.data.shape))
+    return jnp.broadcast_to(gates[..., None], like.shape)
+
+
+def _bcast(eng, small, like):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(jnp.broadcast_to(small.data, like.data.shape))
+    return jnp.broadcast_to(small, like.shape)
+
+
+def _dispatch_indices(top_idx, n_experts, cap):
+    """Public routing bookkeeping.  Returns
+    disp_idx (E, cap): token index feeding each expert slot (0-padded),
+    combine_pos (T, k): flat slot index (e*cap+c) for each assignment,
+    keep (T, k): bool, False when the slot overflowed capacity."""
+    t, k = top_idx.shape
+    flat_e = top_idx.reshape(-1)                         # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    # position of each assignment within its expert (rank by order)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot
+    pos = jnp.sum(pos_in_e, axis=-1) - 1                 # (T*k,)
+    keep = (pos < cap)
+    slot = flat_e * cap + jnp.minimum(pos, cap - 1)
+    # disp_idx via scatter: slot -> token
+    disp = jnp.zeros((n_experts * cap,), jnp.int32)
+    disp = disp.at[jnp.where(keep, slot, n_experts * cap - 1)].set(
+        jnp.where(keep, flat_t, 0).astype(jnp.int32), mode="drop")
+    return (disp.reshape(n_experts, cap),
+            slot.reshape(t, k),
+            keep.reshape(t, k))
+
+
+def _scatter_topk(eng, dsel, top_idx, n_experts):
+    t, k = top_idx.shape
+    flat_pos = (jnp.arange(t)[:, None] * n_experts + top_idx).reshape(-1)
+    return _scatter_rows(eng, eng.reshape(dsel, (t * k, 1)), flat_pos,
+                         t * n_experts, 1, reshape_to=(t, n_experts))
+
+
+def _scatter_rows(eng, rows, pos, n_out, d, reshape_to=None):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        out = jnp.zeros((4, n_out, d), rows.data.dtype)
+        out = out.at[:, pos].add(rows.data)
+        res = AShare(out)
+        if reshape_to is not None:
+            res = eng.reshape(res, reshape_to)
+        return res
+    out = jnp.zeros((n_out, d), rows.dtype).at[pos].add(rows)
+    if reshape_to is not None:
+        out = out.reshape(reshape_to)
+    return out

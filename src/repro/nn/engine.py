@@ -1,0 +1,438 @@
+"""Engine abstraction: every model runs either privately (TridentEngine,
+tensors are [[.]]-shares and ops are 4PC protocols) or in the clear
+(PlainEngine, float32 -- the correctness oracle and MPC-overhead baseline).
+
+Layers are written once against this interface with *manual* forward /
+backward (integer share dtypes are outside jax.grad's tangent system; the
+paper hand-codes backprop for the same reason).
+
+Activation fwd methods return (y, cache); the matching *_bwd consumes the
+cache.  Shape ops are component-aware (shares carry a leading component
+axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.context import TridentContext
+from ..core.shares import AShare
+from ..core import protocols as PR
+from ..core import activations as ACT
+from ..core import conversions as CV
+from ..core import boolean as BW
+
+
+class Engine:
+    """Interface; see TridentEngine / PlainEngine."""
+
+    name: str = "abstract"
+    is_private: bool = False
+
+    # --- io ---------------------------------------------------------------
+    def from_plain(self, x):
+        raise NotImplementedError
+
+    def to_plain(self, x):
+        raise NotImplementedError
+
+    # --- linear algebra ------------------------------------------------
+    def matmul(self, x, w):
+        raise NotImplementedError
+
+    def mul(self, x, y):
+        raise NotImplementedError
+
+
+# ===========================================================================
+# Plain (cleartext) engine -- float32.
+# ===========================================================================
+class PlainEngine(Engine):
+    name = "plain"
+    is_private = False
+
+    def __init__(self, dtype=jnp.float32):
+        self.dtype = dtype
+
+    # io
+    def from_plain(self, x):
+        return jnp.asarray(x, self.dtype)
+
+    def to_plain(self, x):
+        return jnp.asarray(x, jnp.float64)
+
+    def zeros(self, shape):
+        return jnp.zeros(shape, self.dtype)
+
+    # linear algebra
+    def matmul(self, x, w):
+        return jnp.matmul(x, w)
+
+    def mul(self, x, y):
+        return x * y
+
+    def add(self, x, y):
+        return x + y
+
+    def sub(self, x, y):
+        return x - y
+
+    def neg(self, x):
+        return -x
+
+    def scale(self, x, c: float):
+        return x * jnp.asarray(c, self.dtype)
+
+    def mul_public(self, x, arr):
+        return x * jnp.asarray(arr, self.dtype)
+
+    def lincomb_public(self, terms):
+        """sum_i c_i * x_i for public real coefficients."""
+        acc = None
+        for x, c in terms:
+            t = x * jnp.asarray(c, self.dtype)
+            acc = t if acc is None else acc + t
+        return acc
+
+    def mask_public(self, x, mask01):
+        return x * jnp.asarray(mask01, self.dtype)
+
+    def add_public(self, x, arr):
+        return x + jnp.asarray(arr, self.dtype)
+
+    def declassify(self, x):
+        return jnp.asarray(x, jnp.float32)
+
+    # activations (identical approximations to the MPC versions, so the
+    # oracle matches up to fixed-point noise)
+    def relu(self, x):
+        y = jnp.maximum(x, 0)
+        return y, (x > 0)
+
+    def relu_bwd(self, cache, dy):
+        return dy * cache.astype(self.dtype)
+
+    def sigmoid(self, x):
+        y = jnp.clip(x + 0.5, 0.0, 1.0)
+        seg = (x > -0.5) & (x < 0.5)
+        return y, (seg, y)
+
+    def sigmoid_bwd(self, cache, dy):
+        seg, _ = cache
+        return dy * seg.astype(self.dtype)
+
+    def silu(self, x):
+        s, (seg, _) = self.sigmoid(x)
+        return x * s, (x, s, seg)
+
+    def silu_bwd(self, cache, dy):
+        x, s, seg = cache
+        return dy * (s + x * seg.astype(self.dtype))
+
+    def softmax(self, x, axis=-1, mask=None):
+        r = jnp.maximum(x, 0)
+        bit = x > 0
+        if mask is not None:
+            r = r * jnp.asarray(mask, self.dtype)
+        s = jnp.sum(r, axis=axis, keepdims=True) + 1e-2
+        inv = 1.0 / s
+        p = r * inv
+        return p, (p, inv, bit)
+
+    def softmax_bwd(self, cache, dp, mask=None):
+        p, inv, bit = cache
+        axis = -1
+        inner = jnp.sum(dp * p, axis=axis, keepdims=True)
+        dr = inv * (dp - inner)
+        if mask is not None:
+            dr = dr * jnp.asarray(mask, self.dtype)
+        return dr * bit.astype(self.dtype)
+
+    def rsqrt(self, x):
+        y = jax.lax.rsqrt(jnp.maximum(x, 1e-9))
+        return y, (x, y)
+
+    def reciprocal(self, x):
+        return 1.0 / x
+
+    def square(self, x):
+        return x * x, x
+
+    # shape ops
+    def reshape(self, x, shape):
+        return x.reshape(shape)
+
+    def transpose(self, x, axes):
+        return x.transpose(axes)
+
+    def concat(self, xs, axis):
+        return jnp.concatenate(xs, axis=axis)
+
+    def split(self, x, sizes: Sequence[int], axis):
+        idx = []
+        s = 0
+        for sz in sizes[:-1]:
+            s += sz
+            idx.append(s)
+        return jnp.split(x, idx, axis=axis)
+
+    def take(self, x, ids, axis=0):
+        return jnp.take(x, ids, axis=axis)
+
+    def pad_zeros(self, x, pads):
+        return jnp.pad(x, pads)
+
+    def sum(self, x, axis, keepdims=False):
+        return jnp.sum(x, axis=axis, keepdims=keepdims)
+
+    def mean(self, x, axis, keepdims=False):
+        return jnp.mean(x, axis=axis, keepdims=keepdims)
+
+    def stack_to_new_axis(self, xs, axis=0):
+        return jnp.stack(xs, axis=axis)
+
+    # embedding
+    def embed(self, table, ids):
+        return jnp.take(table, ids, axis=0)
+
+    def embed_bwd(self, table, ids, dy):
+        return jnp.zeros_like(table).at[ids].add(dy)
+
+    def reveal(self, x):
+        return x
+
+    def shape_of(self, x):
+        return x.shape
+
+
+# ===========================================================================
+# Trident engine -- [[.]]-shares + 4PC protocols.
+# ===========================================================================
+class TridentEngine(Engine):
+    name = "trident"
+    is_private = True
+
+    def __init__(self, ctx: TridentContext, nonlinear: str = "garbled"):
+        """nonlinear: how division-like ops (reciprocal, rsqrt, softmax
+        denominator) are computed.
+          "garbled"  -- the paper's route (Section VI-A: switch to the
+                        garbled world, evaluate a circuit, switch back);
+                        cost-modeled per Table IX, value-emulated.
+          "newton"   -- beyond-paper arithmetic-world Newton-Raphson with
+                        boolean-world normalization; every bit stays in
+                        protocols (slower to trace/compile, used by the
+                        focused unit tests and the perf study).
+        """
+        self.ctx = ctx
+        self.ring = ctx.ring
+        self.nonlinear = nonlinear
+
+    # io
+    def from_plain(self, x):
+        return PR.share(self.ctx, self.ring.encode(x))
+
+    def to_plain(self, x: AShare):
+        return self.ring.decode(x.reveal())
+
+    def zeros(self, shape):
+        return AShare(jnp.zeros((4,) + tuple(shape), self.ring.dtype))
+
+    # linear algebra (all truncating: fixed-point products)
+    def matmul(self, x: AShare, w: AShare) -> AShare:
+        return PR.matmul_tr(self.ctx, x, w)
+
+    def mul(self, x: AShare, y: AShare) -> AShare:
+        return PR.mult_tr(self.ctx, x, y)
+
+    def add(self, x, y):
+        return x + y
+
+    def sub(self, x, y):
+        return x - y
+
+    def neg(self, x):
+        return -x
+
+    def scale(self, x: AShare, c: float) -> AShare:
+        # public power-of-two scales avoid a truncation entirely
+        frac = float(c)
+        if frac != 0 and (abs(frac) >= 1) and float(abs(frac)).is_integer() \
+                and abs(int(frac)) & (abs(int(frac)) - 1) == 0:
+            return x.mul_public(int(frac)) if frac > 0 else \
+                (-x).mul_public(int(-frac))
+        return PR.scale_public(self.ctx, x, c)
+
+    def mul_public(self, x: AShare, arr) -> AShare:
+        enc = self.ring.encode(arr)
+        return PR.truncate_share(self.ctx, x.mul_public(enc))
+
+    def lincomb_public(self, terms) -> AShare:
+        """sum_i c_i * x_i for public real c_i with ONE truncation (the
+        products share their 2f fractional bits; beyond-paper fusion that
+        halves RoPE's truncation communication -- see EXPERIMENTS.md)."""
+        acc = None
+        for x, c in terms:
+            t = x.mul_public(self.ring.encode(c))
+            acc = t if acc is None else acc + t
+        return PR.truncate_share(self.ctx, acc)
+
+    def mask_public(self, x: AShare, mask01) -> AShare:
+        """Multiply by a public 0/1 mask: integer multiply, no truncation."""
+        return x.mul_public(jnp.asarray(mask01, self.ring.dtype))
+
+    def add_public(self, x: AShare, arr) -> AShare:
+        return x + self.ring.encode(arr)
+
+    def declassify(self, x: AShare):
+        """Open to all parties and decode (tallied reconstruction)."""
+        return jnp.asarray(self.ring.decode(PR.reconstruct(self.ctx, x)),
+                           jnp.float32)
+
+    # activations
+    def relu(self, x: AShare):
+        y, nb = ACT.relu(self.ctx, x, return_bit=True)
+        return y, nb
+
+    def relu_bwd(self, cache, dy: AShare) -> AShare:
+        return CV.bit_inject(self.ctx, cache, dy)
+
+    def sigmoid(self, x: AShare):
+        ctx = self.ctx
+        half = self.ring.encode(0.5)
+        v_hi, v_lo = x + half, x - half
+        with ctx.tally.parallel(("offline",)):
+            with ctx.tally.parallel():
+                with ctx.tally.branch():
+                    b1 = CV.bit_extract(ctx, v_hi)
+                with ctx.tally.branch():
+                    b2 = CV.bit_extract(ctx, v_lo)
+            seg = BW.and_bshare(ctx, ~b1, b2, active_bits=1)
+        with ctx.tally.parallel():
+            with ctx.tally.branch():
+                t = CV.bit_inject(ctx, seg, v_hi)
+            with ctx.tally.branch():
+                d = CV.bit2a(ctx, ~b2)
+        y = t + d.mul_public(self.ring.scale)
+        return y, (seg, y)
+
+    def sigmoid_bwd(self, cache, dy: AShare) -> AShare:
+        seg, _ = cache
+        return CV.bit_inject(self.ctx, seg, dy)
+
+    def silu(self, x: AShare):
+        s, (seg, _) = self.sigmoid(x)
+        y = self.mul(x, s)
+        return y, (x, s, seg)
+
+    def silu_bwd(self, cache, dy: AShare) -> AShare:
+        x, s, seg = cache
+        t1 = self.mul(dy, s)
+        t2 = CV.bit_inject(self.ctx, seg, self.mul(dy, x))
+        return t1 + t2
+
+    def softmax(self, x: AShare, axis=-1, mask=None):
+        ctx = self.ctx
+        r, bit = ACT.relu(ctx, x, return_bit=True)
+        if mask is not None:
+            r = r.mul_public(jnp.asarray(mask, self.ring.dtype))
+        ax = axis if axis < 0 else axis + 1
+        s_data = jnp.sum(r.data, axis=ax, keepdims=True,
+                         dtype=self.ring.dtype)
+        s = AShare(s_data) + self.ring.encode(1e-2)
+        inv = self.reciprocal(s)
+        inv_b = AShare(jnp.broadcast_to(inv.data, r.data.shape))
+        p = PR.mult_tr(ctx, r, inv_b)
+        return p, (p, inv, bit)
+
+    def softmax_bwd(self, cache, dp: AShare, mask=None) -> AShare:
+        p, inv, bit = cache
+        ctx = self.ctx
+        ax = -1
+        prod = PR.mult_tr(ctx, dp, p)
+        inner = AShare(jnp.sum(prod.data, axis=ax, keepdims=True,
+                               dtype=self.ring.dtype))
+        diff = dp - inner
+        inv_b = AShare(jnp.broadcast_to(inv.data, diff.data.shape))
+        dr = PR.mult_tr(ctx, diff, inv_b)
+        if mask is not None:
+            dr = dr.mul_public(jnp.asarray(mask, self.ring.dtype))
+        return CV.bit_inject(ctx, bit, dr)
+
+    def rsqrt(self, x: AShare):
+        if self.nonlinear == "garbled":
+            from ..core import garbled as GW
+            y = GW.garbled_rsqrt(self.ctx, x)
+        else:
+            y = ACT.rsqrt(self.ctx, x)
+        return y, (x, y)
+
+    def reciprocal(self, x: AShare):
+        if self.nonlinear == "garbled":
+            from ..core import garbled as GW
+            return GW.garbled_reciprocal(self.ctx, x)
+        return ACT.reciprocal(self.ctx, x)
+
+    def square(self, x: AShare):
+        return self.mul(x, x), x
+
+    # shape ops (component axis 0 is preserved)
+    def reshape(self, x: AShare, shape):
+        return x.reshape(shape)
+
+    def transpose(self, x: AShare, axes):
+        return x.transpose(axes)
+
+    def concat(self, xs, axis):
+        ax = axis if axis < 0 else axis + 1
+        return AShare(jnp.concatenate([x.data for x in xs], axis=ax))
+
+    def split(self, x: AShare, sizes: Sequence[int], axis):
+        ax = axis if axis < 0 else axis + 1
+        idx, s = [], 0
+        for sz in sizes[:-1]:
+            s += sz
+            idx.append(s)
+        return [AShare(p) for p in jnp.split(x.data, idx, axis=ax)]
+
+    def take(self, x: AShare, ids, axis=0):
+        ax = axis if axis < 0 else axis + 1
+        return AShare(jnp.take(x.data, ids, axis=ax))
+
+    def pad_zeros(self, x: AShare, pads):
+        return AShare(jnp.pad(x.data, ((0, 0),) + tuple(pads)))
+
+    def sum(self, x: AShare, axis, keepdims=False):
+        ax = axis if axis < 0 else axis + 1
+        return AShare(jnp.sum(x.data, axis=ax, keepdims=keepdims,
+                              dtype=self.ring.dtype))
+
+    def mean(self, x: AShare, axis, keepdims=False):
+        ax = axis if axis < 0 else axis + 1
+        n = x.data.shape[ax]
+        s = AShare(jnp.sum(x.data, axis=ax, keepdims=keepdims,
+                           dtype=self.ring.dtype))
+        return PR.scale_public(self.ctx, s, 1.0 / n)
+
+    def stack_to_new_axis(self, xs, axis=0):
+        ax = axis if axis < 0 else axis + 1
+        return AShare(jnp.stack([x.data for x in xs], axis=ax))
+
+    # embedding: public token ids -> gather is local on shares
+    def embed(self, table: AShare, ids):
+        return AShare(jnp.take(table.data, ids, axis=1))
+
+    def embed_bwd(self, table: AShare, ids, dy: AShare) -> AShare:
+        flat_ids = ids.reshape(-1)
+        d = dy.data.reshape((4, -1, dy.data.shape[-1]))
+        out = jnp.zeros_like(table.data).at[:, flat_ids].add(d)
+        return AShare(out)
+
+    def reveal(self, x: AShare):
+        """Declassify (tallied as a reconstruction)."""
+        return PR.reconstruct(self.ctx, x)
+
+    def shape_of(self, x: AShare):
+        return x.shape

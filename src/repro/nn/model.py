@@ -1,0 +1,959 @@
+"""Generic LM covering the 10 assigned architectures, over the Engine.
+
+A model is a sequence of SEGMENTS, each a homogeneous run of layers
+evaluated with jax.lax.scan over stacked per-layer parameters (so tracing
+cost and HLO size are O(1) in depth).  Segment kinds:
+
+    attn_mlp    pre-norm attention + pre-norm MLP (dense transformers)
+    attn_moe    pre-norm attention + pre-norm MoE (qwen3-moe, mixtral)
+    retention   pre-norm matrix-state recurrence (zamba2 mamba, xlstm mLSTM)
+    slstm       pre-norm scalar-state recurrence (xlstm sLSTM)
+    shared_attn zamba2's single shared attn+mlp block applied between
+                retention groups (parameters shared across applications)
+    xattn_mlp   decoder block with self-attn + cross-attn + MLP (whisper)
+
+Manual backprop: fwd scans emit per-layer caches (stacked pytrees); bwd
+consumes them with a reverse scan.  With cfg.remat=True only the layer
+INPUT is stored and the bwd scan re-executes the layer forward -- in MPC
+terms this re-runs the online phase (2x online comm for 1/L activation
+memory; the honest trade, see DESIGN.md).
+
+Modality frontends (whisper audio, phi-3-vision CLIP) are STUBS per the
+assignment spec: input_specs provides precomputed frame/patch embeddings
+which are secret-shared and prepended/consumed directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, PlainEngine, TridentEngine
+from . import layers as L
+from . import blocks as B
+from . import recurrent as R
+from .recurrent import (_leaf, _wrap, _scan_leaf, _unscan_leaf, _scan_ctx,
+                        _checks_begin, _checks_end, _checks_absorb)
+
+
+# ===========================================================================
+# Config
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    act: str = "swiglu"          # mlp activation
+    qk_norm: bool = False
+    window: int | None = None    # sliding-window attention
+    n_experts: int = 0
+    top_k: int = 0
+    moe_routing: str = "public"  # public | dense (see DESIGN.md)
+    ssm_state: int = 0
+    shared_attn_every: int = 6   # zamba2: shared block cadence
+    n_encoder_layers: int = 0    # whisper
+    frontend: str | None = None  # audio | vision (stub)
+    frontend_tokens: int = 0     # prepended patch/frame embeddings (vlm)
+    rope_theta: float = 1e4
+    seq_chunk: int = 128         # recurrence chunk
+    q_chunk: int | None = None   # prefill query chunk
+    long_window: int = 8192      # window cap for hybrid long-context serving
+    remat: bool = True
+    microbatch: int = 0          # 0 = no microbatching
+
+    @property
+    def dh(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def attn_cfg(self, window=None) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.dh,
+            qk_norm=self.qk_norm,
+            window=self.window if window is None else window,
+            rope_theta=self.rope_theta)
+
+    def mlp_cfg(self) -> B.MLPConfig:
+        return B.MLPConfig(self.d_model, self.d_ff, self.act)
+
+    def moe_cfg(self) -> B.MoEConfig:
+        return B.MoEConfig(self.d_model, self.d_ff, self.n_experts,
+                           self.top_k, self.act, self.moe_routing)
+
+    def ret_cfg(self) -> R.RetentionConfig:
+        return R.RetentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            d_k=self.ssm_state or self.dh,
+            d_v=self.d_model // self.n_heads, seq_chunk=self.seq_chunk)
+
+    def slstm_cfg(self) -> R.SLSTMConfig:
+        return R.SLSTMConfig(self.d_model, self.n_heads, self.seq_chunk)
+
+    def segments(self):
+        """[(kind, count)] layer plan."""
+        if self.family in ("dense", "vlm"):
+            return [("attn_mlp", self.n_layers)]
+        if self.family == "moe":
+            return [("attn_moe", self.n_layers)]
+        if self.family == "hybrid":
+            segs = []
+            left = self.n_layers
+            while left > 0:
+                take = min(self.shared_attn_every, left)
+                segs.append(("retention", take))
+                left -= take
+                if left > 0 or True:
+                    segs.append(("shared_attn", 1))
+            return segs
+        if self.family == "ssm":
+            # xlstm: alternate mLSTM (retention) and sLSTM pairs
+            pairs = self.n_layers // 2
+            return [("ret_slstm_pair", pairs)]
+        if self.family == "encdec":
+            return [("enc", self.n_encoder_layers),
+                    ("xattn_mlp", self.n_layers)]
+        raise ValueError(self.family)
+
+
+# ===========================================================================
+# Parameter init (numpy float64; converted per engine afterwards)
+# ===========================================================================
+def _layer_init(rng, cfg: ModelConfig, kind: str):
+    if kind in ("attn_mlp", "enc"):
+        return {"n1": L.rmsnorm_init(rng, cfg.d_model),
+                "attn": L.attention_init(rng, cfg.attn_cfg()),
+                "n2": L.rmsnorm_init(rng, cfg.d_model),
+                "mlp": B.mlp_init(rng, cfg.mlp_cfg())}
+    if kind == "attn_moe":
+        return {"n1": L.rmsnorm_init(rng, cfg.d_model),
+                "attn": L.attention_init(rng, cfg.attn_cfg()),
+                "n2": L.rmsnorm_init(rng, cfg.d_model),
+                "moe": B.moe_init(rng, cfg.moe_cfg())}
+    if kind in ("retention", "shared_attn"):
+        if kind == "shared_attn":
+            return _layer_init(rng, cfg, "attn_mlp")
+        return {"n1": L.rmsnorm_init(rng, cfg.d_model),
+                "ret": R.retention_init(rng, cfg.ret_cfg())}
+    if kind == "ret_slstm_pair":
+        return {"n1": L.rmsnorm_init(rng, cfg.d_model),
+                "ret": R.retention_init(rng, cfg.ret_cfg()),
+                "n2": L.rmsnorm_init(rng, cfg.d_model),
+                "sl": R.slstm_init(rng, cfg.slstm_cfg())}
+    if kind == "xattn_mlp":
+        return {"n1": L.rmsnorm_init(rng, cfg.d_model),
+                "attn": L.attention_init(rng, cfg.attn_cfg()),
+                "nx": L.rmsnorm_init(rng, cfg.d_model),
+                "xattn": L.attention_init(rng, cfg.attn_cfg()),
+                "n2": L.rmsnorm_init(rng, cfg.d_model),
+                "mlp": B.mlp_init(rng, cfg.mlp_cfg())}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Returns the plain (numpy) parameter pytree."""
+    rng = np.random.RandomState(seed)
+    p = {"embed": L.embedding_init(rng, cfg.vocab, cfg.d_model),
+         "final_norm": L.rmsnorm_init(rng, cfg.d_model),
+         "lm_head": L.linear_init(rng, cfg.d_model, cfg.vocab, scale=0.02)}
+    segs = []
+    for kind, count in cfg.segments():
+        if kind == "shared_attn":
+            segs.append(None)           # placeholder; single shared set
+            continue
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: np.stack(xs),
+            *[_layer_init(rng, cfg, kind) for _ in range(count)])
+        segs.append(stacked)
+    p["segments"] = segs
+    if any(k == "shared_attn" for k, _ in cfg.segments()):
+        p["shared_attn"] = _layer_init(rng, cfg, "shared_attn")
+    return p
+
+
+def params_to_engine(eng: Engine, params):
+    """Convert the numpy pytree to engine tensors (Pi_Sh for Trident).
+    Stacked segment leaves become scan-ready: AShare data (n, 4, ...)."""
+    def conv(x):
+        return eng.from_plain(x)
+
+    def conv_stacked(x):
+        t = eng.from_plain(x)            # AShare data (4, n, ...) | (n, ...)
+        if isinstance(eng, TridentEngine):
+            from ..core.shares import AShare
+            return AShare(jnp.moveaxis(t.data, 0, 1))   # (n, 4, ...)
+        return t
+
+    out = {"embed": jax.tree_util.tree_map(conv, params["embed"]),
+           "final_norm": jax.tree_util.tree_map(conv, params["final_norm"]),
+           "lm_head": jax.tree_util.tree_map(conv, params["lm_head"])}
+    segs = []
+    for stacked in params["segments"]:
+        if stacked is None:
+            segs.append(None)
+            continue
+        segs.append(jax.tree_util.tree_map(conv_stacked, stacked))
+    out["segments"] = segs
+    if "shared_attn" in params:
+        out["shared_attn"] = jax.tree_util.tree_map(
+            conv, params["shared_attn"])
+    return out
+
+
+def _unstack_layer(eng, p):
+    """Scan-xs element (AShare data (4,...)) is already a valid share."""
+    return p
+
+
+# ===========================================================================
+# Blocks (single layer) -- pre-norm residual wiring
+# ===========================================================================
+def _block_fwd(eng, cfg: ModelConfig, kind: str, p, x, enc_out=None):
+    if kind in ("attn_mlp", "enc", "shared_attn"):
+        h, c1 = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, ca, _ = L.attention_fwd(eng, p["attn"], cfg.attn_cfg(), h)
+        x1 = eng.add(x, a)
+        h2, c2 = L.rmsnorm_fwd(eng, p["n2"], x1)
+        m, cm = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x1, m)
+        return y, (c1, ca, c2, cm)
+    if kind == "attn_moe":
+        h, c1 = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, ca, _ = L.attention_fwd(eng, p["attn"], cfg.attn_cfg(), h)
+        x1 = eng.add(x, a)
+        h2, c2 = L.rmsnorm_fwd(eng, p["n2"], x1)
+        m, cm = B.moe_fwd(eng, p["moe"], cfg.moe_cfg(), h2)
+        y = eng.add(x1, m)
+        return y, (c1, ca, c2, cm)
+    if kind == "retention":
+        h, c1 = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, cr, _ = R.retention_fwd(eng, p["ret"], cfg.ret_cfg(), h)
+        return eng.add(x, r), (c1, cr)
+    if kind == "ret_slstm_pair":
+        h, c1 = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, cr, _ = R.retention_fwd(eng, p["ret"], cfg.ret_cfg(), h)
+        x1 = eng.add(x, r)
+        h2, c2 = L.rmsnorm_fwd(eng, p["n2"], x1)
+        sl, cs, _ = R.slstm_fwd(eng, p["sl"], cfg.slstm_cfg(), h2)
+        return eng.add(x1, sl), (c1, cr, c2, cs)
+    if kind == "xattn_mlp":
+        h, c1 = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, ca, _ = L.attention_fwd(eng, p["attn"], cfg.attn_cfg(), h)
+        x1 = eng.add(x, a)
+        hx, cxn = L.rmsnorm_fwd(eng, p["nx"], x1)
+        xa, cxa = L.cross_attention_fwd(eng, p["xattn"], cfg.attn_cfg(),
+                                        hx, enc_out)
+        x2 = eng.add(x1, xa)
+        h2, c2 = L.rmsnorm_fwd(eng, p["n2"], x2)
+        m, cm = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x2, m)
+        return y, (c1, ca, cxn, cxa, c2, cm)
+    raise ValueError(kind)
+
+
+def _block_bwd(eng, cfg: ModelConfig, kind: str, p, cache, dy, enc_out=None):
+    """Returns (dx, grads[, d_enc])."""
+    if kind in ("attn_mlp", "enc", "shared_attn"):
+        c1, ca, c2, cm = cache
+        dm, g_m = B.mlp_bwd(eng, p["mlp"], cfg.mlp_cfg(), cm, dy)
+        dh2, g_n2 = L.rmsnorm_bwd(eng, p["n2"], c2, dm)
+        dx1 = eng.add(dy, dh2)
+        da, g_a = L.attention_bwd(eng, p["attn"], cfg.attn_cfg(), ca, dx1)
+        dh1, g_n1 = L.rmsnorm_bwd(eng, p["n1"], c1, da)
+        dx = eng.add(dx1, dh1)
+        return dx, {"n1": g_n1, "attn": g_a, "n2": g_n2, "mlp": g_m}
+    if kind == "attn_moe":
+        c1, ca, c2, cm = cache
+        dm, g_m = B.moe_bwd(eng, p["moe"], cfg.moe_cfg(), cm, dy)
+        dh2, g_n2 = L.rmsnorm_bwd(eng, p["n2"], c2, dm)
+        dx1 = eng.add(dy, dh2)
+        da, g_a = L.attention_bwd(eng, p["attn"], cfg.attn_cfg(), ca, dx1)
+        dh1, g_n1 = L.rmsnorm_bwd(eng, p["n1"], c1, da)
+        dx = eng.add(dx1, dh1)
+        return dx, {"n1": g_n1, "attn": g_a, "n2": g_n2, "moe": g_m}
+    if kind == "retention":
+        c1, cr = cache
+        dr, g_r = R.retention_bwd(eng, p["ret"], cfg.ret_cfg(), cr, dy)
+        dh1, g_n1 = L.rmsnorm_bwd(eng, p["n1"], c1, dr)
+        return eng.add(dy, dh1), {"n1": g_n1, "ret": g_r}
+    if kind == "ret_slstm_pair":
+        c1, cr, c2, cs = cache
+        ds, g_s = R.slstm_bwd(eng, p["sl"], cfg.slstm_cfg(), cs, dy)
+        dh2, g_n2 = L.rmsnorm_bwd(eng, p["n2"], c2, ds)
+        dx1 = eng.add(dy, dh2)
+        dr, g_r = R.retention_bwd(eng, p["ret"], cfg.ret_cfg(), cr, dx1)
+        dh1, g_n1 = L.rmsnorm_bwd(eng, p["n1"], c1, dr)
+        return eng.add(dx1, dh1), {"n1": g_n1, "ret": g_r,
+                                   "n2": g_n2, "sl": g_s}
+    if kind == "xattn_mlp":
+        c1, ca, cxn, cxa, c2, cm = cache
+        dm, g_m = B.mlp_bwd(eng, p["mlp"], cfg.mlp_cfg(), cm, dy)
+        dh2, g_n2 = L.rmsnorm_bwd(eng, p["n2"], c2, dm)
+        dx2 = eng.add(dy, dh2)
+        dxa, d_enc, g_x = L.cross_attention_bwd(eng, p["xattn"],
+                                                cfg.attn_cfg(), cxa, dx2)
+        dhx, g_nx = L.rmsnorm_bwd(eng, p["nx"], cxn, dxa)
+        dx1 = eng.add(dx2, dhx)
+        da, g_a = L.attention_bwd(eng, p["attn"], cfg.attn_cfg(), ca, dx1)
+        dh1, g_n1 = L.rmsnorm_bwd(eng, p["n1"], c1, da)
+        dx = eng.add(dx1, dh1)
+        grads = {"n1": g_n1, "attn": g_a, "nx": g_nx, "xattn": g_x,
+                 "n2": g_n2, "mlp": g_m}
+        return dx, grads, d_enc
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# Segment scan (fwd + reverse bwd, with optional remat)
+# ===========================================================================
+def _seg_fwd(eng, cfg: ModelConfig, kind: str, stacked, x, count: int,
+             enc_out=None):
+    is_triv = isinstance(eng, TridentEngine)
+    keys = R._layer_keys(eng, count, f"seg_{kind}")
+
+    def body(carry, xs):
+        xi = _wrap(eng, carry)
+        p = xs["p"]
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            y, cache = _block_fwd(eng, cfg, kind, p, xi, enc_out=enc_out)
+        out_cache = _leaf(eng, xi) if cfg.remat else cache
+        return _leaf(eng, y), {"c": out_cache, "ok": _checks_end(eng, mark)}
+
+    scope = eng.ctx.tally.scaled(count) if is_triv else _scan_ctx(eng)
+    with scope:
+        y, ys = jax.lax.scan(body, _leaf(eng, x),
+                             {"p": stacked, "key": keys})
+    _checks_absorb(eng, ys["ok"])
+    return _wrap(eng, y), ys["c"]
+
+
+def _seg_bwd(eng, cfg: ModelConfig, kind: str, stacked, caches, dy,
+             count: int, enc_out=None):
+    """Reverse scan; returns (dx, stacked-grads[, d_enc_sum])."""
+    is_triv = isinstance(eng, TridentEngine)
+    fkeys = R._layer_keys(eng, count, f"seg_{kind}")     # same as fwd (remat)
+    bkeys = R._layer_keys(eng, count, f"segbwd_{kind}")
+    has_enc = kind == "xattn_mlp"
+
+    def body(carry, xs):
+        if has_enc:
+            dxc, denc_ac = carry
+            dxi = _wrap(eng, dxc)
+        else:
+            dxi = _wrap(eng, carry)
+        p = xs["p"]
+        mark = _checks_begin(eng)
+        kf = eng.ctx.scan_keys(xs["fkey"]) if is_triv else _scan_ctx(eng)
+        if cfg.remat:
+            xi = _wrap(eng, xs["c"])
+            with kf:
+                _, cache = _block_fwd(eng, cfg, kind, p, xi, enc_out=enc_out)
+        else:
+            cache = xs["c"]
+        kb = eng.ctx.scan_keys(xs["bkey"]) if is_triv else _scan_ctx(eng)
+        with kb:
+            out = _block_bwd(eng, cfg, kind, p, cache, dxi, enc_out=enc_out)
+        # grads keep their AShare nodes: scan stacks the inner data leaf to
+        # (n, 4, ...), matching the stacked-parameter layout exactly.
+        if has_enc:
+            dx, grads, d_enc = out
+            return ((_leaf(eng, dx), denc_ac + _leaf(eng, d_enc)),
+                    {"g": grads, "ok": _checks_end(eng, mark)})
+        dx, grads = out
+        return _leaf(eng, dx), {"g": grads, "ok": _checks_end(eng, mark)}
+
+    scope = eng.ctx.tally.scaled(count) if is_triv else _scan_ctx(eng)
+    if has_enc:
+        denc0 = _leaf(eng, eng.zeros(eng.shape_of(enc_out)))
+        init = (_leaf(eng, dy), denc0)
+    else:
+        init = _leaf(eng, dy)
+    with scope:
+        fin, ys = jax.lax.scan(body, init,
+                               {"p": stacked, "c": caches,
+                                "fkey": fkeys, "bkey": bkeys},
+                               reverse=True)
+    _checks_absorb(eng, ys["ok"])
+    grads = ys["g"]
+    if has_enc:
+        dxf, denc = fin
+        return _wrap(eng, dxf), grads, _wrap(eng, denc)
+    return _wrap(eng, fin), grads
+
+
+# ===========================================================================
+# Full model forward / backward
+# ===========================================================================
+def forward(eng: Engine, cfg: ModelConfig, params, ids,
+            frontend_embs=None, enc_inputs=None):
+    """ids: (B, S) public token ids.
+    frontend_embs (vlm): (B, n_patches, D) precomputed patch embeddings
+    (secret-shared activations from the stubbed frontend).
+    enc_inputs (encdec): (B, S_enc, D) precomputed frame embeddings.
+    Returns (logits, cache-pytree)."""
+    x, c_emb = L.embedding_fwd(eng, params["embed"], ids)
+    n_front = 0
+    if cfg.family == "vlm" and frontend_embs is not None:
+        x = eng.concat([frontend_embs, x], axis=1)
+        n_front = eng.shape_of(frontend_embs)[1]
+
+    enc_out, enc_caches = None, None
+    seg_caches = []
+    for (kind, count), stacked in zip(cfg.segments(),
+                                      params["segments"]):
+        if kind == "enc":
+            enc_out, cs = _seg_fwd(eng, cfg, kind, stacked, enc_inputs,
+                                   count)
+            enc_caches = cs
+            seg_caches.append(cs)
+            continue
+        if kind == "shared_attn":
+            y, cache = _block_fwd(eng, cfg, "shared_attn",
+                                  params["shared_attn"], x)
+            seg_caches.append(cache)
+            x = y
+            continue
+        x, cs = _seg_fwd(eng, cfg, kind, stacked, x, count,
+                         enc_out=enc_out)
+        seg_caches.append(cs)
+
+    xn, c_fn = L.rmsnorm_fwd(eng, params["final_norm"], x)
+    logits, c_head = linear_fwd_model(eng, params["lm_head"], xn)
+    cache = (c_emb, n_front, seg_caches, c_fn, c_head, enc_out)
+    return logits, cache
+
+
+def linear_fwd_model(eng, p, x):
+    return L.linear_fwd(eng, p, x)
+
+
+def backward(eng: Engine, cfg: ModelConfig, params, cache, dlogits):
+    """Returns grads pytree matching params."""
+    c_emb, n_front, seg_caches, c_fn, c_head, enc_out = cache
+    dxn, g_head = L.linear_bwd(eng, params["lm_head"], c_head, dlogits)
+    dx, g_fn = L.rmsnorm_bwd(eng, params["final_norm"], c_fn, dxn)
+
+    grads = {"lm_head": g_head, "final_norm": g_fn}
+    seg_grads = []
+    d_enc_total = None
+    shared_grads = None
+    for (kind, count), stacked, cs in zip(
+            reversed(cfg.segments()), reversed(params["segments"]),
+            reversed(seg_caches)):
+        if kind == "enc":
+            # encoder grads computed after decoder d_enc is known
+            d_enc_in, g_enc = _seg_bwd(eng, cfg, kind, stacked, cs,
+                                       d_enc_total, count)
+            seg_grads.append(g_enc)
+            continue
+        if kind == "shared_attn":
+            dxs, g_sh = _block_bwd(eng, cfg, "shared_attn",
+                                   params["shared_attn"], cs, dx)
+            dx = dxs
+            if shared_grads is None:
+                shared_grads = g_sh
+            else:
+                shared_grads = jax.tree_util.tree_map(
+                    eng.add, shared_grads, g_sh)
+            seg_grads.append(None)
+            continue
+        out = _seg_bwd(eng, cfg, kind, stacked, cs, dx, count,
+                       enc_out=enc_out)
+        if kind == "xattn_mlp":
+            dx, g_seg, d_enc = out
+            d_enc_total = d_enc if d_enc_total is None else \
+                eng.add(d_enc_total, d_enc)
+        else:
+            dx, g_seg = out
+        seg_grads.append(g_seg)
+    grads["segments"] = list(reversed(seg_grads))
+    if shared_grads is not None:
+        grads["shared_attn"] = shared_grads
+
+    if n_front:
+        dx = _drop_front(eng, dx, n_front)
+    (ids,) = c_emb
+    _, g_emb = L.embedding_bwd(eng, params["embed"], c_emb, dx)
+    grads["embed"] = g_emb
+    return grads
+
+
+def _drop_front(eng, dx, n_front):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(dx.data[:, :, n_front:])
+    return dx[:, n_front:]
+
+
+# ===========================================================================
+# Train step: smx-softmax cross-entropy gradient + manual backprop
+# ===========================================================================
+def loss_and_grads(eng: Engine, cfg: ModelConfig, params, ids, labels,
+                   frontend_embs=None, enc_inputs=None):
+    """Cross-entropy via the paper's smx softmax: dlogits = (p - onehot)/N.
+    Returns (loss_proxy, grads).  loss_proxy = mean(1 - p_correct),
+    declassified scalar (one Pi_Rec)."""
+    logits, cache = forward(eng, cfg, params, ids,
+                            frontend_embs=frontend_embs,
+                            enc_inputs=enc_inputs)
+    bsz, seq = labels.shape
+    if cfg.family == "vlm" and frontend_embs is not None:
+        logits = _drop_front(eng, logits, eng.shape_of(frontend_embs)[1])
+    p, _ = eng.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=jnp.float64)
+    n = bsz * seq
+    diff = eng.add_public(p, -onehot)
+    dlogits = eng.scale(diff, 1.0 / n)
+    if cfg.family == "vlm" and frontend_embs is not None:
+        nf = eng.shape_of(frontend_embs)[1]
+        dlogits = _pad_front(eng, dlogits, nf)
+    # monitoring loss: 1 - mean(p[label])  (local gather + 1 declassify)
+    p_corr = _gather_labels(eng, p, labels)
+    loss = eng.declassify(_mean_all(eng, p_corr))
+    grads = backward(eng, cfg, params, cache, dlogits)
+    return 1.0 - jnp.squeeze(loss), grads
+
+
+def _mean_all(eng, x):
+    n = 1
+    for s in eng.shape_of(x):
+        n *= s
+    flat = eng.reshape(x, (n,))
+    s = eng.sum(flat, axis=0, keepdims=True)
+    return eng.scale(s, 1.0 / n)
+
+
+def _gather_labels(eng, p, labels):
+    """p: (B,S,V), labels public (B,S) -> (B,S) share of p[label]."""
+    b, s, v = eng.shape_of(p)
+    flat_idx = (jnp.arange(b * s) * v + labels.reshape(-1))
+    pf = eng.reshape(p, (b * s * v,))
+    return eng.reshape(eng.take(pf, flat_idx, axis=0), (b, s))
+
+
+def _pad_front(eng, dx, n_front):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        pad = [(0, 0), (0, 0), (n_front, 0), (0, 0)]
+        return AShare(jnp.pad(dx.data, pad))
+    return jnp.pad(dx, [(0, 0), (n_front, 0), (0, 0)])
+
+
+def train_step(eng: Engine, cfg: ModelConfig, params, ids, labels, lr=0.01,
+               frontend_embs=None, enc_inputs=None, optimizer=None,
+               opt_state=None):
+    """One GD iteration (fwd + bwd + SGD update), optionally microbatched.
+    Returns (new_params, loss, opt_state)."""
+    if cfg.microbatch and cfg.microbatch > 1:
+        loss, grads = _microbatched_grads(eng, cfg, params, ids, labels,
+                                          frontend_embs, enc_inputs)
+    else:
+        loss, grads = loss_and_grads(eng, cfg, params, ids, labels,
+                                     frontend_embs=frontend_embs,
+                                     enc_inputs=enc_inputs)
+    if optimizer is None:
+        new_params = sgd_update(eng, params, grads, lr)
+        return new_params, loss, None
+    new_params, opt_state = optimizer.update(eng, params, grads, opt_state)
+    return new_params, loss, opt_state
+
+
+def _microbatched_grads(eng, cfg, params, ids, labels, fe, enc):
+    """Gradient accumulation: Python loop over micro-slices (activation
+    memory / n_micro; grads accumulate locally -- zero extra comm)."""
+    n_micro = cfg.microbatch
+    bsz = ids.shape[0]
+    mb = bsz // n_micro
+    total_loss, acc = 0.0, None
+    for i in range(n_micro):
+        sl = slice(i * mb, (i + 1) * mb)
+        fe_i = _slice0(eng, fe, sl) if fe is not None else None
+        enc_i = _slice0(eng, enc, sl) if enc is not None else None
+        loss, grads = loss_and_grads(eng, cfg, params, ids[sl], labels[sl],
+                                     frontend_embs=fe_i, enc_inputs=enc_i)
+        total_loss = total_loss + loss
+        acc = grads if acc is None else _tree_add(eng, acc, grads)
+    return total_loss / n_micro, _tree_scale(eng, acc, 1.0 / n_micro)
+
+
+def _slice0(eng, x, sl):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(x.data[:, sl])
+    return x[sl]
+
+
+def _is_tensor(x):
+    from ..core.shares import AShare
+    return isinstance(x, (AShare, jnp.ndarray, jax.Array))
+
+
+def _tree_add(eng, a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: eng.add(x, y), a, b,
+        is_leaf=lambda x: _is_tensor(x))
+
+
+def _tree_scale(eng, a, c):
+    # grads are averaged: power-of-two microbatch counts make this a free
+    # local shift; otherwise one truncation per leaf
+    return jax.tree_util.tree_map(
+        lambda x: eng.scale(x, c), a, is_leaf=lambda x: _is_tensor(x))
+
+
+def sgd_update(eng: Engine, params, grads, lr: float):
+    """w <- w - lr * g.  Engine-generic; grads tree mirrors params except
+    segment stacking (grads are stacked identically by the reverse scan)."""
+    def upd(w, g):
+        return eng.sub(w, eng.scale(g, lr))
+
+    new = {"embed": _tree_map2(eng, upd, params["embed"], grads["embed"]),
+           "final_norm": _tree_map2(eng, upd, params["final_norm"],
+                                    grads["final_norm"]),
+           "lm_head": _tree_map2(eng, upd, params["lm_head"],
+                                 grads["lm_head"])}
+    segs = []
+    for stacked, g in zip(params["segments"], grads["segments"]):
+        if stacked is None:
+            segs.append(None)
+            continue
+        segs.append(_tree_map2(eng, _stacked_upd(eng, lr), stacked, g))
+    new["segments"] = segs
+    if "shared_attn" in params:
+        new["shared_attn"] = _tree_map2(
+            eng, upd, params["shared_attn"], grads["shared_attn"])
+    return new
+
+
+def _stacked_upd(eng, lr):
+    """Stacked params/grads have layout (n, 4, ...) for Trident; protocols
+    expect the component axis leading -- transpose around the update."""
+    def f(w, g):
+        if isinstance(eng, TridentEngine):
+            from ..core.shares import AShare
+            ws = AShare(jnp.moveaxis(w.data, 0, 1))
+            gd = g.data if hasattr(g, "data") else g
+            gs = AShare(jnp.moveaxis(gd, 0, 1))
+            r = eng.sub(ws, eng.scale(gs, lr))
+            return AShare(jnp.moveaxis(r.data, 0, 1))
+        return eng.sub(w, eng.scale(g, lr))
+    return f
+
+
+def _tree_map2(eng, f, a, b):
+    return jax.tree_util.tree_map(
+        f, a, b, is_leaf=lambda x: _is_tensor(x))
+
+
+# ===========================================================================
+# Serving
+# ===========================================================================
+# KV caches are stored 2-component ([m, lam_sum]) -- per-party memory is
+# what a real deployment pays; the joint simulation's 4-component stack is
+# redundant for cached tensors (values/tallies identical; DESIGN.md 5).
+
+def kv_compress(eng, x):
+    if isinstance(eng, TridentEngine):
+        d = x.data
+        return jnp.stack([d[0], d[1] + d[2] + d[3]])
+    return x
+
+
+def kv_expand(eng, raw):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        z = jnp.zeros((2,) + raw.shape[1:], raw.dtype)
+        return AShare(jnp.concatenate([raw, z], axis=0))
+    return raw
+
+
+def _last_token(eng, x):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(x.data[:, :, -1:])
+    return x[:, -1:]
+
+
+def _stack_std(eng, x):
+    """Tensor -> scan-ys leaf; and back via _unstack_std."""
+    return _leaf(eng, x)
+
+
+def serve_prefill(eng: Engine, cfg: ModelConfig, params, ids,
+                  frontend_embs=None, enc_inputs=None, long_ctx=False):
+    """Prefill with q-chunked attention; returns (logits_last, caches).
+    caches: list aligned with cfg.segments():
+      ("kv", {"k","v"} raw (L,2,...))   attention segments
+      ("state", raw (L,2-comp...))      recurrent segments
+      ("enc_out", share)                encoder output (whisper)
+    Layers scan via jax.lax.scan (O(1) trace/HLO in depth)."""
+    x, _ = L.embedding_fwd(eng, params["embed"], ids)
+    if cfg.family == "vlm" and frontend_embs is not None:
+        x = eng.concat([frontend_embs, x], axis=1)
+
+    enc_out = None
+    caches = []
+    for (kind, count), stacked in zip(cfg.segments(),
+                                      params["segments"]):
+        if kind == "enc":
+            enc_out, _ = _seg_fwd(eng, cfg, kind, stacked, enc_inputs,
+                                  count)
+            caches.append(enc_out)
+            continue
+        if kind == "shared_attn":
+            x, kv = _shared_attn_infer(eng, cfg, params["shared_attn"], x,
+                                       long_ctx)
+            caches.append(jax.tree_util.tree_map(
+                lambda t: kv_compress(eng, t), kv,
+                is_leaf=_is_tensor))
+            continue
+        x, cache = _seg_infer_scan(eng, cfg, kind, stacked, x, count,
+                                   enc_out=enc_out, long_ctx=long_ctx)
+        caches.append(cache)
+
+    xn, _ = L.rmsnorm_fwd(eng, params["final_norm"], x)
+    last = _last_token(eng, xn)
+    logits, _ = L.linear_fwd(eng, params["lm_head"], last)
+    return logits, caches
+
+
+def _infer_block(eng, cfg, kind, p, x, enc_out, long_ctx):
+    """Forward-only block; returns (y, serve-cache dict of raw leaves)."""
+    window = (cfg.long_window if long_ctx else None) or cfg.window
+    if kind in ("attn_mlp", "enc", "attn_moe"):
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, kv = L.attention_prefill(eng, p["attn"],
+                                    cfg.attn_cfg(window=window), h,
+                                    q_chunk=cfg.q_chunk)
+        x1 = eng.add(x, a)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+        if kind == "attn_moe":
+            m, _ = B.moe_fwd(eng, p["moe"], cfg.moe_cfg(), h2)
+        else:
+            m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x1, m)
+        cache = {"k": kv_compress(eng, kv["k"]),
+                 "v": kv_compress(eng, kv["v"])}
+        if window is not None:
+            cache = {"k": cache["k"][..., -window:, :],
+                     "v": cache["v"][..., -window:, :]}
+        return y, cache
+    if kind == "retention":
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, _, st = R.retention_fwd(eng, p["ret"], cfg.ret_cfg(), h)
+        return eng.add(x, r), {"s": kv_compress(eng, st)}
+    if kind == "ret_slstm_pair":
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, _, st1 = R.retention_fwd(eng, p["ret"], cfg.ret_cfg(), h)
+        x1 = eng.add(x, r)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+        sl, _, st2 = R.slstm_fwd(eng, p["sl"], cfg.slstm_cfg(), h2)
+        return eng.add(x1, sl), {"s1": kv_compress(eng, st1),
+                                 "s2": kv_compress(eng, st2)}
+    if kind == "xattn_mlp":
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, kv = L.attention_prefill(eng, p["attn"], cfg.attn_cfg(), h,
+                                    q_chunk=cfg.q_chunk)
+        x1 = eng.add(x, a)
+        hx, _ = L.rmsnorm_fwd(eng, p["nx"], x1)
+        xa, _ = L.cross_attention_fwd(eng, p["xattn"], cfg.attn_cfg(),
+                                      hx, enc_out)
+        x2 = eng.add(x1, xa)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x2)
+        m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x2, m)
+        # per-layer cross-attention K/V of the encoder output, for decode
+        Hk, dh = cfg.n_kv_heads, cfg.dh
+        ek, _ = L.linear_fwd(eng, {"w": p["xattn"]["wk"]}, enc_out)
+        ev, _ = L.linear_fwd(eng, {"w": p["xattn"]["wv"]}, enc_out)
+        ek = L._split_heads(eng, ek, Hk, dh)
+        ev = L._split_heads(eng, ev, Hk, dh)
+        return y, {"k": kv_compress(eng, kv["k"]),
+                   "v": kv_compress(eng, kv["v"]),
+                   "enc_kv": {"k": kv_compress(eng, ek),
+                              "v": kv_compress(eng, ev)}}
+    raise ValueError(kind)
+
+
+def _seg_infer_scan(eng, cfg, kind, stacked, x, count, enc_out=None,
+                    long_ctx=False):
+    is_triv = isinstance(eng, TridentEngine)
+    keys = R._layer_keys(eng, count, f"inf_{kind}")
+
+    def body(carry, xs):
+        xi = _wrap(eng, carry)
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            y, cache = _infer_block(eng, cfg, kind, xs["p"], xi, enc_out,
+                                    long_ctx)
+        return _leaf(eng, y), {"c": cache, "ok": _checks_end(eng, mark)}
+
+    scope = eng.ctx.tally.scaled(count) if is_triv else _scan_ctx(eng)
+    with scope:
+        y, ys = jax.lax.scan(body, _leaf(eng, x),
+                             {"p": stacked, "key": keys})
+    _checks_absorb(eng, ys["ok"])
+    return _wrap(eng, y), ys["c"]
+
+
+def _shared_attn_infer(eng, cfg, p, x, long_ctx):
+    window = cfg.long_window if long_ctx else None
+    h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+    a, kv = L.attention_prefill(
+        eng, p["attn"], cfg.attn_cfg(window=window), h, q_chunk=cfg.q_chunk)
+    if window is not None:
+        kv = {"k": _window_slice(eng, kv["k"], window),
+              "v": _window_slice(eng, kv["v"], window)}
+    x1 = eng.add(x, a)
+    h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+    m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+    return eng.add(x1, m), kv
+
+
+def _window_slice(eng, x, w):
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        return AShare(x.data[:, :, :, -w:])
+    return x[:, :, -w:]
+
+
+def serve_decode(eng: Engine, cfg: ModelConfig, params, ids_last, caches,
+                 pos: int, long_ctx=False):
+    """One decode step: ids_last (B,1) public; caches from serve_prefill
+    (or dry-run stand-ins in the same layout).  Returns
+    (logits, new_caches).  Layer loops are lax.scans."""
+    x, _ = L.embedding_fwd(eng, params["embed"], ids_last)
+    new_caches = []
+    ci = 0
+    enc_out = None
+    for (kind, count), stacked in zip(cfg.segments(),
+                                      params["segments"]):
+        if kind == "enc":
+            enc_out = caches[ci]
+            new_caches.append(enc_out)
+            ci += 1
+            continue
+        if kind == "shared_attn":
+            kvc = caches[ci]
+            kv = {"k": kv_expand(eng, kvc["k"]),
+                  "v": kv_expand(eng, kvc["v"])}
+            p = params["shared_attn"]
+            window = cfg.long_window if long_ctx else None
+            h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+            a, kv2 = L.attention_decode(eng, p["attn"],
+                                        cfg.attn_cfg(window=window), h, kv,
+                                        pos)
+            x1 = eng.add(x, a)
+            h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+            m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+            x = eng.add(x1, m)
+            new_caches.append({"k": kv_compress(eng, kv2["k"]),
+                               "v": kv_compress(eng, kv2["v"])})
+            ci += 1
+            continue
+        seg_cache = caches[ci]
+        x, new_seg = _seg_decode_scan(eng, cfg, kind, stacked, x,
+                                      seg_cache, count, pos,
+                                      enc_out=enc_out, long_ctx=long_ctx)
+        new_caches.append(new_seg)
+        ci += 1
+    xn, _ = L.rmsnorm_fwd(eng, params["final_norm"], x)
+    logits, _ = L.linear_fwd(eng, params["lm_head"], xn)
+    return logits, new_caches
+
+
+def _decode_block(eng, cfg, kind, p, x, cache, pos, enc_out, long_ctx):
+    window = (cfg.long_window if long_ctx else None) or cfg.window
+    if kind in ("attn_mlp", "enc", "attn_moe"):
+        kv = {"k": kv_expand(eng, cache["k"]),
+              "v": kv_expand(eng, cache["v"])}
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, kv2 = L.attention_decode(eng, p["attn"],
+                                    cfg.attn_cfg(window=window), h, kv,
+                                    pos)
+        x1 = eng.add(x, a)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+        if kind == "attn_moe":
+            m, _ = B.moe_fwd(eng, p["moe"], cfg.moe_cfg(), h2)
+        else:
+            m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x1, m)
+        # windowed archs keep static cache size; others grow by one
+        nc = {"k": kv_compress(eng, kv2["k"]),
+              "v": kv_compress(eng, kv2["v"])}
+        return y, nc
+    if kind == "retention":
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, st = R.retention_step(eng, p["ret"], cfg.ret_cfg(), h,
+                                 kv_expand(eng, cache["s"]))
+        return eng.add(x, r), {"s": kv_compress(eng, st)}
+    if kind == "ret_slstm_pair":
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        r, st1 = R.retention_step(eng, p["ret"], cfg.ret_cfg(), h,
+                                  kv_expand(eng, cache["s1"]))
+        x1 = eng.add(x, r)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x1)
+        sl, st2 = R.slstm_step(eng, p["sl"], cfg.slstm_cfg(), h2,
+                               kv_expand(eng, cache["s2"]))
+        return eng.add(x1, sl), {"s1": kv_compress(eng, st1),
+                                 "s2": kv_compress(eng, st2)}
+    if kind == "xattn_mlp":
+        kv = {"k": kv_expand(eng, cache["k"]),
+              "v": kv_expand(eng, cache["v"])}
+        enc_kv = cache["enc_kv"]
+        h, _ = L.rmsnorm_fwd(eng, p["n1"], x)
+        a, kv2 = L.attention_decode(eng, p["attn"], cfg.attn_cfg(), h, kv,
+                                    pos)
+        x1 = eng.add(x, a)
+        hx, _ = L.rmsnorm_fwd(eng, p["nx"], x1)
+        xa = L.cross_attention_decode(
+            eng, p["xattn"], cfg.attn_cfg(), hx,
+            {"k": kv_expand(eng, enc_kv["k"]),
+             "v": kv_expand(eng, enc_kv["v"])})
+        x2 = eng.add(x1, xa)
+        h2, _ = L.rmsnorm_fwd(eng, p["n2"], x2)
+        m, _ = B.mlp_fwd(eng, p["mlp"], cfg.mlp_cfg(), h2)
+        y = eng.add(x2, m)
+        return y, {"k": kv_compress(eng, kv2["k"]),
+                   "v": kv_compress(eng, kv2["v"]), "enc_kv": enc_kv}
+    raise ValueError(kind)
+
+
+def _seg_decode_scan(eng, cfg, kind, stacked, x, seg_cache, count, pos,
+                     enc_out=None, long_ctx=False):
+    is_triv = isinstance(eng, TridentEngine)
+    keys = R._layer_keys(eng, count, f"dec_{kind}")
+
+    def body(carry, xs):
+        xi = _wrap(eng, carry)
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            y, nc = _decode_block(eng, cfg, kind, xs["p"], xi, xs["c"],
+                                  pos, enc_out, long_ctx)
+        return _leaf(eng, y), {"c": nc, "ok": _checks_end(eng, mark)}
+
+    scope = eng.ctx.tally.scaled(count) if is_triv else _scan_ctx(eng)
+    with scope:
+        y, ys = jax.lax.scan(body, _leaf(eng, x),
+                             {"p": stacked, "c": seg_cache, "key": keys})
+    _checks_absorb(eng, ys["ok"])
+    return _wrap(eng, y), ys["c"]
+
+
+def prepare_decode_caches(eng, cfg, prefill_caches):
+    """Identity today: serve_prefill already emits scan-layout caches."""
+    return prefill_caches

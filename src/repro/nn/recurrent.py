@@ -1,0 +1,623 @@
+"""Recurrent blocks over shares: retention-style matrix-state (Mamba2 /
+mLSTM MPC adaptation) and sLSTM-style scalar-state recurrence.
+
+MPC adaptation (DESIGN.md section Arch-applicability): input-dependent
+forget gates would need per-token secret cumulative-product reciprocals,
+which underflow fixed point and cost a reciprocal per token.  We use the
+RetNet-style *public per-head decay* a_h with *secret* input/output gates
+(the paper's sigmoid / silu on shares).  The linear recurrence under public
+decay is then communication-free: within a chunk it is a public decay-matrix
+contraction, across chunks a first-order carry -- only the q/k/v/gate
+projections and the state contractions pay Pi_MatMulTr cost.
+
+Chunked evaluation: seq split into chunks of C; jax.lax.scan carries the
+state.  Per-layer PRF keys are threaded via ctx.scan_keys so every chunk's
+offline material is an independent PRF stream (see context.py).
+
+Both blocks expose fwd / bwd (manual backprop, scan + reverse scan) and a
+single-token `step` for decode serving (O(1) state, used by long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, TridentEngine
+from .layers import linear_init, linear_fwd, linear_bwd
+
+
+# ---------------------------------------------------------------------------
+# Config / init
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RetentionConfig:
+    d_model: int
+    n_heads: int
+    d_k: int                 # state width (zamba2 ssm_state, e.g. 64)
+    d_v: int                 # value head dim (d_model // n_heads)
+    seq_chunk: int = 128
+    gate: str = "silu"       # silu | sigmoid | none
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMConfig:
+    d_model: int
+    n_heads: int
+    seq_chunk: int = 128
+
+
+def head_decays(n_heads: int) -> np.ndarray:
+    """Public per-head decay a_h = 1 - 2^-(5 + h*3/H) (RetNet schedule)."""
+    h = np.arange(n_heads)
+    return 1.0 - 2.0 ** (-5.0 - 3.0 * h / max(n_heads - 1, 1))
+
+
+def retention_init(rng, cfg: RetentionConfig):
+    d, H, dk, dv = cfg.d_model, cfg.n_heads, cfg.d_k, cfg.d_v
+    p = {
+        "wq": linear_init(rng, d, H * dk)["w"],
+        "wk": linear_init(rng, d, H * dk)["w"],
+        "wv": linear_init(rng, d, H * dv)["w"],
+        "wo": linear_init(rng, H * dv, d)["w"],
+    }
+    if cfg.gate != "none":
+        p["wg"] = linear_init(rng, d, H * dv)["w"]
+    return p
+
+
+def slstm_init(rng, cfg: SLSTMConfig):
+    d = cfg.d_model
+    return {
+        "wi": linear_init(rng, d, d)["w"],
+        "wz": linear_init(rng, d, d)["w"],
+        "wo": linear_init(rng, d, d)["w"],
+        "wout": linear_init(rng, d, d)["w"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Public decay tables (all plain numpy -- zero MPC cost to apply).
+# ---------------------------------------------------------------------------
+def _decay_tables(decay: np.ndarray, C: int):
+    """Per-head (H,) decay a -> public chunk tables:
+    D (H,C,C) lower-tri a^{i-j}; u (H,C) = a^{i+1}; w (H,C) = a^{C-1-j};
+    ac (H,) = a^C."""
+    i = np.arange(C)[:, None]
+    j = np.arange(C)[None, :]
+    expnt = np.clip(i - j, 0, None)
+    D = np.where(i >= j, decay[:, None, None] ** expnt[None], 0.0)
+    u = decay[:, None] ** (np.arange(C)[None, :] + 1)
+    w = decay[:, None] ** (C - 1 - np.arange(C)[None, :])
+    ac = decay ** C
+    return D, u, w, ac
+
+
+def _proj_heads(eng, x, w, H, dh):
+    """(B,S,D) @ w -> (B,H,S,dh)."""
+    y, cache = linear_fwd(eng, {"w": w}, x)
+    b, s, _ = eng.shape_of(x)
+    y = eng.reshape(y, (b, s, H, dh))
+    return eng.transpose(y, (0, 2, 1, 3)), cache
+
+
+def _unproj_heads(eng, y):
+    b, h, s, dh = eng.shape_of(y)
+    y = eng.transpose(y, (0, 2, 1, 3))
+    return eng.reshape(y, (b, s, h * dh))
+
+
+def _chunks(eng, x, C):
+    """(B,H,S,dh) -> (nc, B,H,C,dh) for scanning."""
+    b, h, s, dh = eng.shape_of(x)
+    nc = s // C
+    x = eng.reshape(x, (b, h, nc, C, dh))
+    return eng.transpose(x, (2, 0, 1, 3, 4)), nc
+
+
+def _unchunks(eng, x):
+    nc, b, h, C, dh = eng.shape_of(x)
+    x = eng.transpose(x, (1, 2, 0, 3, 4))
+    return eng.reshape(x, (b, h, nc * C, dh))
+
+
+def _leaf(eng, x):
+    return x.data if isinstance(eng, TridentEngine) else x
+
+
+def _scan_leaf(eng, x):
+    """Chunked tensor (nc, ...) -> scan xs leaf with the chunk axis leading
+    (AShare data is (4, nc, ...): move nc to the front)."""
+    return jnp.moveaxis(x.data, 1, 0) if isinstance(eng, TridentEngine) else x
+
+
+def _unscan_leaf(eng, ys):
+    """Stacked scan output (nc, 4, ...) -> chunked AShare ((4, nc, ...))."""
+    from ..core.shares import AShare
+    return AShare(jnp.moveaxis(ys, 0, 1)) if isinstance(eng, TridentEngine) \
+        else ys
+
+
+def _wrap(eng, x):
+    from ..core.shares import AShare
+    return AShare(x) if isinstance(eng, TridentEngine) else x
+
+
+def _scan_ctx(eng):
+    class _Null:
+        def __enter__(self):
+            return self
+
+        def __exit__(self, *a):
+            return False
+    return _Null()
+
+
+
+def _checks_begin(eng):
+    return eng.ctx.begin_body() if isinstance(eng, TridentEngine) else 0
+
+
+def _checks_end(eng, mark):
+    if isinstance(eng, TridentEngine):
+        return eng.ctx.end_body(mark)
+    return jnp.asarray(True)
+
+
+def _checks_absorb(eng, oks):
+    if isinstance(eng, TridentEngine):
+        eng.ctx.absorb_checks(oks)
+
+
+def _layer_keys(eng, n, tag):
+    if isinstance(eng, TridentEngine):
+        import zlib
+        tid = zlib.crc32(tag.encode()) & 0x7FFFFFFF   # deterministic
+        base = jax.random.fold_in(eng.ctx.keys.master, tid)
+        return jax.random.split(base, n)
+    return jnp.zeros((n, 2), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Retention forward: chunked scan.
+# ---------------------------------------------------------------------------
+def retention_fwd(eng: Engine, params, cfg: RetentionConfig, x,
+                  decay: np.ndarray | None = None, state=None):
+    """x: (B,S,D) -> (y, cache, new_state).  state: (B,H,dk,dv) or None."""
+    H, dk, dv, C = cfg.n_heads, cfg.d_k, cfg.d_v, cfg.seq_chunk
+    b, s, d = eng.shape_of(x)
+    C = min(C, s)
+    assert s % C == 0, (s, C)
+    decay = head_decays(H) if decay is None else decay
+    D, u, w, ac = _decay_tables(decay, C)
+
+    q, cq = _proj_heads(eng, x, params["wq"], H, dk)
+    k, ck = _proj_heads(eng, x, params["wk"], H, dk)
+    v, cv = _proj_heads(eng, x, params["wv"], H, dv)
+    scale = 1.0 / math.sqrt(dk)
+
+    qc, nc = _chunks(eng, q, C)           # (nc,B,H,C,dk)
+    kc, _ = _chunks(eng, k, C)
+    vc, _ = _chunks(eng, v, C)
+
+    if state is None:
+        state = eng.zeros((b, H, dk, dv))
+
+    keys = _layer_keys(eng, nc, "ret_fwd")
+    is_triv = isinstance(eng, TridentEngine)
+    tally_scope = eng.ctx.tally.scaled(nc) if is_triv else _scan_ctx(eng)
+
+    Dp = D[None]                                    # (1,H,C,C) public
+    up = u[None, :, :, None]                        # (1,H,C,1)
+    wp = w[None, :, :, None]
+    acp = ac[None, :, None, None]
+
+    def body(carry, xs):
+        Sm = _wrap(eng, carry)
+        qi = _wrap(eng, xs["q"])
+        ki = _wrap(eng, xs["k"])
+        vi = _wrap(eng, xs["v"])
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            s_qk = eng.matmul(qi, eng.transpose(ki, (0, 1, 3, 2)))
+            s_m = eng.mul_public(s_qk, Dp * scale)      # public decay mask
+            y_intra = eng.matmul(s_m, vi)
+            q_u = eng.mul_public(qi, np.broadcast_to(up * scale,
+                                                     (1, H, C, 1)))
+            y_inter = eng.matmul(q_u, Sm)
+            kw = eng.mul_public(ki, np.broadcast_to(wp, (1, H, C, 1)))
+            S_new = eng.add(
+                eng.mul_public(Sm, np.broadcast_to(acp, (1, H, 1, 1))),
+                eng.matmul(eng.transpose(kw, (0, 1, 3, 2)), vi))
+            y = eng.add(y_intra, y_inter)
+        return _leaf(eng, S_new), {"y": _leaf(eng, y), "Sm": _leaf(eng, Sm),
+                                   "ok": _checks_end(eng, mark)}
+
+    with tally_scope:
+        final_state, ys = jax.lax.scan(
+            body, _leaf(eng, state),
+            {"q": _scan_leaf(eng, qc), "k": _scan_leaf(eng, kc),
+             "v": _scan_leaf(eng, vc), "key": keys})
+    _checks_absorb(eng, ys["ok"])
+    yc = _unscan_leaf(eng, ys["y"])
+    y_heads = _unchunks(eng, yc)                    # (B,H,S,dv)
+    y_flat = _unproj_heads(eng, y_heads)            # (B,S,H*dv)
+
+    gate_cache = None
+    if cfg.gate != "none":
+        g_lin, cg = linear_fwd(eng, {"w": params["wg"]}, x)
+        if cfg.gate == "silu":
+            g, cact = eng.silu(g_lin)
+        else:
+            g, cact = eng.sigmoid(g_lin)
+        y_flat_g = eng.mul(y_flat, g)
+        gate_cache = (cg, cact, g, y_flat)
+        y_flat = y_flat_g
+    out, co = linear_fwd(eng, {"w": params["wo"]}, y_flat)
+    # NB: decay is NOT cached (it is a static config-derived table; caching
+    # it would drag a numpy constant through scan ys and trace-poison bwd)
+    cache = (cq, ck, cv, q, k, v, ys["Sm"], gate_cache, co)
+    return out, cache, _wrap(eng, final_state)
+
+
+def retention_bwd(eng: Engine, params, cfg: RetentionConfig, cache, dy,
+                  d_state=None, decay: np.ndarray | None = None):
+    """Reverse-chunk scan; returns (dx, grads)."""
+    cq, ck, cv, q, k, v, Sm_stack, gate_cache, co = cache
+    H, dk, dv = cfg.n_heads, cfg.d_k, cfg.d_v
+    decay = head_decays(H) if decay is None else decay
+    b, _, s, _ = eng.shape_of(q)
+    C = min(cfg.seq_chunk, s)
+    D, u, w, ac = _decay_tables(decay, C)
+    scale = 1.0 / math.sqrt(dk)
+
+    dflat, g_o = linear_bwd(eng, {"w": params["wo"]}, co, dy)
+    grads = {"wo": g_o["w"]}
+    dx_extra = None
+    if gate_cache is not None:
+        cg, cact, g, y_pre = gate_cache
+        dg = eng.mul(dflat, y_pre)
+        dflat = eng.mul(dflat, g)
+        if cfg.gate == "silu":
+            dg_lin = eng.silu_bwd(cact, dg)
+        else:
+            dg_lin = eng.sigmoid_bwd(cact, dg)
+        dx_extra, g_g = linear_bwd(eng, {"w": params["wg"]}, cg, dg_lin)
+        grads["wg"] = g_g["w"]
+
+    dyh = _split_like(eng, dflat, H, dv)            # (B,H,S,dv)
+    dyc, nc = _chunks(eng, dyh, C)
+    qc, _ = _chunks(eng, q, C)
+    kc, _ = _chunks(eng, k, C)
+    vc, _ = _chunks(eng, v, C)
+
+    if d_state is None:
+        d_state = eng.zeros((b, H, dk, dv))
+
+    keys = _layer_keys(eng, nc, "ret_bwd")
+    is_triv = isinstance(eng, TridentEngine)
+    tally_scope = eng.ctx.tally.scaled(nc) if is_triv else _scan_ctx(eng)
+
+    Dp = D[None]
+    up = u[None, :, :, None]
+    wp = w[None, :, :, None]
+    acp = ac[None, :, None, None]
+
+    def body(carry, xs):
+        dS = _wrap(eng, carry)                       # dL/dS' (post-chunk)
+        qi, ki, vi = (_wrap(eng, xs["q"]), _wrap(eng, xs["k"]),
+                      _wrap(eng, xs["v"]))
+        dyi = _wrap(eng, xs["dy"])
+        Sm = _wrap(eng, xs["Sm"])
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            # recompute masked scores (remat -- cheaper than storing S x C)
+            s_qk = eng.matmul(qi, eng.transpose(ki, (0, 1, 3, 2)))
+            s_m = eng.mul_public(s_qk, Dp * scale)
+            kw = eng.mul_public(ki, np.broadcast_to(wp, (1, H, C, 1)))
+            q_u = eng.mul_public(qi, np.broadcast_to(up * scale,
+                                                     (1, H, C, 1)))
+
+            # S' = ac*Sm + kw^T v  |  y = s_m v + q_u Sm
+            dvi = eng.add(eng.matmul(eng.transpose(s_m, (0, 1, 3, 2)), dyi),
+                          eng.matmul(kw, dS))
+            ds_m = eng.matmul(dyi, eng.transpose(vi, (0, 1, 3, 2)))
+            ds_qk = eng.mul_public(ds_m, Dp * scale)
+            dq = eng.add(eng.matmul(ds_qk, ki),
+                         eng.mul_public(
+                             eng.matmul(dyi, eng.transpose(Sm, (0, 1, 3, 2))),
+                             np.broadcast_to(up * scale, (1, H, C, 1))))
+            dkw = eng.matmul(vi, eng.transpose(dS, (0, 1, 3, 2)))
+            dki = eng.add(eng.matmul(eng.transpose(ds_qk, (0, 1, 3, 2)), qi),
+                          eng.mul_public(dkw,
+                                         np.broadcast_to(wp, (1, H, C, 1))))
+            dSm = eng.add(
+                eng.mul_public(dS, np.broadcast_to(acp, (1, H, 1, 1))),
+                eng.matmul(eng.transpose(q_u, (0, 1, 3, 2)), dyi))
+        return _leaf(eng, dSm), {"dq": _leaf(eng, dq), "dk": _leaf(eng, dki),
+                                 "dv": _leaf(eng, dvi),
+                                 "ok": _checks_end(eng, mark)}
+
+    with tally_scope:
+        d_state0, dqkv = jax.lax.scan(
+            body, _leaf(eng, d_state),
+            {"q": _scan_leaf(eng, qc), "k": _scan_leaf(eng, kc),
+             "v": _scan_leaf(eng, vc), "dy": _scan_leaf(eng, dyc),
+             "Sm": Sm_stack, "key": keys},
+            reverse=True)
+
+    _checks_absorb(eng, dqkv["ok"])
+    dq = _unchunks(eng, _unscan_leaf(eng, dqkv["dq"]))
+    dk = _unchunks(eng, _unscan_leaf(eng, dqkv["dk"]))
+    dv = _unchunks(eng, _unscan_leaf(eng, dqkv["dv"]))
+    dx1, g_q = linear_bwd(eng, {"w": params["wq"]}, cq, _unproj_heads(eng, dq))
+    dx2, g_k = linear_bwd(eng, {"w": params["wk"]}, ck, _unproj_heads(eng, dk))
+    dx3, g_v = linear_bwd(eng, {"w": params["wv"]}, cv, _unproj_heads(eng, dv))
+    grads.update({"wq": g_q["w"], "wk": g_k["w"], "wv": g_v["w"]})
+    dx = eng.add(eng.add(dx1, dx2), dx3)
+    if dx_extra is not None:
+        dx = eng.add(dx, dx_extra)
+    return dx, grads
+
+
+def retention_step(eng: Engine, params, cfg: RetentionConfig, x, state,
+                   decay: np.ndarray | None = None):
+    """Single-token decode: x (B,1,D), state (B,H,dk,dv).
+    y_t = q_t (a S + k_t^T v_t);  S' = a S + k_t^T v_t  (O(1) memory)."""
+    H, dk, dv = cfg.n_heads, cfg.d_k, cfg.d_v
+    decay = head_decays(H) if decay is None else decay
+    q, _ = _proj_heads(eng, x, params["wq"], H, dk)   # (B,H,1,dk)
+    k, _ = _proj_heads(eng, x, params["wk"], H, dk)
+    v, _ = _proj_heads(eng, x, params["wv"], H, dv)
+    a = decay[None, :, None, None]
+    S_dec = eng.mul_public(state, np.broadcast_to(a, (1, H, 1, 1)))
+    S_new = eng.add(S_dec, eng.matmul(eng.transpose(k, (0, 1, 3, 2)), v))
+    y = eng.matmul(eng.mul_public(q, 1.0 / math.sqrt(dk)), S_new)
+    y_flat = _unproj_heads(eng, y)
+    if cfg.gate != "none":
+        g_lin, _ = linear_fwd(eng, {"w": params["wg"]}, x)
+        g, _ = eng.silu(g_lin) if cfg.gate == "silu" else eng.sigmoid(g_lin)
+        y_flat = eng.mul(y_flat, g)
+    out, _ = linear_fwd(eng, {"w": params["wo"]}, y_flat)
+    return out, S_new
+
+
+def _split_like(eng, x, H, dh):
+    b, s, _ = eng.shape_of(x)
+    x = eng.reshape(x, (b, s, H, dh))
+    return eng.transpose(x, (0, 2, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM-style block: scalar state per channel, public per-head decay.
+# ---------------------------------------------------------------------------
+def _slstm_tables(decay: np.ndarray, C: int, d_model: int):
+    H = decay.shape[0]
+    rep = d_model // H
+    f = np.repeat(decay, rep)                      # (D,) per-channel decay
+    i = np.arange(C)[:, None]
+    j = np.arange(C)[None, :]
+    expnt = np.clip(i - j, 0, None)
+    # Df: (D, C, C) would be big; factor as per-head (H,C,C) applied blockwise
+    Dh = np.where(i >= j, decay[:, None, None] ** expnt[None], 0.0)
+    u = decay[:, None] ** (np.arange(C)[None, :] + 1)   # (H,C)
+    ac = decay ** C
+    return f, Dh, u, ac
+
+
+def slstm_fwd(eng: Engine, params, cfg: SLSTMConfig, x,
+              decay: np.ndarray | None = None, state=None):
+    """x: (B,S,D).  c_t = f c_{t-1} + i_t*z_t ; h_t = o_t * c_t.
+    With public f the c-recurrence is a public lower-triangular contraction
+    (LOCAL: zero communication); only i*z and o*c pay Pi_Mult."""
+    d, H, C = cfg.d_model, cfg.n_heads, cfg.seq_chunk
+    b, s, _ = eng.shape_of(x)
+    C = min(C, s)
+    assert s % C == 0
+    decay = head_decays(H) if decay is None else decay
+    _, Dh, u, ac = _slstm_tables(decay, C, d)
+
+    i_lin, ci = linear_fwd(eng, {"w": params["wi"]}, x)
+    z, cz = linear_fwd(eng, {"w": params["wz"]}, x)
+    o_lin, c_o = linear_fwd(eng, {"w": params["wo"]}, x)
+    i_g, ci_act = eng.sigmoid(i_lin)
+    o_g, co_act = eng.sigmoid(o_lin)
+    iz = eng.mul(i_g, z)                          # (B,S,D) secret product
+
+    # chunked public recurrence: reshape to heads (B,H,S,dh)
+    dh = d // H
+    izh = _split_like(eng, iz, H, dh)
+    izc, nc = _chunks(eng, izh, C)                # (nc,B,H,C,dh)
+    if state is None:
+        state = eng.zeros((b, H, 1, dh))
+
+    Dp = Dh[None]                                 # (1,H,C,C) public
+    up = u[None, :, :, None]                      # (1,H,C,1)
+    acp = ac[None, :, None, None]
+
+    is_triv = isinstance(eng, TridentEngine)
+    keys = _layer_keys(eng, nc, "slstm_fwd")
+
+    def body(carry, xs):
+        c_prev = _wrap(eng, carry)                # (B,H,1,dh)
+        izi = _wrap(eng, xs["iz"])
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            # intra: c_rel = Dp @ iz  (public matmul => local, zero comm)
+            c_intra = _pub_left(eng, Dp, izi)
+            c_inter = eng.mul_public(
+                _bcast_chunk(eng, c_prev, C),
+                np.broadcast_to(up, (1, H, C, 1)))
+            c = eng.add(c_intra, c_inter)
+            c_last = eng.add(
+                eng.mul_public(c_prev, np.broadcast_to(acp, (1, H, 1, 1))),
+                _last_of_chunk_weighted(eng, izi, decay, C))
+        return _leaf(eng, c_last), {"c": _leaf(eng, c),
+                                    "ok": _checks_end(eng, mark)}
+
+    tally_scope = eng.ctx.tally.scaled(nc) if is_triv else _scan_ctx(eng)
+    with tally_scope:
+        final_c, cs = jax.lax.scan(body, _leaf(eng, state),
+                                   {"iz": _scan_leaf(eng, izc), "key": keys})
+    _checks_absorb(eng, cs["ok"])
+    c_full = _unproj_heads(eng, _unchunks(eng, _unscan_leaf(eng, cs["c"])))
+
+    h = eng.mul(o_g, c_full)
+    y, c_out = linear_fwd(eng, {"w": params["wout"]}, h)
+    cache = (ci, cz, c_o, ci_act, co_act, i_g, z, o_g, c_full, c_out)
+    return y, cache, _wrap(eng, final_c)
+
+
+def _pub_left(eng, Dp, x):
+    """(1,H,C,C) public @ (B,H,C,dh) share: local linear contraction
+    (public weights) + one truncation for the fixed-point rescale."""
+    if isinstance(eng, TridentEngine):
+        ring = eng.ring
+        enc = ring.encode(Dp[0])                       # (H,C,C) fixed point
+        prod = jnp.einsum("hct,kbhtd->kbhcd", enc, x.data,
+                          preferred_element_type=ring.dtype)
+        return _trunc_pub(eng, prod)
+    return jnp.einsum("hct,bhtd->bhcd", jnp.asarray(Dp[0], x.dtype), x)
+
+
+def _trunc_pub(eng, prod_data):
+    """Truncate a public-matrix contraction result (one Pi_Trunc)."""
+    from ..core.shares import AShare
+    from ..core import protocols as PR
+    return PR.truncate_share(eng.ctx, AShare(prod_data.astype(
+        eng.ring.dtype)))
+
+
+def _bcast_chunk(eng, c_prev, C):
+    """(B,H,1,dh) -> (B,H,C,dh) broadcast."""
+    if isinstance(eng, TridentEngine):
+        from ..core.shares import AShare
+        d = c_prev.data
+        return AShare(jnp.broadcast_to(d, d.shape[:3] + (C,) + d.shape[4:]))
+    return jnp.broadcast_to(c_prev, c_prev.shape[:2] + (C,) +
+                            c_prev.shape[3:])
+
+
+def _last_of_chunk_weighted(eng, izi, decay, C):
+    """sum_j a^{C-1-j} iz_j  -> (B,H,1,dh): public weights, local."""
+    H = decay.shape[0]
+    wgt = decay[:, None] ** (C - 1 - np.arange(C)[None, :])   # (H,C)
+    if isinstance(eng, TridentEngine):
+        ring = eng.ring
+        enc = ring.encode(wgt)
+        s = jnp.einsum("hc,kbhcd->kbhd", enc, izi.data,
+                       preferred_element_type=ring.dtype)
+        return _trunc_pub(eng, s[:, :, :, None, :])
+    return jnp.einsum("hc,bhcd->bhd", jnp.asarray(wgt, izi.dtype),
+                      izi)[:, :, None, :]
+
+
+def slstm_bwd(eng: Engine, params, cfg: SLSTMConfig, cache, dy,
+              decay: np.ndarray | None = None):
+    """Backward through the public recurrence (transpose contraction is also
+    local) and the secret gate products."""
+    (ci, cz, c_o, ci_act, co_act, i_g, z, o_g, c_full, c_out) = cache
+    d, H = cfg.d_model, cfg.n_heads
+    decay = head_decays(H) if decay is None else decay
+    b, s, _ = eng.shape_of(c_full)
+    C = min(cfg.seq_chunk, s)
+    _, Dh, u, ac = _slstm_tables(decay, C, d)
+
+    dh_, g_out = linear_bwd(eng, {"w": params["wout"]}, c_out, dy)
+    grads = {"wout": g_out["w"]}
+    do = eng.mul(dh_, c_full)
+    dc_full = eng.mul(dh_, o_g)
+
+    # backward of c = cumulative public contraction: dc flows through D^T
+    # (upper-triangular decay), again local.  We ignore the cross-chunk
+    # carry gradient's effect beyond one chunk boundary via the exact
+    # reverse scan below.
+    dhd = d // H
+    dcc, nc = _chunks(eng, _split_like(eng, dc_full, H, dhd), C)
+    Dt = np.swapaxes(Dh, -1, -2)[None]             # (1,H,C,C) upper-tri
+    up = u[None, :, :, None]
+    acp = ac[None, :, None, None]
+
+    # w_j = a^{C-1-j}: weight of iz_j inside c_last (the carry node)
+    wlast = (decay[:, None] ** (C - 1 - np.arange(C)[None, :]))[
+        None, :, :, None]                          # (1,H,C,1)
+    is_triv = isinstance(eng, TridentEngine)
+    keys = _layer_keys(eng, nc, "slstm_bwd")
+
+    def body(carry, xs):
+        dcarry = _wrap(eng, carry)                 # (B,H,1,dh) dL/dc_last
+        dci = _wrap(eng, xs["dc"])
+        kctx = eng.ctx.scan_keys(xs["key"]) if is_triv else _scan_ctx(eng)
+        mark = _checks_begin(eng)
+        with kctx:
+            # diz_j = sum_{i>=j} a^{i-j} dc_i (+ a^{C-1-j} dcarry via c_last)
+            diz = eng.add(
+                _pub_left(eng, Dt, dci),
+                eng.mul_public(_bcast_chunk(eng, dcarry, C),
+                               np.broadcast_to(wlast, (1, H, C, 1))))
+            # dc_prev = a^C dcarry + sum_i a^{i+1} dc_i
+            dc_prev = eng.add(
+                eng.mul_public(dcarry, np.broadcast_to(acp, (1, H, 1, 1))),
+                _weighted_sum(eng, dci, decay, C))
+        return _leaf(eng, dc_prev), {"diz": _leaf(eng, diz),
+                                     "ok": _checks_end(eng, mark)}
+
+    tally_scope = eng.ctx.tally.scaled(nc) if is_triv else _scan_ctx(eng)
+    with tally_scope:
+        _, dizc = jax.lax.scan(body, _leaf(eng, eng.zeros((b, H, 1, dhd))),
+                               {"dc": _scan_leaf(eng, dcc), "key": keys},
+                               reverse=True)
+    _checks_absorb(eng, dizc["ok"])
+    diz = _unproj_heads(eng, _unchunks(eng, _unscan_leaf(eng, dizc["diz"])))
+
+    di = eng.mul(diz, z)
+    dz = eng.mul(diz, i_g)
+    di_lin = eng.sigmoid_bwd(ci_act, di)
+    do_lin = eng.sigmoid_bwd(co_act, do)
+    dx1, g_i = linear_bwd(eng, {"w": params["wi"]}, ci, di_lin)
+    dx2, g_z = linear_bwd(eng, {"w": params["wz"]}, cz, dz)
+    dx3, g_o = linear_bwd(eng, {"w": params["wo"]}, c_o, do_lin)
+    grads.update({"wi": g_i["w"], "wz": g_z["w"], "wo": g_o["w"]})
+    return eng.add(eng.add(dx1, dx2), dx3), grads
+
+
+def _weighted_sum(eng, dci, decay, C):
+    """sum_i a^{i+1} dc_i -> (B,H,1,dh): public weights, local."""
+    H = decay.shape[0]
+    wgt = decay[:, None] ** (np.arange(C)[None, :] + 1)
+    if isinstance(eng, TridentEngine):
+        ring = eng.ring
+        enc = ring.encode(wgt)
+        s = jnp.einsum("hc,kbhcd->kbhd", enc, dci.data,
+                       preferred_element_type=ring.dtype)
+        return _trunc_pub(eng, s[:, :, :, None, :])
+    return jnp.einsum("hc,bhcd->bhd", jnp.asarray(wgt, dci.dtype),
+                      dci)[:, :, None, :]
+
+
+def slstm_step(eng: Engine, params, cfg: SLSTMConfig, x, state,
+               decay: np.ndarray | None = None):
+    """Single-token decode: c' = f c + i*z ; h = o * c'.
+    state layout matches slstm_fwd's carry: (B, H, 1, d//H)."""
+    d, H = cfg.d_model, cfg.n_heads
+    decay = head_decays(H) if decay is None else decay
+    i_lin, _ = linear_fwd(eng, {"w": params["wi"]}, x)
+    z, _ = linear_fwd(eng, {"w": params["wz"]}, x)
+    o_lin, _ = linear_fwd(eng, {"w": params["wo"]}, x)
+    i_g, _ = eng.sigmoid(i_lin)
+    o_g, _ = eng.sigmoid(o_lin)
+    iz = eng.mul(i_g, z)                           # (B,1,D)
+    izh = _split_like(eng, iz, H, d // H)          # (B,H,1,dh)
+    a = decay[None, :, None, None]
+    c_new = eng.add(eng.mul_public(state, np.broadcast_to(a, (1, H, 1, 1))),
+                    izh)
+    c_flat = _unproj_heads(eng, c_new)             # (B,1,D)
+    h = eng.mul(o_g, c_flat)
+    y, _ = linear_fwd(eng, {"w": params["wout"]}, h)
+    return y, c_new

@@ -1,0 +1,87 @@
+"""Data pipeline: deterministic, restart-safe batching.
+
+Synthetic generators for the paper's workloads (regression tasks with a
+planted model; MNIST-like 784-feature classification) plus LM token
+streams for the transformer archs.  Batches are a pure function of
+(seed, step), so a restarted trainer resumes mid-epoch with identical
+batches -- the data-side half of fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RegressionData:
+    """y = X w* + noise, for linear/logistic regression training."""
+    features: int
+    n: int = 4096
+    seed: int = 0
+    logistic: bool = False
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.w_star = rng.randn(self.features, 1) * 0.5
+        self.X = rng.randn(self.n, self.features).astype(np.float64)
+        z = self.X @ self.w_star + 0.01 * rng.randn(self.n, 1)
+        if self.logistic:
+            self.y = (z > 0).astype(np.float64)
+        else:
+            self.y = z
+
+    def batch(self, step: int, bsz: int):
+        rng = np.random.RandomState(self.seed ^ (step * 2654435761 % 2**31))
+        idx = rng.randint(0, self.n, bsz)
+        return self.X[idx], self.y[idx]
+
+
+@dataclasses.dataclass
+class MNISTLike:
+    """784-feature, 10-class synthetic images (class-dependent templates +
+    noise) -- stands in for MNIST in the offline container."""
+    n: int = 8192
+    seed: int = 0
+    features: int = 784
+    classes: int = 10
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.templates = rng.randn(self.classes, self.features) * 0.8
+        self.labels = rng.randint(0, self.classes, self.n)
+        self.X = (self.templates[self.labels]
+                  + rng.randn(self.n, self.features) * 0.7).astype(
+                      np.float64)
+
+    def batch(self, step: int, bsz: int):
+        rng = np.random.RandomState(self.seed ^ (step * 2654435761 % 2**31))
+        idx = rng.randint(0, self.n, bsz)
+        onehot = np.eye(self.classes)[self.labels[idx]]
+        return self.X[idx], onehot, self.labels[idx]
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Synthetic LM corpus: a Markov bigram chain over `vocab`, so there is
+    actual structure for the model to learn in convergence tests."""
+    vocab: int
+    seed: int = 0
+    order: int = 1
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # sparse-ish bigram transition: each token strongly predicts a few
+        self.next_tok = rng.randint(0, self.vocab, (self.vocab, 4))
+
+    def batch(self, step: int, bsz: int, seq: int):
+        rng = np.random.RandomState(self.seed ^ (step * 40503 % 2**31))
+        toks = np.empty((bsz, seq + 1), np.int32)
+        toks[:, 0] = rng.randint(0, self.vocab, bsz)
+        for t in range(seq):
+            choice = rng.randint(0, 4, bsz)
+            noise = rng.random(bsz) < 0.1
+            nxt = self.next_tok[toks[:, t], choice]
+            nxt = np.where(noise, rng.randint(0, self.vocab, bsz), nxt)
+            toks[:, t + 1] = nxt
+        return toks[:, :-1], toks[:, 1:]

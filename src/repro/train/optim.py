@@ -1,0 +1,91 @@
+"""Optimizers on [[.]]-shares.
+
+All state (momentum buffers) stays secret-shared; the hyperparameters
+(lr, beta) are public.  Updates are linear except the public-constant
+scalings, each of which costs one truncation (Pi_Trunc) -- lr and beta are
+chosen as powers of two by default so the scaling is a free local shift
+(TridentEngine.scale special-cases powers of two).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from ..nn.engine import Engine, TridentEngine
+
+
+def _is_tensor(x):
+    from ..core.shares import AShare
+    import jax.numpy as jnp
+    return isinstance(x, (AShare, jnp.ndarray, jax.Array))
+
+
+def tree_map2(eng, f, a, b):
+    """tree_map that passes through non-tensor leaves (segment kind tags)."""
+    def g(x, y):
+        return f(x, y) if _is_tensor(x) else x
+    return jax.tree_util.tree_map(g, a, b, is_leaf=_is_tensor)
+
+
+def _as_protocol_layout(eng, x):
+    """Scan-stacked Trident leaves are (n, 4, ...); protocols want the
+    component axis first.  Returns (tensor, restore_fn)."""
+    import jax.numpy as jnp
+    from ..core.shares import AShare
+    if isinstance(eng, TridentEngine) and isinstance(x, AShare) \
+            and x.data.ndim >= 2 and x.data.shape[0] != 4 \
+            and x.data.shape[1] == 4:
+        t = AShare(jnp.moveaxis(x.data, 0, 1))
+        return t, lambda r: AShare(jnp.moveaxis(r.data, 0, 1))
+    return x, lambda r: r
+
+
+@dataclasses.dataclass
+class SGD:
+    lr: float = 2.0 ** -6            # power of two: truncation-free scaling
+
+    def init(self, eng, params):
+        return None
+
+    def update(self, eng: Engine, params, grads, state):
+        def f(w, g):
+            w2, restore_w = _as_protocol_layout(eng, w)
+            g2, _ = _as_protocol_layout(eng, g)
+            return restore_w(eng.sub(w2, eng.scale(g2, self.lr)))
+        return tree_map2(eng, f, params, grads), None
+
+
+@dataclasses.dataclass
+class Momentum:
+    """Polyak momentum: m <- beta*m + g ; w <- w - lr*m (shares)."""
+    lr: float = 2.0 ** -6
+    beta: float = 0.875              # 1 - 2^-3: one truncation per step
+
+    def init(self, eng, params):
+        def z(w):
+            if not _is_tensor(w):
+                return w
+            if isinstance(eng, TridentEngine):
+                w2, restore = _as_protocol_layout(eng, w)
+                return restore(eng.zeros(eng.shape_of(w2)))
+            return eng.zeros(eng.shape_of(w))
+        return jax.tree_util.tree_map(z, params, is_leaf=_is_tensor)
+
+    def update(self, eng: Engine, params, grads, state):
+        new_m = {}
+
+        def fm(m, g):
+            m2, restore = _as_protocol_layout(eng, m)
+            g2, _ = _as_protocol_layout(eng, g)
+            return restore(eng.add(eng.scale(m2, self.beta), g2))
+
+        new_m = tree_map2(eng, fm, state, grads)
+
+        def fw(w, m):
+            w2, restore = _as_protocol_layout(eng, w)
+            m2, _ = _as_protocol_layout(eng, m)
+            return restore(eng.sub(w2, eng.scale(m2, self.lr)))
+
+        new_p = tree_map2(eng, fw, params, new_m)
+        return new_p, new_m

@@ -1,0 +1,129 @@
+"""The paper's four ML workloads over the Engine (Section VI).
+
+Linear Regression  w <- w - a/B X^T (X w - y)            (Section VI-A a)
+Logistic Regression  ... sig(X w) ...                    (Section VI-A b)
+NN    784-128-128-10, ReLU hidden, smx output            (Section VI-A c)
+CNN   conv replaced by FC (the paper overestimates too): 784-980-100-10
+
+All matmuls are Pi_MatMulTr (communication independent of the contraction
+length -- the paper's headline dot-product property); activations are the
+paper's protocols.  fwd/bwd are manual, engine-generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.engine import Engine, TridentEngine
+
+
+# ---------------------------------------------------------------------------
+# Linear / logistic regression
+# ---------------------------------------------------------------------------
+def reg_init(rng: np.random.RandomState, d: int):
+    return {"w": (rng.randn(d, 1) * 0.01).astype(np.float64)}
+
+
+def linreg_step(eng: Engine, params, X, y, lr: float):
+    """One GD iteration; X: (B,d), y: (B,1) engine tensors."""
+    pred = eng.matmul(X, params["w"])                   # (B,1)
+    err = eng.sub(pred, y)
+    grad = eng.matmul(eng.transpose(X, (1, 0)), err)    # (d,1)
+    bsz = eng.shape_of(X)[0]
+    upd = eng.scale(grad, lr / bsz)
+    return {"w": eng.sub(params["w"], upd)}, err
+
+
+def logreg_step(eng: Engine, params, X, y, lr: float):
+    z = eng.matmul(X, params["w"])
+    p, cache = eng.sigmoid(z)
+    err = eng.sub(p, y)
+    grad = eng.matmul(eng.transpose(X, (1, 0)), err)
+    bsz = eng.shape_of(X)[0]
+    upd = eng.scale(grad, lr / bsz)
+    return {"w": eng.sub(params["w"], upd)}, err
+
+
+def reg_predict(eng: Engine, params, X, logistic: bool = False):
+    z = eng.matmul(X, params["w"])
+    if logistic:
+        p, _ = eng.sigmoid(z)
+        return p
+    return z
+
+
+# ---------------------------------------------------------------------------
+# NN / CNN (MLP stack per the paper's benchmark networks)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MLPNet:
+    features: int
+    layers: tuple                     # e.g. (128, 128, 10)
+
+    @property
+    def dims(self):
+        return (self.features,) + tuple(self.layers)
+
+
+def mlp_net_init(rng, net: MLPNet):
+    dims = net.dims
+    return {f"w{i}": (rng.randn(dims[i], dims[i + 1]) /
+                      np.sqrt(dims[i])).astype(np.float64)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_net_fwd(eng: Engine, params, net: MLPNet, X):
+    """Returns (probs, caches).  Hidden ReLU; output smx softmax."""
+    h = X
+    caches = []
+    n = len(net.dims) - 1
+    for i in range(n):
+        z = eng.matmul(h, params[f"w{i}"])
+        if i < n - 1:
+            a, bit = eng.relu(z)
+            caches.append((h, bit))
+            h = a
+        else:
+            p, csm = eng.softmax(z, axis=-1)
+            caches.append((h, csm))
+            h = p
+    return h, caches
+
+
+def mlp_net_bwd(eng: Engine, params, net: MLPNet, caches, dout):
+    """dout = dL/dprobs-pre-softmax convention: we pass (p - y)/B directly
+    as dlogits (cross-entropy shortcut), so the last cache's softmax bwd is
+    skipped."""
+    n = len(net.dims) - 1
+    grads = {}
+    dz = dout
+    for i in reversed(range(n)):
+        h, aux = caches[i]
+        grads[f"w{i}"] = eng.matmul(eng.transpose(
+            eng.reshape(h, (-1, net.dims[i])), (1, 0)), dz)
+        if i > 0:
+            dh = eng.matmul(dz, eng.transpose(params[f"w{i}"], (1, 0)))
+            _, bit = caches[i - 1]
+            dz = eng.relu_bwd(bit, dh)
+    return grads
+
+
+def mlp_net_step(eng: Engine, params, net: MLPNet, X, labels_onehot,
+                 lr: float):
+    """One training iteration (fwd + bwd + SGD)."""
+    p, caches = mlp_net_fwd(eng, params, net, X)
+    bsz = eng.shape_of(X)[0]
+    diff = eng.add_public(p, -np.asarray(labels_onehot, np.float64))
+    dlogits = eng.scale(diff, 1.0 / bsz)
+    grads = mlp_net_bwd(eng, params, net, caches, dlogits)
+    new = {k: eng.sub(params[k], eng.scale(grads[k], lr))
+           for k in params}
+    return new, p
+
+
+def mlp_net_predict(eng: Engine, params, net: MLPNet, X):
+    p, _ = mlp_net_fwd(eng, params, net, X)
+    return p

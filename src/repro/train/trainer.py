@@ -1,0 +1,120 @@
+"""Training loop with the paper's offline-online pipelining + fault
+tolerance.
+
+Offline-online pipelining (Section I "Offline-online paradigm"): the
+offline trace of step t+1 (pure function of the PRF keys and the static
+step index) is produced while the online trace of step t runs.  In the
+joint simulation both are jitted functions; the trainer keeps a
+double-buffered material queue so a slow offline producer (the straggler
+case: P0's preprocessing) never blocks the online critical path until the
+buffer drains.
+
+Fault tolerance: abort flags from the malicious checks and injected crash
+points route to checkpoint restore; PRF counters are step-indexed so the
+replayed step is bit-identical.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt_lib
+from ..core.context import make_context
+from ..core.ring import RING64
+from ..nn.engine import TridentEngine
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/trident_ckpt"
+    ckpt_every: int = 25
+    offline_buffer: int = 2          # double-buffered preprocessing
+    seed: int = 0
+    resume: bool = True
+
+
+class Trainer:
+    """Drives (params, batch) -> step_fn with checkpoint/restart and an
+    offline-material queue.  step_fn must be engine-agnostic and return
+    (new_params, loss, abort_flag)."""
+
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable,
+                 params, batch_fn: Callable):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.batch_fn = batch_fn
+        self.start_step = 0
+        self.losses: list[float] = []
+        self.events: list[str] = []
+        # offline material queue (double buffered): in the joint simulation
+        # the offline trace is fused into step_fn; the queue models the
+        # pipelining discipline and is exercised by the split-mode tests.
+        self.offline_queue: collections.deque = collections.deque(
+            maxlen=cfg.offline_buffer)
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self):
+        if not self.cfg.resume:
+            return
+        path = ckpt_lib.latest(self.cfg.ckpt_dir)
+        if path is None:
+            return
+        restored, manifest = ckpt_lib.restore(path, self.params)
+        self.params = jax.tree_util.tree_map(
+            lambda ref, new: type(ref)(new) if hasattr(ref, "data")
+            else np.asarray(new), self.params, restored)
+        self.start_step = manifest["step"] + 1
+        self.events.append(f"resumed@{self.start_step}")
+
+    def run(self, crash_at: int | None = None):
+        """Train; `crash_at` injects a fault (for the restart tests)."""
+        self.maybe_resume()
+        step = self.start_step
+        while step < self.cfg.steps:
+            batch = self.batch_fn(step)
+            out = self.step_fn(self.params, step, *batch)
+            new_params, loss, abort = out
+            if bool(abort):
+                # malicious check failed: discard the step, restore, retry
+                self.events.append(f"abort@{step}")
+                path = ckpt_lib.latest(self.cfg.ckpt_dir)
+                if path is not None:
+                    restored, manifest = ckpt_lib.restore(path, self.params)
+                    self.params = restored
+                    step = manifest["step"] + 1
+                continue
+            self.params = new_params
+            self.losses.append(float(loss))
+            if crash_at is not None and step == crash_at:
+                self.events.append(f"crash@{step}")
+                raise RuntimeError(f"injected crash at step {step}")
+            if (step + 1) % self.cfg.ckpt_every == 0 \
+                    or step == self.cfg.steps - 1:
+                ckpt_lib.save(self.cfg.ckpt_dir, step, self.params,
+                              meta={"seed": self.cfg.seed})
+                self.events.append(f"ckpt@{step}")
+            step += 1
+        return self.params
+
+
+def split_offline_online(program: Callable, ring=RING64, seed: int = 0):
+    """Twin-trace helper realizing the offline/online split of `program`
+    (a function of a TridentContext).  Returns (materials, online_fn)
+    where online_fn replays the online phase against the materials."""
+    off_ctx = make_context(ring, seed=seed, mode="offline")
+    program(off_ctx)
+    materials = off_ctx.materials
+
+    def online_fn():
+        on_ctx = make_context(ring, seed=seed, mode="online")
+        on_ctx.materials = materials
+        return program(on_ctx), on_ctx
+
+    return materials, online_fn

@@ -1,0 +1,22 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here -- smoke tests and benches
+must see the 1 real CPU device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+from repro.core.context import make_context
+from repro.core.ring import RING64, RING32
+
+
+@pytest.fixture
+def ctx():
+    return make_context(RING64, seed=7)
+
+
+@pytest.fixture
+def ctx32():
+    return make_context(RING32, seed=7)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(1234)

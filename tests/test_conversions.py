@@ -1,0 +1,185 @@
+"""Value correctness of the mixed-world conversions (paper Section IV-C)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import protocols as PR
+from repro.core import conversions as CV
+from repro.core import boolean as BW
+from repro.core import activations as ACT
+from repro.core import garbled as GW
+from repro.core.context import make_context
+from repro.core.ring import RING64, RING32
+
+LSB = 2.0 ** -13
+
+
+def enc_share(ctx, x):
+    return PR.share(ctx, ctx.ring.encode(x))
+
+
+class TestBooleanWorld:
+    def test_share_bool_roundtrip(self, ctx, rng):
+        v = ctx.ring.encode(rng.randn(6))
+        b = BW.share_bool(ctx, v)
+        np.testing.assert_array_equal(np.asarray(b.reveal()), np.asarray(v))
+
+    def test_and(self, ctx, rng):
+        x = rng.randint(0, 2 ** 62, size=(8,)).astype(np.uint64)
+        y = rng.randint(0, 2 ** 62, size=(8,)).astype(np.uint64)
+        xb = BW.share_bool(ctx, x)
+        yb = BW.share_bool(ctx, y)
+        z = BW.and_bshare(ctx, xb, yb)
+        np.testing.assert_array_equal(np.asarray(z.reveal()), x & y)
+
+    def test_xor_local(self, ctx, rng):
+        x = rng.randint(0, 2 ** 62, size=(8,)).astype(np.uint64)
+        y = rng.randint(0, 2 ** 62, size=(8,)).astype(np.uint64)
+        xb, yb = BW.share_bool(ctx, x), BW.share_bool(ctx, y)
+        before = ctx.tally.totals()
+        z = xb ^ yb
+        assert ctx.tally.totals() == before
+        np.testing.assert_array_equal(np.asarray(z.reveal()), x ^ y)
+
+    @pytest.mark.parametrize("ell", [32, 64])
+    def test_ppa_add(self, rng, ell):
+        ctx = make_context(RING64 if ell == 64 else RING32, seed=9)
+        dt = np.uint64 if ell == 64 else np.uint32
+        x = rng.randint(0, 2 ** 31, size=(16,)).astype(dt)
+        y = rng.randint(0, 2 ** 31, size=(16,)).astype(dt)
+        s = BW.ppa_add(ctx, BW.share_bool(ctx, x), BW.share_bool(ctx, y))
+        np.testing.assert_array_equal(np.asarray(s.reveal()), x + y)
+
+    def test_ppa_sub(self, ctx, rng):
+        x = rng.randint(0, 2 ** 40, size=(16,)).astype(np.uint64)
+        y = rng.randint(0, 2 ** 40, size=(16,)).astype(np.uint64)
+        s = BW.ppa_sub(ctx, BW.share_bool(ctx, x), BW.share_bool(ctx, y))
+        np.testing.assert_array_equal(np.asarray(s.reveal()), x - y)
+
+    def test_prefix_or(self, ctx):
+        x = np.asarray([0b1000, 0b0101, 0, 1], np.uint64)
+        p = BW.prefix_or(ctx, BW.share_bool(ctx, x))
+        want = np.asarray([0b1111, 0b0111, 0, 1], np.uint64)
+        np.testing.assert_array_equal(np.asarray(p.reveal()), want)
+
+
+class TestConversions:
+    def test_a2b_b2a_roundtrip(self, ctx, rng):
+        x = rng.randn(12) * 20
+        xs = enc_share(ctx, x)
+        back = CV.b2a(ctx, CV.a2b(ctx, xs))
+        np.testing.assert_allclose(ctx.ring.decode(back.reveal()), x,
+                                   atol=LSB)
+
+    def test_a2b_bit_pattern(self, ctx, rng):
+        x = rng.randn(5)
+        xs = enc_share(ctx, x)
+        vb = CV.a2b(ctx, xs)
+        np.testing.assert_array_equal(np.asarray(vb.reveal()),
+                                      np.asarray(xs.reveal()))
+
+    def test_bit2a(self, ctx, rng):
+        bits = rng.randint(0, 2, size=(32,)).astype(np.uint64)
+        b = BW.share_bool(ctx, bits, nbits=1)
+        a = CV.bit2a(ctx, b)
+        np.testing.assert_array_equal(
+            np.asarray(ctx.ring.decode_int(a.reveal())), bits.astype(np.int64))
+
+    def test_bitinj(self, ctx, rng):
+        bits = rng.randint(0, 2, size=(32,)).astype(np.uint64)
+        v = rng.randn(32) * 4
+        b = BW.share_bool(ctx, bits, nbits=1)
+        out = CV.bit_inject(ctx, b, enc_share(ctx, v))
+        np.testing.assert_allclose(ctx.ring.decode(out.reveal()),
+                                   bits * v, atol=LSB)
+
+    @pytest.mark.parametrize("method", ["mul", "ppa"])
+    def test_bit_extract(self, rng, method):
+        ctx = make_context(RING64, seed=2, bitext_method=method)
+        v = np.concatenate([rng.randn(64) * 100, [-0.0001, 0.0001, 1e3, -1e3]])
+        vs = enc_share(ctx, v)
+        b = CV.bit_extract(ctx, vs)
+        got = np.asarray(b.reveal() & 1).astype(bool)
+        np.testing.assert_array_equal(got, v < 0)
+
+    def test_bitext_mul_guard_documented_failure(self, rng):
+        """Fig. 19 precondition: values beyond 2^guard in magnitude may flip
+        (DESIGN.md section 3) -- the PPA variant must still be exact there."""
+        ctx = make_context(RING64, seed=2, bitext_method="ppa")
+        huge = np.asarray([2.0 ** 40, -(2.0 ** 40)])
+        b = CV.bit_extract(ctx, enc_share(ctx, huge))
+        np.testing.assert_array_equal(np.asarray(b.reveal() & 1).astype(bool),
+                                      huge < 0)
+
+    def test_garbled_div(self, ctx, rng):
+        n = rng.randn(16) * 4
+        d = np.abs(rng.randn(16)) + 0.5
+        q = GW.garbled_div(ctx, enc_share(ctx, n), enc_share(ctx, d))
+        np.testing.assert_allclose(ctx.ring.decode(q.reveal()), n / d,
+                                   atol=1e-3)
+
+
+class TestActivations:
+    def test_relu(self, ctx, rng):
+        x = rng.randn(64) * 5
+        r = ACT.relu(ctx, enc_share(ctx, x))
+        np.testing.assert_allclose(ctx.ring.decode(r.reveal()),
+                                   np.maximum(x, 0), atol=2 * LSB)
+
+    def test_relu_drelu_consistency(self, ctx, rng):
+        x = rng.randn(32)
+        xs = enc_share(ctx, x)
+        r, nb = ACT.relu(ctx, xs, return_bit=True)
+        d = ACT.drelu_from_bit(ctx, nb)
+        np.testing.assert_array_equal(
+            np.asarray(ctx.ring.decode_int(d.reveal())),
+            (x >= 0).astype(np.int64))
+
+    def test_sigmoid_segments(self, ctx):
+        x = np.asarray([-5.0, -0.51, -0.49, 0.0, 0.49, 0.51, 5.0])
+        s = ACT.sigmoid(ctx, enc_share(ctx, x))
+        want = np.clip(x + 0.5, 0, 1)
+        np.testing.assert_allclose(ctx.ring.decode(s.reveal()), want,
+                                   atol=3 * LSB)
+
+    def test_maximum(self, ctx, rng):
+        x, y = rng.randn(32), rng.randn(32)
+        m = ACT.maximum(ctx, enc_share(ctx, x), enc_share(ctx, y))
+        np.testing.assert_allclose(ctx.ring.decode(m.reveal()),
+                                   np.maximum(x, y), atol=2 * LSB)
+
+    def test_select(self, ctx, rng):
+        x, y = rng.randn(16), rng.randn(16)
+        bits = rng.randint(0, 2, 16).astype(np.uint64)
+        b = BW.share_bool(ctx, bits, nbits=1)
+        s = ACT.select(ctx, b, enc_share(ctx, x), enc_share(ctx, y))
+        np.testing.assert_allclose(ctx.ring.decode(s.reveal()),
+                                   np.where(bits, x, y), atol=2 * LSB)
+
+    def test_reciprocal_range(self, ctx):
+        x = np.asarray([0.01, 0.1, 0.5, 1.0, 3.0, 17.0, 100.0, 1000.0])
+        inv = ACT.reciprocal(ctx, enc_share(ctx, x))
+        np.testing.assert_allclose(ctx.ring.decode(inv.reveal()), 1.0 / x,
+                                   rtol=2e-2, atol=1e-3)
+
+    def test_rsqrt_range(self, ctx):
+        x = np.asarray([0.01, 0.1, 0.5, 1.0, 3.0, 17.0, 100.0, 900.0])
+        r = ACT.rsqrt(ctx, enc_share(ctx, x))
+        np.testing.assert_allclose(ctx.ring.decode(r.reveal()),
+                                   x ** -0.5, rtol=3e-2, atol=1e-3)
+
+    @pytest.mark.parametrize("division", ["newton", "garbled"])
+    def test_softmax_rows_sum_to_one(self, rng, division):
+        ctx = make_context(RING64, seed=4)
+        x = rng.randn(4, 8) * 2
+        p = ACT.smx_softmax(ctx, enc_share(ctx, x), division=division)
+        got = ctx.ring.decode(p.reveal())
+        r = np.maximum(x, 0)
+        want = r / (r.sum(-1, keepdims=True) + 1e-2)
+        np.testing.assert_allclose(got, want, atol=3e-2)
+
+    def test_argmax_tournament(self, ctx, rng):
+        x = rng.randn(4, 7)
+        m = ACT.argmax_tournament(ctx, enc_share(ctx, x))
+        np.testing.assert_allclose(ctx.ring.decode(m.reveal())[..., 0],
+                                   x.max(-1), atol=1e-2)

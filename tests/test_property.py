@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocols as PR
+from repro.core import conversions as CV
+from repro.core import boolean as BW
+from repro.core.context import make_context
+from repro.core.ring import RING64, RING32
+from repro.kernels import ops, ref as R
+
+LSB = 2.0 ** -13
+floats = st.floats(min_value=-100.0, max_value=100.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+small_floats = st.floats(min_value=-30.0, max_value=30.0,
+                         allow_nan=False, allow_infinity=False, width=32)
+
+
+@st.composite
+def float_arrays(draw, max_len=16, elements=floats):
+    n = draw(st.integers(1, max_len))
+    return np.asarray(draw(st.lists(elements, min_size=n, max_size=n)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(float_arrays())
+def test_share_reveal_identity(x):
+    ctx = make_context(RING64, seed=1)
+    xs = PR.share(ctx, ctx.ring.encode(x))
+    np.testing.assert_allclose(np.asarray(ctx.ring.decode(xs.reveal())), x,
+                               atol=LSB)
+
+
+@settings(max_examples=25, deadline=None)
+@given(float_arrays(), float_arrays())
+def test_linearity(x, y):
+    n = min(len(x), len(y))
+    x, y = x[:n], y[:n]
+    ctx = make_context(RING64, seed=2)
+    xs = PR.share(ctx, ctx.ring.encode(x))
+    ys = PR.share(ctx, ctx.ring.encode(y))
+    got = ctx.ring.decode((xs + ys).reveal())
+    np.testing.assert_allclose(np.asarray(got), x + y, atol=2 * LSB)
+
+
+@settings(max_examples=20, deadline=None)
+@given(float_arrays(elements=small_floats),
+       float_arrays(elements=small_floats))
+def test_mult_tr_correctness(x, y):
+    n = min(len(x), len(y))
+    x, y = x[:n], y[:n]
+    ctx = make_context(RING64, seed=3)
+    z = PR.mult_tr(ctx, PR.share(ctx, ctx.ring.encode(x)),
+                   PR.share(ctx, ctx.ring.encode(y)))
+    got = np.asarray(ctx.ring.decode(z.reveal()))
+    # fixed-point: error ~ (|x|+|y|+1) LSBs
+    tol = (np.abs(x) + np.abs(y) + 4) * LSB
+    assert np.all(np.abs(got - x * y) <= tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(float_arrays(elements=small_floats))
+def test_relu_idempotent_sign(x):
+    from repro.core import activations as ACT
+    ctx = make_context(RING64, seed=4)
+    r = ACT.relu(ctx, PR.share(ctx, ctx.ring.encode(x)))
+    got = np.asarray(ctx.ring.decode(r.reveal()))
+    assert np.all(got >= -2 * LSB)                   # nonnegative
+    np.testing.assert_allclose(got, np.maximum(x, 0), atol=4 * LSB)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**64 - 1), st.integers(0, 2**64 - 1))
+def test_ppa_add_equals_ring_add(a, b):
+    ctx = make_context(RING64, seed=5)
+    x = np.asarray([a], np.uint64)
+    y = np.asarray([b], np.uint64)
+    s = BW.ppa_add(ctx, BW.share_bool(ctx, x), BW.share_bool(ctx, y))
+    np.testing.assert_array_equal(np.asarray(s.reveal()), x + y)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=4, max_size=4))
+def test_b2a_a2b_inverse(vals):
+    ctx = make_context(RING64, seed=6)
+    v = np.asarray(vals, np.uint64)
+    xs = PR.share(ctx, v)
+    back = CV.b2a(ctx, CV.a2b(ctx, xs))
+    np.testing.assert_array_equal(np.asarray(back.reveal()), v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 8).map(lambda k: 2 ** k))
+def test_limb_matmul_any_pow2_k(k):
+    rng = np.random.RandomState(k)
+    a = rng.randint(0, 1 << 63, (32, k), dtype=np.uint64)
+    b = rng.randint(0, 1 << 63, (k, 32), dtype=np.uint64)
+    got = ops.ring_matmul(jnp.asarray(a), jnp.asarray(b), bm=32, bn=32,
+                          bk=min(k, 256))
+    want = R.limb_matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31))
+def test_cost_tally_deterministic(seed):
+    """Same program, any seed: identical communication tallies (the cost
+    is a function of shapes only, never of values)."""
+    def prog(ctx):
+        x = PR.share(ctx, ctx.ring.encode(np.ones(5)))
+        y = PR.mult_tr(ctx, x, x)
+        CV.bit_extract(ctx, y)
+        return ctx.tally.totals()
+
+    t1 = prog(make_context(RING64, seed=seed))
+    t2 = prog(make_context(RING64, seed=seed + 1))
+    assert t1 == t2

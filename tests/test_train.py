@@ -1,0 +1,244 @@
+"""Training substrate: optimizers, checkpointing, fault tolerance, the
+paper's ML workloads, serving engine."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.context import make_context
+from repro.core.ring import RING64
+from repro.nn.engine import TridentEngine, PlainEngine
+from repro.train import checkpoint as CK
+from repro.train import data as D
+from repro.train import optim as OPT
+from repro.train import paper_ml as PML
+from repro.train.trainer import Trainer, TrainerConfig, split_offline_online
+from repro.serve.engine import PredictionServer
+
+
+# ---------------------------------------------------------------------------
+# Paper workloads: convergence (end-to-end secure training works)
+# ---------------------------------------------------------------------------
+class TestPaperML:
+    def test_linreg_converges_secure(self):
+        data = D.RegressionData(features=10, n=1024, seed=0)
+        ctx = make_context(seed=1)
+        eng = TridentEngine(ctx)
+        params = {"w": eng.from_plain(np.zeros((10, 1)))}
+        for step in range(60):
+            X, y = data.batch(step, 64)
+            params, err = PML.linreg_step(eng, params, eng.from_plain(X),
+                                          eng.from_plain(y), lr=0.25)
+        w = np.asarray(eng.to_plain(params["w"]))
+        rel = np.linalg.norm(w - data.w_star) / np.linalg.norm(data.w_star)
+        assert rel < 0.15, rel
+        assert not bool(ctx.abort_flag())
+
+    def test_logreg_learns_secure(self):
+        data = D.RegressionData(features=8, n=1024, seed=1, logistic=True)
+        ctx = make_context(seed=2)
+        eng = TridentEngine(ctx)
+        params = {"w": eng.from_plain(np.zeros((8, 1)))}
+        for step in range(50):
+            X, y = data.batch(step, 64)
+            params, _ = PML.logreg_step(eng, params, eng.from_plain(X),
+                                        eng.from_plain(y), lr=0.5)
+        # accuracy on fresh data
+        Xt, yt = data.batch(999, 512)
+        p = PML.reg_predict(eng, params, eng.from_plain(Xt), logistic=True)
+        acc = np.mean((np.asarray(eng.to_plain(p)) > 0.5) == yt)
+        assert acc > 0.9, acc
+
+    def test_nn_learns_secure(self):
+        net = PML.MLPNet(features=20, layers=(16, 4))
+        rng = np.random.RandomState(0)
+        data = D.MNISTLike(n=1024, seed=3, features=20, classes=4)
+        ctx = make_context(seed=4)
+        eng = TridentEngine(ctx)
+        params = {k: eng.from_plain(v)
+                  for k, v in PML.mlp_net_init(rng, net).items()}
+        accs = []
+        for step in range(40):
+            X, onehot, lab = data.batch(step, 64)
+            params, p = PML.mlp_net_step(eng, params, net,
+                                         eng.from_plain(X), onehot, lr=0.5)
+            accs.append(np.mean(np.argmax(
+                np.asarray(eng.to_plain(p)), -1) == lab))
+        assert np.mean(accs[-5:]) > np.mean(accs[:5]) + 0.2
+        assert not bool(ctx.abort_flag())
+
+    def test_secure_prediction_matches_plain(self, rng):
+        net = PML.MLPNet(features=12, layers=(8, 3))
+        params_np = PML.mlp_net_init(rng, net)
+        X = rng.randn(16, 12)
+        pe = PlainEngine()
+        p_plain, _ = PML.mlp_net_fwd(
+            pe, {k: jnp.asarray(v, jnp.float32)
+                 for k, v in params_np.items()}, net,
+            jnp.asarray(X, jnp.float32))
+        te = TridentEngine(make_context(seed=5))
+        p_sec, _ = PML.mlp_net_fwd(
+            te, {k: te.from_plain(v) for k, v in params_np.items()}, net,
+            te.from_plain(X))
+        np.testing.assert_allclose(np.asarray(te.to_plain(p_sec)),
+                                   np.asarray(p_plain), atol=0.03)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+class TestOptim:
+    def test_sgd_and_momentum_on_shares(self, rng):
+        te = TridentEngine(make_context(seed=6))
+        params = {"w": te.from_plain(np.ones((4, 4)))}
+        grads = {"w": te.from_plain(np.full((4, 4), 0.5))}
+        sgd = OPT.SGD(lr=2.0 ** -2)
+        p2, _ = sgd.update(te, params, grads, None)
+        np.testing.assert_allclose(np.asarray(te.to_plain(p2["w"])),
+                                   1 - 0.25 * 0.5, atol=1e-3)
+        mom = OPT.Momentum(lr=2.0 ** -2, beta=0.875)
+        st = mom.init(te, params)
+        p3, st = mom.update(te, params, grads, st)
+        np.testing.assert_allclose(np.asarray(te.to_plain(p3["w"])),
+                                   1 - 0.25 * 0.5, atol=1e-3)
+        p4, st = mom.update(te, p3, grads, st)
+        want = (1 - 0.25 * 0.5) - 0.25 * (0.875 * 0.5 + 0.5)
+        np.testing.assert_allclose(np.asarray(te.to_plain(p4["w"])),
+                                   want, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / restart / elastic
+# ---------------------------------------------------------------------------
+class TestCheckpoint:
+    def test_atomic_save_restore(self, tmp_path, rng):
+        tree = {"a": np.asarray(rng.randn(3, 3)),
+                "b": [np.asarray(rng.randn(2)), None]}
+        path = CK.save(str(tmp_path), 7, tree)
+        assert CK.verify(path)
+        restored, manifest = CK.restore(path, tree)
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+        assert manifest["step"] == 7
+
+    def test_latest_skips_corrupt(self, tmp_path, rng):
+        tree = {"a": np.asarray(rng.randn(4))}
+        CK.save(str(tmp_path), 1, tree)
+        p2 = CK.save(str(tmp_path), 2, tree)
+        # corrupt the newest shard
+        with open(os.path.join(p2, "shard_0.npz"), "ab") as f:
+            f.write(b"garbage")
+        latest = CK.latest(str(tmp_path))
+        assert latest.endswith("step_00000001")
+
+    def test_crash_restart_resumes_identically(self, tmp_path):
+        """Crash at step 12, restart, final weights == uninterrupted run.
+        Bit-identity requires STEP-INDEXED PRF streams (the deterministic-
+        replay pattern of DESIGN.md section 5): each step derives its
+        offline material from (master_seed, step), so a resumed step 13
+        regenerates exactly the lambdas the uninterrupted run used."""
+        data = D.RegressionData(features=6, n=512, seed=9)
+
+        def make(ckpt_dir):
+            out_eng = TridentEngine(make_context(seed=3))
+
+            def step_fn(params, step, X, y):
+                ctx = make_context(seed=3 + step * 7919)  # step-indexed
+                eng = TridentEngine(ctx)
+                new, _ = PML.linreg_step(eng, params, eng.from_plain(X),
+                                         eng.from_plain(y), lr=0.25)
+                return new, 0.0, False
+
+            eng0 = TridentEngine(make_context(seed=3))
+            params = {"w": eng0.from_plain(np.zeros((6, 1)))}
+            return Trainer(TrainerConfig(steps=20, ckpt_dir=ckpt_dir,
+                                         ckpt_every=5, seed=3),
+                           step_fn, params,
+                           lambda s: data.batch(s, 32)), out_eng
+
+        # uninterrupted
+        t1, eng1 = make(str(tmp_path / "a"))
+        p_ref = t1.run()
+        ref = np.asarray(eng1.to_plain(p_ref["w"]))
+
+        # crash at 12 then restart
+        t2, eng2 = make(str(tmp_path / "b"))
+        with pytest.raises(RuntimeError):
+            t2.run(crash_at=12)
+        t3, eng3 = make(str(tmp_path / "b"))
+        p_re = t3.run()
+        got = np.asarray(eng3.to_plain(p_re["w"]))
+        assert any(e.startswith("resumed") for e in t3.events)
+        np.testing.assert_allclose(got, ref, atol=1e-10)
+
+    def test_elastic_reshard(self):
+        tree = {"w": np.zeros((16, 4))}
+        assert CK.reshard(tree, 8, 4) is tree
+        with pytest.raises(ValueError):
+            CK.reshard(tree, 8, 3)
+
+
+# ---------------------------------------------------------------------------
+# Offline/online pipelining
+# ---------------------------------------------------------------------------
+class TestOfflinePipeline:
+    def test_split_offline_online_roundtrip(self, rng):
+        from repro.core import protocols as PR
+        a = rng.randn(4, 4)
+
+        def program(ctx):
+            xs = PR.share(ctx, ctx.ring.encode(a))
+            return PR.matmul_tr(ctx, xs, xs)
+
+        materials, online_fn = split_offline_online(program, seed=11)
+        assert len(materials) > 0
+        (z, on_ctx) = online_fn()
+        got = on_ctx.ring.decode(z.reveal())
+        np.testing.assert_allclose(np.asarray(got), a @ a, atol=0.02)
+        # offline phase of the online trace consumed, not regenerated
+        assert on_ctx._mat_idx == len(materials)
+
+    def test_abort_routes_to_restore(self, tmp_path):
+        """A step that reports abort is discarded and retried from the
+        last checkpoint (Fig. 5 semantics at the system level)."""
+        calls = {"n": 0}
+
+        def step_fn(params, step, x):
+            calls["n"] += 1
+            # tampered step: abort exactly once at step 6
+            if step == 6 and calls["n"] == 7:
+                return params, 0.0, True
+            return {"w": params["w"] + 1}, 0.0, False
+
+        tr = Trainer(TrainerConfig(steps=10, ckpt_dir=str(tmp_path),
+                                   ckpt_every=3), step_fn,
+                     {"w": np.zeros(1)}, lambda s: (np.zeros(1),))
+        p = tr.run()
+        assert any(e.startswith("abort@6") for e in tr.events)
+        # all 10 effective steps applied despite the aborted attempt
+        assert p["w"][0] == 10 - 6 + 6
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+class TestServe:
+    def test_batched_prediction_server(self, rng):
+        net = PML.MLPNet(features=8, layers=(6, 3))
+        params_np = PML.mlp_net_init(rng, net)
+
+        def predict(ctx, X):
+            eng = TridentEngine(ctx)
+            params = {k: eng.from_plain(v) for k, v in params_np.items()}
+            p, _ = PML.mlp_net_fwd(eng, params, net, eng.from_plain(X))
+            return eng.to_plain(p)
+
+        srv = PredictionServer(predict, batch_size=4, seed=1)
+        for i in range(10):
+            srv.submit(rng.randn(8))
+        out = srv.flush()
+        assert len(out) == 10
+        rep = srv.report()
+        assert rep["queries"] == 10
+        assert rep["lan_latency_ms"] > 0
+        assert rep["wan_latency_s"] > 0
