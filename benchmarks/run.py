@@ -15,7 +15,7 @@ def main():
 
     from . import (table_conversions, table_ml_blocks, table_training,
                    table_prediction, table_gordon_aes, table_monetary,
-                   fig20_throughput)
+                   fig20_throughput, runtime_smoke)
     t0 = time.time()
     table_conversions.run()
     print()
@@ -30,6 +30,8 @@ def main():
     table_monetary.run()
     print()
     fig20_throughput.run()
+    print()
+    runtime_smoke.run()
     print(f"\n[benchmarks done in {time.time()-t0:.1f}s]")
     return 0
 

@@ -1,0 +1,225 @@
+"""Shared protocol description: the single algebra + party-knowledge map
+consumed by BOTH execution backends.
+
+Two backends evaluate the Trident protocols:
+
+  * the joint simulation (core/protocols.py, core/conversions.py): one trace
+    computes the union of the four parties' local work on stacked share
+    components and tallies communication analytically (core/costs.py);
+  * the party-sliced runtime (runtime/): four ``Party`` objects each hold
+    only the components P_i is entitled to and exchange real messages over a
+    measured ``Transport``.
+
+Both must compute *bit-identical* values (tests/test_runtime.py asserts it),
+so the per-component formulas live here once, expressed over explicit
+1-based lambda indices rather than stacked arrays.  The routing tables
+encode who can compute each quantity locally and who must receive it --
+they are the paper's Figs. 1-5/9/16/18 choreography made explicit, and the
+measured byte counts they induce are asserted equal to the analytic lemma
+tallies.
+
+Index conventions: parties 0..3; lambda components 1..3 (P_i misses
+lambda_i; P0 misses m and knows every lambda).  ``op`` is the bilinear map
+of the protocol instance: elementwise product for Pi_Mult, a contraction
+for Pi_DotP / Pi_MatMul (contracting *before* any value crosses the wire is
+exactly why dot-product communication is vector-length-free, Lemma C.3).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+PARTIES = (0, 1, 2, 3)
+
+
+def numel(shape) -> int:
+    """Element count of a shape (1 for scalars) -- the unit every
+    per-element cost formula multiplies by."""
+    return int(math.prod(shape)) if shape else 1
+
+
+def as_op(contract):
+    """The protocol instance's bilinear map: elementwise product unless a
+    contraction (dot product / matmul) is supplied."""
+    return (lambda a, b: a * b) if contract is None else contract
+
+
+def matmul_shape(x_shape, y_shape) -> tuple:
+    """Output shape of jnp.matmul on the given operand shapes."""
+    a = jax.ShapeDtypeStruct(tuple(x_shape), jnp.float32)
+    b = jax.ShapeDtypeStruct(tuple(y_shape), jnp.float32)
+    return tuple(jax.eval_shape(jnp.matmul, a, b).shape)
+
+
+def lam_holders(j: int) -> tuple:
+    """Parties holding lambda component j: everyone but P_j."""
+    return tuple(p for p in PARTIES if p != j)
+
+
+def online_holders(j: int) -> tuple:
+    """Online parties (P1..P3) holding lambda component j."""
+    return tuple(p for p in (1, 2, 3) if p != j)
+
+
+# ---------------------------------------------------------------------------
+# Pi_Mult / Pi_DotP gamma split (Fig. 4): gamma_xy = lam_x * lam_y broken
+# into three pieces by lambda-index pairs.  Piece j collects the terms a
+# single online party can compute from the lambda components it holds.
+# ---------------------------------------------------------------------------
+# gamma piece j -> the (a, b) lambda-index pairs of its lam_x[a] op lam_y[b]
+# terms (1-based).
+GAMMA_TERMS = {
+    1: ((1, 1), (1, 2), (2, 1)),     # lambda_1 / lambda_2 terms
+    2: ((2, 2), (2, 3), (3, 2)),     # lambda_2 / lambda_3 terms
+    3: ((3, 3), (3, 1), (1, 3)),     # lambda_3 / lambda_1 terms
+}
+
+# Zero-share masks (Pi_Zero, Fig. 22): three PRF streams f1, f2, f3 sampled
+# by these subsets *in this order* (PRF-counter order is part of the shared
+# description -- both backends must sample identically for bit-equality).
+ZERO_SUBSETS = ((0, 1, 3), (0, 1, 2), (0, 2, 3))
+
+# gamma piece j is masked with (f_plus - f_minus); indices into (f1, f2, f3).
+GAMMA_MASK_F = {1: (0, 2), 2: (1, 0), 3: (2, 1)}
+
+# Locality: gamma piece j (terms + mask) is computable without interaction
+# by P0 and by GAMMA_LOCAL[j]; P0 sends it to GAMMA_RECV[j] (the co-holder
+# of lambda_j) so that the pair PART_HOLDERS[j] can both form online part j.
+# That one send per piece is the whole offline cost of Pi_Mult: 3 elements,
+# 1 round (Lemma B.4).
+GAMMA_LOCAL = {1: 3, 2: 1, 3: 2}
+GAMMA_RECV = {1: 2, 2: 3, 3: 1}
+
+# Online part j (the m_z' summand tied to lambda_j) is held by this ordered
+# pair after the offline phase: (value sender, hash sender).  It is sent to
+# PART_RECV[j] = P_j, the single online party missing lambda_j -- 3 elements,
+# 1 round online (the paper's 25% saving over Gordon et al.'s 4).
+PART_HOLDERS = {1: (3, 2), 2: (1, 3), 3: (2, 1)}
+PART_RECV = {1: 1, 2: 2, 3: 3}
+
+
+def gamma_piece(op, j: int, lam_x, lam_y, mask=None):
+    """Gamma piece j from 1-indexed component mappings lam_x / lam_y.
+
+    ``lam_x[a]`` need only be defined for the indices GAMMA_TERMS[j] touches,
+    so a party view (which misses one component) can evaluate its own piece.
+    Ring addition is exactly associative, so both backends get identical
+    words no matter the evaluation order.
+    """
+    acc = None
+    for a, b in GAMMA_TERMS[j]:
+        t = op(lam_x[a], lam_y[b])
+        acc = t if acc is None else acc + t
+    return acc if mask is None else acc + mask
+
+
+def mult_online_part(op, lam_x_j, lam_y_j, m_x, m_y, gamma_j, lam_z_j):
+    """Online summand j of m_z' = sum_j part_j (Fig. 4 online):
+    -lam_x_j * m_y - m_x * lam_y_j + gamma_j + lam_z_j.
+
+    For Pi_MultTr pass ``lam_z_j = -r_j`` (Fig. 18 opens z - r instead)."""
+    return -op(lam_x_j, m_y) - op(m_x, lam_y_j) + gamma_j + lam_z_j
+
+
+# ---------------------------------------------------------------------------
+# Pi_Rec (Fig. 3): each party misses exactly one of (m, lam_1..lam_3).
+# Component c goes to receiver c (component 0 = m, missing at P0) from a
+# sender that holds it, with a hash copy from a second holder.
+# ---------------------------------------------------------------------------
+# component index -> (value sender, hash sender); receiver is the index.
+REC_ROUTE = {0: (1, 2), 1: (2, 3), 2: (3, 1), 3: (1, 2)}
+
+
+# ---------------------------------------------------------------------------
+# Pi_aSh (Fig. 2): <v> dealt by P0.  Piece i (1-based) is held by P0 plus
+# the online pair ASH_HOLDERS[i]; v1/v2 come from PRF streams ASH_SUBSETS
+# (in order), v3 = v - v1 - v2 is sent by P0 to P1 and P2 (2 elements,
+# Lemma B.2), who cross-check hashes.
+# ---------------------------------------------------------------------------
+ASH_SUBSETS = ((0, 2, 3), (0, 1, 3))
+ASH_HOLDERS = {1: (2, 3), 2: (1, 3), 3: (1, 2)}
+
+
+# ---------------------------------------------------------------------------
+# B2A (Fig. 16): online composition values.  Each value is computed by the
+# two online holders of one aSh piece of the lambda bit-planes and then
+# Pi_vSh-shared by that pair (1 element each, in one parallel round).
+#   x = sum 2^i (q_i + p_i - 2 q_i p_i)   from piece 2, owners (P1, P3)
+#   y = sum 2^i (p_i - 2 q_i p_i)         from piece 3, owners (P2, P1)
+#   z = sum 2^i (p_i - 2 q_i p_i)         from piece 1, owners (P3, P2)
+# (piece index = aSh piece number; owners = ASH_HOLDERS of that piece, in
+# the paper's vSh ordering).
+# ---------------------------------------------------------------------------
+B2A_VALS = ((2, True, (1, 3)), (3, False, (2, 1)), (1, False, (3, 2)))
+
+
+def b2a_val(q, p, pow2, include_q: bool, dtype):
+    """One B2A composition value: sum_i 2^i (q_i [if include_q] + p_i
+    - 2 q_i p_i) with q_i the public m bit-planes and p_i one aSh piece of
+    the lambda bit-planes (leading axis = bit index)."""
+    term = p - 2 * q * p
+    if include_q:
+        term = term + q
+    return jnp.sum(pow2 * term, axis=0, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Truncation-pair check (Fig. 18 / Lemma D.1): r = 2^f r^t + r_d with
+# r_d in [0, 2^f).  P1 sends a1 = (r_2 + r_3) - 2^f (v_2 + v_3) to P2
+# (1 element, 1 offline round); P2 verifies a1 + r_1 - 2^f v_1 in [0, 2^f)
+# using only components it holds.
+# ---------------------------------------------------------------------------
+def trunc_check_send(r_2, r_3, v_2, v_3, frac: int):
+    return (r_2 + r_3) - ((v_2 + v_3) << frac)
+
+
+def trunc_check_verify(a1, r_1, v_1, frac: int):
+    """True iff the truncation-pair relation holds (residue in [0, 2^f))."""
+    resid = a1 + r_1 - (v_1 << frac)
+    return jnp.all(resid < (1 << frac))
+
+
+# ---------------------------------------------------------------------------
+# Malicious-security check ledger, shared by TridentContext (joint backend)
+# and runtime.Party (each party keeps its own ledger; the runtime's abort
+# flag is the OR over parties).
+# ---------------------------------------------------------------------------
+class CheckLedger:
+    """Collects recompute-and-compare outcomes of the paper's hash
+    exchanges; folds them into a single abort flag."""
+
+    def __init__(self):
+        self.checks: list = []
+
+    def check_equal(self, a, b, tag: str = "") -> None:
+        self.checks.append(jnp.all(a == b))
+
+    def record(self, ok, tag: str = "") -> None:
+        """Record an already-evaluated predicate (e.g. a range check)."""
+        self.checks.append(jnp.all(ok))
+
+    # --- scan-body plumbing (traced checks must exit scan via outputs) ----
+    def begin_body(self) -> int:
+        return len(self.checks)
+
+    def end_body(self, mark: int):
+        cs = self.checks[mark:]
+        del self.checks[mark:]
+        ok = jnp.asarray(True)
+        for c in cs:
+            ok = jnp.logical_and(ok, c)
+        return ok
+
+    def absorb(self, oks) -> None:
+        self.checks.append(jnp.all(oks))
+
+    def abort_flag(self):
+        """False if every consistency check passed; True = abort."""
+        if not self.checks:
+            return jnp.asarray(False)
+        ok = self.checks[0]
+        for c in self.checks[1:]:
+            ok = jnp.logical_and(ok, c)
+        return jnp.logical_not(ok)

@@ -26,6 +26,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from .algebra import CheckLedger
 from .costs import CostTally
 from .prf import SetupKeys, make_setup_keys, prf_bits, prf_bounded
 from .ring import Ring, RING64
@@ -57,7 +58,7 @@ class TridentContext:
         self._counter = 0
         self.materials: list[Any] = []
         self._mat_idx = 0
-        self.checks: list[jax.Array] = []
+        self.ledger = CheckLedger()
         # Inside jax.lax.scan bodies (layer stacks, SSM chunk scans) the
         # per-iteration PRF stream comes from a traced key passed as scan
         # input; static counters then disambiguate call sites within the body.
@@ -113,13 +114,17 @@ class TridentContext:
             return mat
         return self.get_material()
 
-    # --- malicious-security checks ---------------------------------------
+    # --- malicious-security checks (shared CheckLedger, algebra.py) -------
+    @property
+    def checks(self) -> list[jax.Array]:
+        return self.ledger.checks
+
     def check_equal(self, a: jax.Array, b: jax.Array, tag: str = "") -> None:
         """Emulates a hash-consistency exchange: both senders' copies must
         agree.  Tampering (tested by fault-injection tests) flips `abort`."""
         if not self.malicious_checks:
             return
-        self.checks.append(jnp.all(a == b))
+        self.ledger.check_equal(a, b, tag)
 
     # --- scan-body check plumbing -----------------------------------------
     # Checks created inside a jax.lax.scan body are traced values that must
@@ -127,28 +132,18 @@ class TridentContext:
     # wrappers bracket the body with begin_body/end_body and re-attach the
     # folded result outside with absorb_checks.
     def begin_body(self) -> int:
-        return len(self.checks)
+        return self.ledger.begin_body()
 
     def end_body(self, mark: int) -> jax.Array:
-        cs = self.checks[mark:]
-        del self.checks[mark:]
-        ok = jnp.asarray(True)
-        for c in cs:
-            ok = jnp.logical_and(ok, c)
-        return ok
+        return self.ledger.end_body(mark)
 
     def absorb_checks(self, oks) -> None:
         if self.malicious_checks:
-            self.checks.append(jnp.all(oks))
+            self.ledger.absorb(oks)
 
     def abort_flag(self) -> jax.Array:
         """False if all consistency checks passed (continue), True = abort."""
-        if not self.checks:
-            return jnp.asarray(False)
-        ok = self.checks[0]
-        for c in self.checks[1:]:
-            ok = jnp.logical_and(ok, c)
-        return jnp.logical_not(ok)
+        return self.ledger.abort_flag()
 
 
 def make_context(ring: Ring = RING64, seed: int = 0, mode: str = "fused",

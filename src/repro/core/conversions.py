@@ -20,6 +20,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from . import algebra as AL
 from .context import TridentContext
 from .prf import PARTIES
 from .shares import AShare, BShare, public_to_ashare
@@ -153,21 +154,19 @@ def b2a(ctx: TridentContext, v: BShare) -> AShare:
         ctx.tally.add("Bit2A.check", "offline", rounds=1,
                       bits=(ring.ell + 1) * ell * _n(shape))
 
-    # online: x,y,z from q_i (public bits of m) and the p shares
+    # online: x,y,z from q_i (public bits of m) and the p shares; the
+    # composition values and their vSh owner pairs are the shared
+    # description (algebra.B2A_VALS), reused verbatim by the runtime.
     pow2 = (one << jnp.arange(ell, dtype=ring.dtype))
     pow2 = pow2.reshape((ell,) + (1,) * len(shape))
     q = jnp.stack([(v.m >> i) & one for i in range(ell)])
-    x_val = jnp.sum(pow2 * (q + p_sh[1] - 2 * q * p_sh[1]), axis=0,
-                    dtype=ring.dtype)
-    y_val = jnp.sum(pow2 * (p_sh[2] - 2 * q * p_sh[2]), axis=0,
-                    dtype=ring.dtype)
-    z_val = jnp.sum(pow2 * (p_sh[0] - 2 * q * p_sh[0]), axis=0,
-                    dtype=ring.dtype)
+    out = None
     with ctx.tally.parallel():
-        xs = vsh_arith(ctx, x_val, owners=(1, 3))
-        ys = vsh_arith(ctx, y_val, owners=(2, 1))
-        zs = vsh_arith(ctx, z_val, owners=(3, 2))
-    return xs + ys + zs
+        for piece, include_q, owners in AL.B2A_VALS:
+            val = AL.b2a_val(q, p_sh[piece - 1], pow2, include_q, ring.dtype)
+            sh = vsh_arith(ctx, val, owners=owners)
+            out = sh if out is None else out + sh
+    return out
 
 
 # ---------------------------------------------------------------------------

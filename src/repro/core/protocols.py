@@ -17,29 +17,28 @@ Per-element online costs:
 """
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from . import algebra as AL
+from .algebra import numel as _n
 from .context import TridentContext
 from .shares import AShare, BShare, public_to_ashare
 from .prf import PARTIES
-
-
-def _n(shape) -> int:
-    return int(math.prod(shape)) if shape else 1
 
 
 # ---------------------------------------------------------------------------
 # Pi_Zero (Fig. 22): A + B + Gamma = 0, non-interactive.
 # ---------------------------------------------------------------------------
 def zero_shares(ctx: TridentContext, shape) -> jax.Array:
-    """Returns stacked (3, *shape): A, B, Gamma with A+B+Gamma = 0."""
-    f1 = ctx.sample((0, 1, 3), shape)   # k1: P \ {P2}
-    f2 = ctx.sample((0, 1, 2), shape)   # k2: P \ {P3}
-    f3 = ctx.sample((0, 2, 3), shape)   # k3: P \ {P1}
+    """Returns stacked (3, *shape): A, B, Gamma with A+B+Gamma = 0.
+
+    The streams and their sampling order are part of the shared protocol
+    description (algebra.ZERO_SUBSETS) so the party-sliced runtime derives
+    the identical masks."""
+    f1, f2, f3 = (ctx.sample(s, shape) for s in AL.ZERO_SUBSETS)
     return jnp.stack([f2 - f1, f3 - f2, f1 - f3])
 
 
@@ -69,8 +68,7 @@ def ash_by_p0(ctx: TridentContext, v: jax.Array) -> jax.Array:
     """Returns stacked (3, *shape) additive shares v1+v2+v3 = v."""
     ring = ctx.ring
     v = jnp.asarray(v, ring.dtype)
-    v1 = ctx.sample((0, 2, 3), v.shape)   # P \ {P1}
-    v2 = ctx.sample((0, 1, 3), v.shape)   # P \ {P2}
+    v1, v2 = (ctx.sample(s, v.shape) for s in AL.ASH_SUBSETS)
     v3 = v - v1 - v2                       # P0 sends to P1, P2
     ctx.tally.add("Pi_aSh", "offline", rounds=1,
                   bits=2 * ring.ell * _n(v.shape))
@@ -118,13 +116,14 @@ def _gamma_offline(ctx: TridentContext, lx: jax.Array, ly: jax.Array,
         g = op(lxs, lys)
         z = jnp.zeros_like(g)
         return jnp.stack([g, z, z])
-    # Faithful split: gamma_2 = lx2 ly2 + lx2 ly3 + lx3 ly2 (+A), etc.
-    # Indices here are 0-based into the (l1,l2,l3) stack.
-    g2 = op(lx[1], ly[1]) + op(lx[1], ly[2]) + op(lx[2], ly[1])
-    g3 = op(lx[2], ly[2]) + op(lx[2], ly[0]) + op(lx[0], ly[2])
-    g1 = op(lx[0], ly[0]) + op(lx[0], ly[1]) + op(lx[1], ly[0])
-    zs = zero_shares(ctx, g1.shape)
-    return jnp.stack([g1 + zs[2], g2 + zs[0], g3 + zs[1]])
+    # Faithful split (shared description, algebra.GAMMA_TERMS): piece j
+    # collects the lambda-index pairs one online party can compute locally.
+    lam_x = {j: lx[j - 1] for j in (1, 2, 3)}
+    lam_y = {j: ly[j - 1] for j in (1, 2, 3)}
+    pieces = {j: AL.gamma_piece(op, j, lam_x, lam_y) for j in (1, 2, 3)}
+    fs = [ctx.sample(s, pieces[1].shape) for s in AL.ZERO_SUBSETS]
+    return jnp.stack([pieces[j] + fs[a] - fs[b]
+                      for j, (a, b) in sorted(AL.GAMMA_MASK_F.items())])
 
 
 def _mult_like(ctx: TridentContext, x: AShare, y: AShare, name: str,
@@ -169,7 +168,7 @@ def _mult_like(ctx: TridentContext, x: AShare, y: AShare, name: str,
             + lam_z[0] + lam_z[1] + lam_z[2]
     else:
         parts = [
-            -op(lx[i], my) - op(mx, ly[i]) + gamma[i] + lam_z[i]
+            AL.mult_online_part(op, lx[i], ly[i], mx, my, gamma[i], lam_z[i])
             for i in range(3)]
         if ctx.malicious_checks:
             ctx.check_equal(parts[0], parts[0], f"{name}.mz'")
@@ -191,10 +190,7 @@ def _mm(ring, a, b):
     return jnp.matmul(a, b)
 
 
-def _mm_shape(x_shape, y_shape) -> tuple:
-    a = jax.ShapeDtypeStruct(tuple(x_shape), jnp.float32)
-    b = jax.ShapeDtypeStruct(tuple(y_shape), jnp.float32)
-    return tuple(jax.eval_shape(jnp.matmul, a, b).shape)
+_mm_shape = AL.matmul_shape
 
 
 def dotp(ctx: TridentContext, x: AShare, y: AShare) -> AShare:
@@ -291,8 +287,9 @@ def mult_tr(ctx: TridentContext, x: AShare, y: AShare,
         zp = -op(lxs, my) - op(mx, lys) + gamma[0] + gamma[1] + gamma[2] \
             - (r_j[0] + r_j[1] + r_j[2])
     else:
-        parts = [-op(lx[i], my) - op(mx, ly[i]) + gamma[i] - r_j[i]
-                 for i in range(3)]
+        parts = [
+            AL.mult_online_part(op, lx[i], ly[i], mx, my, gamma[i], -r_j[i])
+            for i in range(3)]
         zp = parts[0] + parts[1] + parts[2]
     z_minus_r = zp + mm                          # opened: z - r
     zt_public = ring.truncate(z_minus_r)         # (z - r)^t, public to P1..P3

@@ -1,0 +1,31 @@
+"""Party-sliced 4PC runtime: four Party instances, a measured Transport,
+and party-local protocol implementations.
+
+Quick tour:
+
+    from repro.core.ring import RING64
+    from repro.runtime import FourPartyRuntime, protocols as RT
+
+    rt = FourPartyRuntime(RING64, seed=0)
+    xs = RT.share(rt, rt.ring.encode([1.5, -2.0]))
+    zs = RT.mult_tr(rt, xs, xs)
+    opened = RT.reconstruct(rt, zs)          # {party: plaintext ring words}
+    rt.transport.totals()                    # measured rounds/bits per phase
+    rt.transport.per_link()                  # per directed link
+    rt.abort_flag()                          # OR of the parties' ledgers
+
+The same programs run bit-identically on the joint simulation
+(core/protocols.py) -- tests/test_runtime.py holds the two backends equal,
+and holds the measured wire traffic equal to the analytic CostTally.
+"""
+from . import protocols
+from .party import (DistAShare, DistBShare, Party, PartyAView, PartyBView,
+                    PartyKeys)
+from .runtime import FourPartyRuntime, make_runtime
+from .transport import LocalTransport, TamperRule, Transport
+
+__all__ = [
+    "DistAShare", "DistBShare", "FourPartyRuntime", "LocalTransport",
+    "Party", "PartyAView", "PartyBView", "PartyKeys", "TamperRule",
+    "Transport", "make_runtime", "protocols",
+]

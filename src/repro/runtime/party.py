@@ -1,0 +1,177 @@
+"""Party objects and party-local share views.
+
+A ``Party`` holds exactly the state P_i is entitled to:
+
+  * its subset PRF keys (only the F_setup streams of subsets containing i),
+  * a ``CheckLedger`` collecting its hash-exchange verdicts,
+  * nothing else -- message payloads flow through the Transport.
+
+``PartyAView`` / ``PartyBView`` are the party slices of the joint
+``AShare`` / ``BShare`` stacks: P0 holds every lambda but never the masked
+value m; the online party P_i (i in 1..3) holds m and every lambda except
+lambda_i (paper III-A).  ``DistAShare`` / ``DistBShare`` bundle the four
+views of one logical share; ``from_joint`` / ``to_joint`` convert to and
+from the joint-simulation containers (used by the bit-identity tests --
+``to_joint`` cross-checks that overlapping components agree between
+parties before reassembling).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.algebra import CheckLedger, PARTIES, lam_holders
+from ..core.prf import subset_id
+from ..core.shares import AShare, BShare
+
+
+class PartyKeys:
+    """The F_setup subset keys P_i belongs to (and no others)."""
+
+    def __init__(self, master: jax.Array, party: int):
+        self.party = party
+        self._keys = {}
+        for mask in range(1 << len(PARTIES)):
+            if mask & (1 << party) and bin(mask).count("1") >= 2:
+                self._keys[mask] = jax.random.fold_in(master, mask)
+
+    def subset_key(self, subset) -> jax.Array:
+        mask = subset_id(subset)
+        assert mask in self._keys, \
+            f"P{self.party} is outside subset {tuple(subset)}"
+        return self._keys[mask]
+
+
+@dataclasses.dataclass
+class Party:
+    """One of the four protocol participants."""
+
+    index: int
+    keys: PartyKeys
+    ledger: CheckLedger
+
+    def check_equal(self, a, b, tag: str = "") -> None:
+        self.ledger.check_equal(a, b, tag)
+
+    @property
+    def abort(self):
+        return self.ledger.abort_flag()
+
+
+# ---------------------------------------------------------------------------
+# Party-local share views.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PartyAView:
+    """P_i's slice of an arithmetic [[.]]-share: m (None for P0) and the
+    lambda components {j: lambda_j} it holds."""
+
+    m: jax.Array | None
+    lam: dict[int, jax.Array]
+
+    def add(self, other: "PartyAView") -> "PartyAView":
+        m = None if self.m is None else self.m + other.m
+        return PartyAView(m, {j: self.lam[j] + other.lam[j]
+                              for j in self.lam})
+
+    def add_public(self, c) -> "PartyAView":
+        """Public addition touches only m (lambda unchanged); P0 no-op."""
+        m = None if self.m is None else self.m + c
+        return PartyAView(m, dict(self.lam))
+
+
+@dataclasses.dataclass
+class PartyBView:
+    """P_i's slice of a boolean [[.]]^B-share (XOR world, bit-packed)."""
+
+    m: jax.Array | None
+    lam: dict[int, jax.Array]
+    nbits: int
+
+
+def _view_indices(party: int) -> tuple:
+    """Lambda components party i holds: all but i (P0 holds all three)."""
+    return tuple(j for j in (1, 2, 3) if j != party)
+
+
+@dataclasses.dataclass
+class DistAShare:
+    """The four party views of one logical arithmetic share."""
+
+    views: tuple          # (P0, P1, P2, P3) PartyAView
+    shape: tuple
+    dtype: object
+
+    @classmethod
+    def from_views(cls, views) -> "DistAShare":
+        ref = views[1].m
+        return cls(tuple(views), tuple(ref.shape), ref.dtype)
+
+    @classmethod
+    def from_joint(cls, x: AShare) -> "DistAShare":
+        views = []
+        for i in PARTIES:
+            m = None if i == 0 else x.m
+            views.append(PartyAView(
+                m, {j: x.data[j] for j in _view_indices(i)}))
+        return cls(tuple(views), x.shape, x.dtype)
+
+    def to_joint(self) -> AShare:
+        """Reassemble the joint stack, asserting every component agrees
+        across all parties holding it (a corrupted runtime would diverge)."""
+        m = self.views[1].m
+        for i in (2, 3):
+            assert bool(jnp.all(self.views[i].m == m)), "m view mismatch"
+        lams = []
+        for j in (1, 2, 3):
+            holders = lam_holders(j)
+            ref = self.views[holders[0]].lam[j]
+            for h in holders[1:]:
+                assert bool(jnp.all(self.views[h].lam[j] == ref)), \
+                    f"lambda_{j} view mismatch"
+            lams.append(ref)
+        return AShare(jnp.stack([m] + lams))
+
+    def add(self, other: "DistAShare") -> "DistAShare":
+        return DistAShare(tuple(a.add(b) for a, b in
+                                zip(self.views, other.views)),
+                          self.shape, self.dtype)
+
+    def add_public(self, c) -> "DistAShare":
+        return DistAShare(tuple(v.add_public(c) for v in self.views),
+                          self.shape, self.dtype)
+
+
+@dataclasses.dataclass
+class DistBShare:
+    """The four party views of one logical boolean share."""
+
+    views: tuple
+    shape: tuple
+    dtype: object
+    nbits: int
+
+    @classmethod
+    def from_joint(cls, x: BShare) -> "DistBShare":
+        views = []
+        for i in PARTIES:
+            m = None if i == 0 else x.m
+            views.append(PartyBView(
+                m, {j: x.data[j] for j in _view_indices(i)}, x.nbits))
+        return cls(tuple(views), x.shape, x.dtype, x.nbits)
+
+    def to_joint(self) -> BShare:
+        m = self.views[1].m
+        for i in (2, 3):
+            assert bool(jnp.all(self.views[i].m == m)), "m view mismatch"
+        lams = []
+        for j in (1, 2, 3):
+            holders = lam_holders(j)
+            ref = self.views[holders[0]].lam[j]
+            for h in holders[1:]:
+                assert bool(jnp.all(self.views[h].lam[j] == ref)), \
+                    f"lambda^B_{j} view mismatch"
+            lams.append(ref)
+        return BShare(jnp.stack([m] + lams), self.nbits)

@@ -1,0 +1,431 @@
+"""Party-local Trident protocols over a measured Transport.
+
+Each function here is the message-level realization of the corresponding
+joint-simulation protocol (core/protocols.py, core/conversions.py): the
+same algebra (core/algebra.py), the same PRF streams in the same counter
+order, but every cross-party value actually moves through
+``runtime.transport`` and is measured.  tests/test_runtime.py asserts, per
+protocol, that
+
+  * bytes and rounds observed on the wire == the analytic ``CostTally`` of
+    the joint trace (and hence the paper's lemmas), and
+  * outputs reconstruct bit-identically to the joint simulation.
+
+Message choreography (see algebra.py routing tables):
+
+  * values known to two parties move as a *jmp send*: one holder sends the
+    value, the co-holder sends a hash copy (0 bits, amortized), and the
+    receiver recompute-and-compares -- a tampered wire flips the
+    receiver's abort ledger;
+  * Pi_Mult's gamma piece j is computed locally by P0 and one online
+    party; P0 jmp-sends it to the co-holder of lambda_j (3 elements, the
+    entire offline cost);  online, each m_z' part is jmp-sent to the single
+    party missing it (3 elements -- the paper's 25% saving over Gordon);
+  * Pi_DotP contracts gamma pieces and online parts *before* they cross
+    the wire, making measured communication independent of vector length
+    (Lemma C.3 observed on the wire, not just tallied).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import algebra as AL
+from ..core.algebra import (ASH_SUBSETS, B2A_VALS, GAMMA_LOCAL, GAMMA_RECV,
+                            PART_HOLDERS, PARTIES, REC_ROUTE, ZERO_SUBSETS,
+                            as_op, lam_holders, matmul_shape)
+from .party import DistAShare, DistBShare, PartyAView, PartyBView
+from .runtime import FourPartyRuntime
+
+
+def _jmp(rt: FourPartyRuntime, value_from: int, hash_from: int, dst: int,
+         payload, hash_copy, *, tag: str, nbits: int, phase: str):
+    """Hash-verified send of a value held by two parties: `value_from`
+    ships the payload, `hash_from` ships its own copy as the (free) hash;
+    the receiver compares.  Returns the received payload."""
+    tp = rt.transport
+    tp.send(value_from, dst, payload, tag=tag, nbits=nbits, phase=phase)
+    tp.send(hash_from, dst, hash_copy, tag=tag + ".h", nbits=0, phase=phase)
+    got = tp.recv(dst, value_from, tag=tag)
+    h = tp.recv(dst, hash_from, tag=tag + ".h")
+    if rt.malicious_checks:
+        rt.parties[dst].check_equal(got, h, tag)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# Pi_Sh (Fig. 1): input sharing by P0 (the helper / model owner).
+# ---------------------------------------------------------------------------
+def _broadcast_by_p0(rt: FourPartyRuntime, m, *, tag: str, nbits: int,
+                     phase: str = "online") -> dict:
+    """P0 sends m to every online party (3 elements); recipients
+    cross-check H(m) pairwise (amortized: 0 bits).  Returns {party: copy}."""
+    tp = rt.transport
+    got = {}
+    with tp.round(phase):
+        for dst in (1, 2, 3):
+            tp.send(0, dst, m, tag=tag, nbits=nbits, phase=phase)
+        for dst in (1, 2, 3):
+            got[dst] = tp.recv(dst, 0, tag=tag)
+        if rt.malicious_checks:
+            for dst in (1, 2, 3):
+                nxt = 1 + (dst % 3)
+                tp.send(dst, nxt, got[dst], tag=tag + ".h", nbits=0,
+                        phase=phase)
+            for dst in (1, 2, 3):
+                prv = 1 + ((dst - 2) % 3)
+                h = tp.recv(dst, prv, tag=tag + ".h")
+                rt.parties[dst].check_equal(got[dst], h, tag)
+    return got
+
+
+def share(rt: FourPartyRuntime, v, owner: int = 0) -> DistAShare:
+    if owner != 0:
+        raise NotImplementedError("runtime Pi_Sh: owner P0 only")
+    ring = rt.ring
+    v = jnp.asarray(v, ring.dtype)
+    tag = rt.next_tag("sh")
+    lam = {j: rt.sample(lam_holders(j), v.shape) for j in (1, 2, 3)}
+    m = v + lam[1] + lam[2] + lam[3]
+    got = _broadcast_by_p0(rt, m, tag=tag, nbits=ring.ell)
+    views = [PartyAView(None, dict(lam))]
+    for i in (1, 2, 3):
+        views.append(PartyAView(got[i],
+                                {j: lam[j] for j in (1, 2, 3) if j != i}))
+    return DistAShare.from_views(views)
+
+
+def share_bool(rt: FourPartyRuntime, v, owner: int = 0,
+               nbits: int | None = None) -> DistBShare:
+    if owner != 0:
+        raise NotImplementedError("runtime Pi_Sh^B: owner P0 only")
+    ring = rt.ring
+    nbits = ring.ell if nbits is None else nbits
+    v = jnp.asarray(v, ring.dtype)
+    mask = jnp.asarray((1 << nbits) - 1, ring.dtype)
+    tag = rt.next_tag("shB")
+    lam = {j: rt.sample(lam_holders(j), v.shape) & mask for j in (1, 2, 3)}
+    m = (v ^ lam[1] ^ lam[2] ^ lam[3]) & mask
+    got = _broadcast_by_p0(rt, m, tag=tag, nbits=nbits)
+    views = [PartyBView(None, dict(lam), nbits)]
+    for i in (1, 2, 3):
+        views.append(PartyBView(
+            got[i], {j: lam[j] for j in (1, 2, 3) if j != i}, nbits))
+    return DistBShare(tuple(views), tuple(v.shape), ring.dtype, nbits)
+
+
+# ---------------------------------------------------------------------------
+# Pi_Rec (Fig. 3): each receiver is missing exactly one component.
+# ---------------------------------------------------------------------------
+def reconstruct(rt: FourPartyRuntime, x: DistAShare,
+                receivers=PARTIES) -> dict:
+    """Open [[x]] towards `receivers`; returns {party: plaintext}."""
+    ring = rt.ring
+    tp = rt.transport
+    tag = rt.next_tag("rec")
+    got = {}
+    with tp.round("online"):
+        for r in receivers:
+            sender, hasher = REC_ROUTE[r]
+            if r == 0:
+                val, hval = x.views[sender].m, x.views[hasher].m
+            else:
+                val, hval = x.views[sender].lam[r], x.views[hasher].lam[r]
+            got[r] = _jmp(rt, sender, hasher, r, val, hval,
+                          tag=f"{tag}.c{r}", nbits=ring.ell, phase="online")
+    out = {}
+    for r in receivers:
+        view = x.views[r]
+        m = got[r] if r == 0 else view.m
+        lam = dict(view.lam)
+        if r != 0:
+            lam[r] = got[r]
+        out[r] = m - lam[1] - lam[2] - lam[3]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pi_aSh (Fig. 2): <.>-sharing of a P0-known value, offline phase.
+# ---------------------------------------------------------------------------
+def _ash_pieces(rt: FourPartyRuntime, v0, *, tag: str,
+                phase: str = "offline") -> list:
+    """Deal <v0> by P0.  Returns per-party piece dicts {index: value};
+    piece i is held by P0 and the pair ASH_HOLDERS[i]."""
+    ring = rt.ring
+    tp = rt.transport
+    v0 = jnp.asarray(v0, ring.dtype)
+    v1, v2 = (rt.sample(s, v0.shape) for s in ASH_SUBSETS)
+    v3 = v0 - v1 - v2
+    with tp.round(phase):
+        tp.send(0, 1, v3, tag=tag + ".v3", nbits=ring.ell, phase=phase)
+        tp.send(0, 2, v3, tag=tag + ".v3", nbits=ring.ell, phase=phase)
+        v3_p1 = tp.recv(1, 0, tag=tag + ".v3")
+        v3_p2 = tp.recv(2, 0, tag=tag + ".v3")
+        if rt.malicious_checks:
+            # P1 <-> P2 exchange H(v3): amortized to 0 bits.
+            tp.send(1, 2, v3_p1, tag=tag + ".h", nbits=0, phase=phase)
+            tp.send(2, 1, v3_p2, tag=tag + ".h", nbits=0, phase=phase)
+            rt.parties[2].check_equal(tp.recv(2, 1, tag=tag + ".h"), v3_p2,
+                                      tag)
+            rt.parties[1].check_equal(tp.recv(1, 2, tag=tag + ".h"), v3_p1,
+                                      tag)
+    return [{1: v1, 2: v2, 3: v3},       # P0 (dealer)
+            {2: v2, 3: v3_p1},           # P1
+            {1: v1, 3: v3_p2},           # P2
+            {1: v1, 2: v2}]              # P3
+
+
+def ash_by_p0(rt: FourPartyRuntime, v0) -> list:
+    """Public entry point mirroring core.protocols.ash_by_p0."""
+    return _ash_pieces(rt, v0, tag=rt.next_tag("ash"))
+
+
+# ---------------------------------------------------------------------------
+# Pi_Mult / Pi_DotP / Pi_MatMul (+ fused truncation, Figs. 4/9/18).
+# ---------------------------------------------------------------------------
+def _gamma_exchange(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
+                    op, out_shape, *, tag: str) -> list:
+    """Offline gamma distribution: P0 and GAMMA_LOCAL[j] compute piece j
+    locally; P0 jmp-sends it to GAMMA_RECV[j].  Returns per-party
+    {j: gamma_j} for the pieces each party holds.  3 elements, 1 round
+    (inside the caller's offline round scope)."""
+    ring = rt.ring
+    fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
+
+    def piece(party: int, j: int):
+        a, b = AL.GAMMA_MASK_F[j]
+        return AL.gamma_piece(op, j, x.views[party].lam, y.views[party].lam,
+                              mask=fs[a] - fs[b])
+
+    gamma = [dict() for _ in PARTIES]
+    gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
+    for j in (1, 2, 3):
+        local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
+        gamma[local][j] = piece(local, j)
+        gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
+                              gamma[local][j], tag=f"{tag}.g{j}",
+                              nbits=ring.ell, phase="offline")
+    return gamma
+
+
+def _open_parts(rt: FourPartyRuntime, parts_of, *, tag: str,
+                nbits: int) -> dict:
+    """Online opening: part j (held by the pair PART_HOLDERS[j]) is
+    jmp-sent to P_j.  `parts_of(party, j)` returns party's local value of
+    part j.  Returns {i: {j: part_j}} with every online party complete."""
+    have = {i: {} for i in (1, 2, 3)}
+    tp = rt.transport
+    with tp.round("online"):
+        for j in (1, 2, 3):
+            vs, hs = PART_HOLDERS[j]
+            have[vs][j] = parts_of(vs, j)
+            have[hs][j] = parts_of(hs, j)
+            have[j][j] = _jmp(rt, vs, hs, j, have[vs][j], have[hs][j],
+                              tag=f"{tag}.p{j}", nbits=nbits, phase="online")
+    return have
+
+
+def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
+               contract=None, out_shape=None, truncate: bool = False,
+               name: str = "mult") -> DistAShare:
+    ring = rt.ring
+    tp = rt.transport
+    op = as_op(contract)
+    if out_shape is None:
+        out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))
+    tag = rt.next_tag(name)
+
+    # ---- offline ----------------------------------------------------------
+    if not truncate:
+        # counter order matches core.protocols._mult_like: lam_z, then gamma.
+        lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+        with tp.round("offline"):
+            gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+        mask_term = {j: lam_z[j] for j in (1, 2, 3)}
+        lam_out = lam_z
+        pieces = None
+    else:
+        # counter order matches core.protocols.mult_tr: gamma, r_j, aSh(r^t).
+        with tp.round("offline"):
+            gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+            r = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+            r_total = r[1] + r[2] + r[3]                  # P0-only knowledge
+            pieces = _ash_pieces(rt, ring.truncate(r_total), tag=tag + ".rt")
+        _trunc_pair_check(rt, r, pieces, tag=tag)
+        mask_term = {j: -r[j] for j in (1, 2, 3)}
+        lam_out = None
+
+    # ---- online -----------------------------------------------------------
+    def parts_of(party: int, j: int):
+        vx, vy = x.views[party], y.views[party]
+        return AL.mult_online_part(op, vx.lam[j], vy.lam[j], vx.m, vy.m,
+                                   gamma[party][j], mask_term[j])
+
+    have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
+    views = [None]
+    for i in (1, 2, 3):
+        mm = op(x.views[i].m, y.views[i].m)
+        m_z = mm + have[i][1] + have[i][2] + have[i][3]
+        if truncate:
+            m_z = ring.truncate(m_z)                      # (z - r)^t, public
+            lam_i = {j: -pieces[i][j] for j in pieces[i]}
+        else:
+            lam_i = {j: lam_out[j] for j in (1, 2, 3) if j != i}
+        views.append(PartyAView(m_z, lam_i))
+    if truncate:
+        views[0] = PartyAView(None, {j: -pieces[0][j] for j in (1, 2, 3)})
+    else:
+        views[0] = PartyAView(None, dict(lam_out))
+    return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
+
+
+def _trunc_pair_check(rt: FourPartyRuntime, r: dict, pieces: list, *,
+                      tag: str) -> None:
+    """Lemma D.1 relation r = 2^f r^t + r_d: P1 sends its aggregate to P2
+    (1 element, 1 offline round); P2 range-checks with its own components."""
+    ring = rt.ring
+    tp = rt.transport
+    a1 = AL.trunc_check_send(r[2], r[3], pieces[1][2], pieces[1][3],
+                             ring.frac)
+    with tp.round("offline"):
+        tp.send(1, 2, a1, tag=tag + ".tc", nbits=ring.ell, phase="offline")
+        got = tp.recv(2, 1, tag=tag + ".tc")
+    if rt.malicious_checks:
+        ok = AL.trunc_check_verify(got, r[1], pieces[2][1], ring.frac)
+        rt.parties[2].ledger.record(ok, tag + ".tc")
+
+
+def mult(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
+    """Pi_Mult (Fig. 4): elementwise product, no truncation."""
+    return _mult_like(rt, x, y, name="mult")
+
+
+def dotp(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
+    """Pi_DotP (Fig. 9): wire cost independent of the vector length."""
+    contract = lambda a, b: jnp.sum(a * b, axis=-1)
+    out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))[:-1]
+    return _mult_like(rt, x, y, contract=contract, out_shape=out_shape,
+                      name="dotp")
+
+
+def matmul(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
+    contract = lambda a, b: jnp.matmul(a, b)
+    return _mult_like(rt, x, y, contract=contract,
+                      out_shape=matmul_shape(x.shape, y.shape), name="matmul")
+
+
+def mult_tr(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
+    """Pi_MultTr (Fig. 18): multiplication with free truncation."""
+    return _mult_like(rt, x, y, truncate=True, name="multtr")
+
+
+def matmul_tr(rt: FourPartyRuntime, x: DistAShare,
+              y: DistAShare) -> DistAShare:
+    """[[X]] @ [[Y]] with fused truncation (the PPML workhorse)."""
+    contract = lambda a, b: jnp.matmul(a, b)
+    return _mult_like(rt, x, y, contract=contract,
+                      out_shape=matmul_shape(x.shape, y.shape), truncate=True,
+                      name="matmultr")
+
+
+def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
+    """Standalone truncation (core.protocols.truncate_share twin)."""
+    ring = rt.ring
+    tp = rt.transport
+    tag = rt.next_tag("trunc")
+    out_shape = x.shape
+    # offline: (r, r^t) pair + Lemma D.1 check
+    r = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+    pieces = _ash_pieces(rt, ring.truncate(r[1] + r[2] + r[3]),
+                         tag=tag + ".rt")
+    _trunc_pair_check(rt, r, pieces, tag=tag)
+
+    # online: open z - r via the same part routing (part j = -(lam_j + r_j))
+    def parts_of(party: int, j: int):
+        return -(x.views[party].lam[j] + r[j])
+
+    have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
+    views = [PartyAView(None, {j: -pieces[0][j] for j in (1, 2, 3)})]
+    for i in (1, 2, 3):
+        z_minus_r = x.views[i].m + have[i][1] + have[i][2] + have[i][3]
+        views.append(PartyAView(ring.truncate(z_minus_r),
+                                {j: -pieces[i][j] for j in pieces[i]}))
+    return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pi_vSh (Fig. 7): sharing of a value two online parties both know.
+# `val_of(party)` returns the owner's local copy; the lambda streams mirror
+# core.conversions.vsh_arith and the masked value is jmp-sent to the single
+# non-owner online party (1 element, 1 round).
+# ---------------------------------------------------------------------------
+def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
+         phase: str = "online") -> DistAShare:
+    ring = rt.ring
+    lam = {}
+    for j in (1, 2, 3):
+        subset = PARTIES if j in owners else lam_holders(j)
+        lam[j] = rt.sample(subset, shape)
+    other = next(i for i in (1, 2, 3) if i not in owners)
+    m_owner = {p: val_of(p) + lam[1] + lam[2] + lam[3] for p in owners}
+    m_other = _jmp(rt, owners[0], owners[1], other, m_owner[owners[0]],
+                   m_owner[owners[1]], tag=tag, nbits=ring.ell, phase=phase)
+    m = {other: m_other, **m_owner}
+    views = [PartyAView(None, dict(lam))]
+    for i in (1, 2, 3):
+        views.append(PartyAView(m[i], {j: lam[j] for j in (1, 2, 3)
+                                       if j != i}))
+    return DistAShare(tuple(views), tuple(shape), ring.dtype)
+
+
+# ---------------------------------------------------------------------------
+# B2A (Fig. 16): boolean -> arithmetic, constant online rounds.
+# ---------------------------------------------------------------------------
+def b2a(rt: FourPartyRuntime, v: DistBShare) -> DistAShare:
+    ring = rt.ring
+    tp = rt.transport
+    ell = v.nbits
+    shape = v.shape
+    one = jnp.asarray(1, ring.dtype)
+    tag = rt.next_tag("b2a")
+
+    # ---- offline: aSh of the lambda bit-planes (P0 knows every lambda) ----
+    lam_word0 = (v.views[0].lam[1] ^ v.views[0].lam[2] ^ v.views[0].lam[3])
+    lam_bits0 = jnp.stack([(lam_word0 >> i) & one for i in range(ell)])
+    pieces = _ash_pieces(rt, lam_bits0, tag=tag + ".p")
+
+    # ---- offline round 2: the Fig. 15/16 verification of <p> -------------
+    # P3 sends v1+v2 (ell elements); P2 sends the lambda_1 bit-planes
+    # (1 bit each); P1 completes lambda_b and checks the sum.
+    with tp.round("offline"):
+        agg = pieces[3][1] + pieces[3][2]
+        tp.send(3, 1, agg, tag=tag + ".ck", nbits=ring.ell, phase="offline")
+        l1_word = v.views[2].lam[1]
+        l1_bits = jnp.stack([(l1_word >> i) & one for i in range(ell)])
+        tp.send(2, 1, l1_bits, tag=tag + ".l1", nbits=1, phase="offline")
+        got_agg = tp.recv(1, 3, tag=tag + ".ck")
+        got_l1 = tp.recv(1, 2, tag=tag + ".l1")
+    if rt.malicious_checks:
+        s = got_agg + pieces[1][3]
+        l2 = v.views[1].lam[2]
+        l3 = v.views[1].lam[3]
+        lam_b = jnp.stack([
+            (got_l1[i] ^ ((l2 >> i) & one) ^ ((l3 >> i) & one))
+            for i in range(ell)])
+        rt.parties[1].check_equal(s, lam_b, tag + ".ck")
+
+    # ---- online: compose x/y/z and vSh them (one parallel round) ---------
+    pow2 = (one << jnp.arange(ell, dtype=ring.dtype))
+    pow2 = pow2.reshape((ell,) + (1,) * len(shape))
+
+    def q_of(party: int):
+        return jnp.stack([(v.views[party].m >> i) & one for i in range(ell)])
+
+    out = None
+    with tp.round("online"):
+        for k, (piece, include_q, owners) in enumerate(B2A_VALS):
+            def val_of(party, piece=piece, include_q=include_q):
+                return AL.b2a_val(q_of(party), pieces[party][piece], pow2,
+                                  include_q, ring.dtype)
+            sh = _vsh(rt, val_of, owners, shape, tag=f"{tag}.v{k}")
+            out = sh if out is None else out.add(sh)
+    return out

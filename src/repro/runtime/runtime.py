@@ -1,0 +1,68 @@
+"""FourPartyRuntime: the party-sliced execution engine.
+
+Holds the four ``Party`` objects, the pluggable ``Transport``, and the
+statically-allocated PRF counter stream.  The counter allocation order is
+*the same program order the joint simulation uses* (core/context.py), so a
+runtime seeded like a ``TridentContext`` draws bit-identical F_setup
+streams -- that is what lets tests assert party-sliced outputs reconstruct
+bit-for-bit equal to the joint trace.
+
+Locality discipline: ``sample(subset, shape)`` derives the stream from a
+*party-held* subset key (``PartyKeys`` refuses subsets the party is outside
+of), so every random value any party uses is one it could have derived in a
+real deployment.  All four parties run lock-step in this process; a
+multi-process/socket backend only needs to re-implement ``Transport``.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.algebra import CheckLedger, PARTIES
+from ..core.prf import prf_bits
+from ..core.ring import Ring, RING64
+from .party import Party, PartyKeys
+from .transport import LocalTransport, Transport
+
+
+class FourPartyRuntime:
+    def __init__(self, ring: Ring = RING64, seed: int = 0,
+                 transport: Transport | None = None,
+                 malicious_checks: bool = True):
+        self.ring = ring
+        self.transport = transport if transport is not None \
+            else LocalTransport()
+        self.malicious_checks = malicious_checks
+        master = jax.random.key(seed)
+        self.parties = tuple(
+            Party(i, PartyKeys(master, i), CheckLedger()) for i in PARTIES)
+        self._counter = 0
+        self._tagno = 0
+
+    # -- PRF sampling (counter parity with TridentContext) -----------------
+    def fresh_counter(self) -> int:
+        c = self._counter
+        self._counter += 1
+        return c
+
+    def sample(self, subset, shape) -> jax.Array:
+        """Non-interactive joint sampling by `subset`; the value is derived
+        from a key held by a member party (identical at every member)."""
+        key = self.parties[min(subset)].keys.subset_key(subset)
+        return prf_bits(key, self.fresh_counter(), shape, self.ring)
+
+    # -- bookkeeping -------------------------------------------------------
+    def next_tag(self, op: str) -> str:
+        self._tagno += 1
+        return f"{op}#{self._tagno}"
+
+    def abort_flag(self):
+        """OR over the four parties' check ledgers (any party aborts)."""
+        import jax.numpy as jnp
+        flag = jnp.asarray(False)
+        for p in self.parties:
+            flag = jnp.logical_or(flag, p.abort)
+        return flag
+
+
+def make_runtime(ring: Ring = RING64, seed: int = 0, **kw) -> FourPartyRuntime:
+    return FourPartyRuntime(ring=ring, seed=seed, **kw)

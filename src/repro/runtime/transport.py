@@ -1,0 +1,164 @@
+"""Measured message transport for the party-sliced runtime.
+
+``Transport`` is the pluggable wire interface: point-to-point ``send`` /
+``recv`` plus a ``round`` scope marking one synchronous communication step.
+``LocalTransport`` is the in-memory backend: messages are queued per
+directed link and every byte that crosses is recorded per link and per
+phase (offline/online), so tests can assert measured traffic against the
+analytic ``CostTally`` exactly.  The interface is deliberately shaped so a
+socket / multi-process backend can drop in later: protocols only ever call
+``send``/``recv``/``round`` with party indices and opaque payloads.
+
+Accounting conventions (matching the paper's amortized lemmas):
+
+  * a payload is ``count * nbits`` bits -- nbits is explicit because
+    boolean shares carry sub-word payloads (a 1-bit share costs 1 bit);
+  * hash / commitment copies are tallied at 0 bits (``nbits=0``); they
+    still carry the sender's copy so receivers can recompute-and-compare,
+    which is how tampering flips the abort flag;
+  * a *round* is one synchronous step in which every party may send and
+    then receive.  Nested ``round`` scopes of the same phase merge into the
+    outermost one -- that is how composed protocols (e.g. Pi_MultTr's
+    gamma exchange running alongside Pi_aSh) ship in a single round, the
+    message-level realization of ``CostTally.parallel``.  A round scope
+    that moves no bits counts zero rounds.
+
+Fault injection: ``tamper`` registers a rule that corrupts matching
+payloads in flight (adds ``delta`` mod 2^ell / XORs for boolean payloads).
+The runtime's hash cross-checks then disagree and the receiving party's
+ledger flips the abort flag -- asserted by tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from collections import defaultdict, deque
+
+PHASES = ("offline", "online")
+
+
+def _count(payload) -> int:
+    shape = getattr(payload, "shape", ())
+    return int(math.prod(shape)) if shape else 1
+
+
+@dataclasses.dataclass
+class TamperRule:
+    """Corrupt payloads of messages matching (src, dst, tag substring)."""
+
+    src: int | None = None
+    dst: int | None = None
+    tag: str | None = None
+    delta: int = 1
+    xor: bool = False
+    count: int = 1          # how many matching messages to corrupt
+    hit: int = 0
+
+    def matches(self, src: int, dst: int, tag: str) -> bool:
+        if self.hit >= self.count:
+            return False
+        if self.src is not None and src != self.src:
+            return False
+        if self.dst is not None and dst != self.dst:
+            return False
+        if self.tag is not None and self.tag not in tag:
+            return False
+        return True
+
+
+class Transport:
+    """Wire interface the party-local protocols are written against."""
+
+    def send(self, src: int, dst: int, payload, *, tag: str, nbits: int,
+             phase: str) -> None:
+        raise NotImplementedError
+
+    def recv(self, dst: int, src: int, *, tag: str):
+        raise NotImplementedError
+
+    def round(self, phase: str):
+        """Context manager scoping one synchronous communication round."""
+        raise NotImplementedError
+
+
+class LocalTransport(Transport):
+    """In-memory transport with exact per-link, per-phase measurement."""
+
+    def __init__(self):
+        self._queues: dict[tuple, deque] = defaultdict(deque)
+        # (src, dst) -> phase -> bits
+        self.link_bits: dict[tuple, dict] = defaultdict(
+            lambda: {p: 0 for p in PHASES})
+        self.link_msgs: dict[tuple, int] = defaultdict(int)
+        self.rounds = {p: 0 for p in PHASES}
+        self.phase_bits = {p: 0 for p in PHASES}
+        self._round_depth = {p: 0 for p in PHASES}
+        self._round_traffic = {p: False for p in PHASES}
+        self._tampers: list[TamperRule] = []
+
+    # -- measurement -------------------------------------------------------
+    def bits(self, phase: str | None = None) -> int:
+        if phase is None:
+            return sum(self.phase_bits.values())
+        return self.phase_bits[phase]
+
+    def per_link(self) -> dict:
+        """{(src, dst): {"offline": bits, "online": bits}} for active links."""
+        return {k: dict(v) for k, v in sorted(self.link_bits.items())}
+
+    def totals(self) -> dict:
+        """Same shape as CostTally.totals() -- directly comparable."""
+        return {p: {"rounds": self.rounds[p], "bits": self.phase_bits[p]}
+                for p in PHASES}
+
+    # -- fault injection ---------------------------------------------------
+    def tamper(self, *, src: int | None = None, dst: int | None = None,
+               tag: str | None = None, delta: int = 1, xor: bool = False,
+               count: int = 1) -> TamperRule:
+        rule = TamperRule(src=src, dst=dst, tag=tag, delta=delta, xor=xor,
+                          count=count)
+        self._tampers.append(rule)
+        return rule
+
+    def _apply_tamper(self, src, dst, tag, payload):
+        for rule in self._tampers:
+            if rule.matches(src, dst, tag):
+                rule.hit += 1
+                payload = (payload ^ payload.dtype.type(rule.delta)
+                           if rule.xor
+                           else payload + payload.dtype.type(rule.delta))
+        return payload
+
+    # -- wire --------------------------------------------------------------
+    @contextlib.contextmanager
+    def round(self, phase: str):
+        assert phase in PHASES, phase
+        if self._round_depth[phase] == 0:
+            self._round_traffic[phase] = False
+        self._round_depth[phase] += 1
+        try:
+            yield self
+        finally:
+            self._round_depth[phase] -= 1
+            if self._round_depth[phase] == 0 and self._round_traffic[phase]:
+                self.rounds[phase] += 1
+
+    def send(self, src: int, dst: int, payload, *, tag: str, nbits: int,
+             phase: str) -> None:
+        assert src != dst, f"self-send {src} ({tag})"
+        assert self._round_depth[phase] > 0, \
+            f"send outside a {phase} round scope ({tag})"
+        bits = nbits * _count(payload)
+        if bits:
+            self._round_traffic[phase] = True
+            self.phase_bits[phase] += bits
+            self.link_bits[(src, dst)][phase] += bits
+        self.link_msgs[(src, dst)] += 1
+        payload = self._apply_tamper(src, dst, tag, payload)
+        self._queues[(src, dst, tag)].append(payload)
+
+    def recv(self, dst: int, src: int, *, tag: str):
+        q = self._queues[(src, dst, tag)]
+        assert q, f"recv on empty link P{src}->P{dst} ({tag})"
+        return q.popleft()

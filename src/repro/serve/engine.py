@@ -46,6 +46,23 @@ class ServeStats:
         return threads * per_batch / lat
 
 
+def drain_in_batches(queue: list, batch_size: int, run_batch) -> list:
+    """Pop `queue` in batch_size groups, zero-padding the tail batch;
+    ``run_batch(X, n)`` returns predictions, of which the first n are kept.
+    Shared by PredictionServer and serve.party_server."""
+    out = []
+    while queue:
+        take = queue[:batch_size]
+        del queue[:batch_size]
+        n = len(take)
+        X = np.stack(take)
+        pad = batch_size - n
+        if pad:
+            X = np.concatenate([X, np.zeros((pad,) + X.shape[1:])])
+        out.extend(np.asarray(run_batch(X, n))[:n])
+    return out
+
+
 class PredictionServer:
     """predict_fn(ctx, X_batch) -> shares; engine-owned context per batch
     (fresh PRF counters = fresh offline material, as deployed)."""
@@ -65,26 +82,19 @@ class PredictionServer:
 
     def flush(self):
         """Run all pending queries in batches; returns predictions."""
-        out = []
-        while self._queue:
-            take = self._queue[:self.batch_size]
-            self._queue = self._queue[self.batch_size:]
-            n = len(take)
-            X = np.stack(take)
-            pad = self.batch_size - n
-            if pad:
-                X = np.concatenate([X, np.zeros((pad,) + X.shape[1:])])
+        def run_batch(X, n):
             ctx = make_context(self.ring, seed=self.seed)
             t0 = time.perf_counter()
-            preds = self.predict_fn(ctx, X)
-            preds = np.asarray(preds)
+            preds = np.asarray(self.predict_fn(ctx, X))
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.batches += 1
             self.stats.queries += n
             self.stats.online_rounds += ctx.tally.online.rounds
             self.stats.online_bits += ctx.tally.online.bits
             self.stats.offline_bits += ctx.tally.offline.bits
-            out.extend(preds[:n])
+            return preds
+
+        out = drain_in_batches(self._queue, self.batch_size, run_batch)
         self._results.extend(out)
         return out
 

@@ -1,0 +1,99 @@
+"""Batched secure prediction served by the party-sliced runtime.
+
+The twin of serve/engine.py's ``PredictionServer``: same submit/flush
+batching, but each batch executes across four ``Party`` instances over a
+``LocalTransport`` -- so the reported network numbers are *measured* wire
+traffic (per directed link, per phase), not analytic tallies.  Running both
+servers on the same model is the end-to-end cross-check of the paper's
+cost lemmas at serving scale (benchmarks/runtime_smoke.py does exactly
+that and asserts the two agree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from ..core.costs import LAN, WAN, NetworkModel
+from ..core.ring import RING64
+from ..runtime import FourPartyRuntime
+from .engine import drain_in_batches
+
+
+@dataclasses.dataclass
+class PartyServeStats:
+    batches: int = 0
+    queries: int = 0
+    online_rounds: int = 0
+    online_bits: int = 0
+    offline_bits: int = 0
+    compute_s: float = 0.0
+    link_online_bits: dict = dataclasses.field(default_factory=dict)
+    aborted: bool = False
+
+    def add_transport(self, tp) -> None:
+        t = tp.totals()
+        self.online_rounds += t["online"]["rounds"]
+        self.online_bits += t["online"]["bits"]
+        self.offline_bits += t["offline"]["bits"]
+        for link, bits in tp.per_link().items():
+            acc = self.link_online_bits.setdefault(link, 0)
+            self.link_online_bits[link] = acc + bits["online"]
+
+    def latency(self, net: NetworkModel) -> float:
+        if self.batches == 0:
+            return 0.0
+        return net.seconds(self.online_rounds / self.batches,
+                           self.online_bits / self.batches)
+
+
+class PartyPredictionServer:
+    """predict_fn(rt, X_batch) -> np.ndarray predictions; a fresh
+    FourPartyRuntime (fresh PRF counters + transport) per batch, as a real
+    deployment would provision fresh offline material."""
+
+    def __init__(self, predict_fn: Callable, batch_size: int = 32,
+                 ring=RING64, seed: int = 0):
+        self.predict_fn = predict_fn
+        self.batch_size = batch_size
+        self.ring = ring
+        self.seed = seed
+        self.stats = PartyServeStats()
+        self._queue: list[np.ndarray] = []
+
+    def submit(self, x: np.ndarray) -> None:
+        self._queue.append(np.asarray(x))
+
+    def flush(self) -> list:
+        def run_batch(X, n):
+            rt = FourPartyRuntime(self.ring, seed=self.seed)
+            t0 = time.perf_counter()
+            preds = np.asarray(self.predict_fn(rt, X))
+            self.stats.compute_s += time.perf_counter() - t0
+            self.stats.batches += 1
+            self.stats.queries += n
+            self.stats.add_transport(rt.transport)
+            self.stats.aborted = self.stats.aborted or bool(rt.abort_flag())
+            return preds
+
+        return drain_in_batches(self._queue, self.batch_size, run_batch)
+
+    def report(self) -> dict:
+        links = {f"P{a}->P{b}": bits for (a, b), bits
+                 in sorted(self.stats.link_online_bits.items())}
+        return {
+            "queries": self.stats.queries,
+            "batches": self.stats.batches,
+            "aborted": self.stats.aborted,
+            "online_rounds_per_batch":
+                self.stats.online_rounds / max(self.stats.batches, 1),
+            "online_bits_per_batch":
+                self.stats.online_bits / max(self.stats.batches, 1),
+            "offline_bits_per_batch":
+                self.stats.offline_bits / max(self.stats.batches, 1),
+            "lan_latency_ms": self.stats.latency(LAN) * 1e3,
+            "wan_latency_s": self.stats.latency(WAN),
+            "link_online_bits": links,
+        }

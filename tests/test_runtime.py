@@ -1,0 +1,274 @@
+"""Party-sliced runtime vs joint simulation: the transport-vs-tally and
+bit-identity contract.
+
+For every ported protocol, the bytes and rounds measured on the
+LocalTransport must EXACTLY equal the joint trace's analytic CostTally
+(which tests/test_costs.py already pins to the paper's lemmas), and the
+party-sliced outputs must reconstruct bit-for-bit equal to the joint
+simulation.  Fault injection on the wire must flip the abort flag.
+"""
+import numpy as np
+import pytest
+
+from repro.core import boolean as BW
+from repro.core import conversions as CV
+from repro.core import paper_costs as PC
+from repro.core import protocols as PR
+from repro.core.context import make_context
+from repro.core.ring import RING64
+from repro.runtime import FourPartyRuntime, protocols as RT
+
+
+def pair(seed=7):
+    ctx = make_context(RING64, seed=seed)
+    rt = FourPartyRuntime(RING64, seed=seed)
+    return ctx, rt
+
+
+def tally_delta(ctx, fn):
+    before = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+              ctx.tally.online.rounds, ctx.tally.online.bits)
+    out = fn()
+    after = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+              ctx.tally.online.rounds, ctx.tally.online.bits)
+    return out, tuple(a - b for a, b in zip(after, before))
+
+
+def measured_delta(rt, fn):
+    tp = rt.transport
+    before = (tp.rounds["offline"], tp.phase_bits["offline"],
+              tp.rounds["online"], tp.phase_bits["online"])
+    out = fn()
+    after = (tp.rounds["offline"], tp.phase_bits["offline"],
+             tp.rounds["online"], tp.phase_bits["online"])
+    return out, tuple(a - b for a, b in zip(after, before))
+
+
+def enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+OPS = {
+    "share": (lambda ctx, xs: PR.share(ctx, enc([1.0, 2.0, 3.0])),
+              lambda rt, xs: RT.share(rt, enc([1.0, 2.0, 3.0]))),
+    "rec": (lambda ctx, xs: PR.reconstruct(ctx, xs[0]),
+            lambda rt, xs: RT.reconstruct(rt, xs[0])),
+    "mult": (lambda ctx, xs: PR.mult(ctx, xs[0], xs[1]),
+             lambda rt, xs: RT.mult(rt, xs[0], xs[1])),
+    "mult_tr": (lambda ctx, xs: PR.mult_tr(ctx, xs[0], xs[1]),
+                lambda rt, xs: RT.mult_tr(rt, xs[0], xs[1])),
+    "dotp": (lambda ctx, xs: PR.dotp(ctx, xs[0], xs[1]),
+             lambda rt, xs: RT.dotp(rt, xs[0], xs[1])),
+    "trunc": (lambda ctx, xs: PR.truncate_share(ctx, xs[0]),
+              lambda rt, xs: RT.truncate_share(rt, xs[0])),
+}
+
+
+def setup_inputs(ctx, rt, n=3):
+    x = enc(np.linspace(-2.0, 2.0, n))
+    y = enc(np.linspace(0.5, 1.5, n))
+    return ((PR.share(ctx, x), PR.share(ctx, y)),
+            (RT.share(rt, x), RT.share(rt, y)))
+
+
+class TestTransportEqualsTally:
+    """Measured LocalTransport traffic == analytic CostTally, per protocol."""
+
+    @pytest.mark.parametrize("op", sorted(OPS))
+    def test_bytes_and_rounds(self, op):
+        ctx, rt = pair()
+        joint_in, dist_in = setup_inputs(ctx, rt)
+        jf, rf = OPS[op]
+        _, want = tally_delta(ctx, lambda: jf(ctx, joint_in))
+        _, got = measured_delta(rt, lambda: rf(rt, dist_in))
+        assert got == want, f"{op}: measured {got} != tally {want}"
+
+    def test_b2a(self):
+        ctx, rt = pair()
+        v = np.asarray([5, 2**63 + 1], np.uint64)
+        bj = BW.share_bool(ctx, v)
+        br = RT.share_bool(rt, v)
+        _, want = tally_delta(ctx, lambda: CV.b2a(ctx, bj))
+        _, got = measured_delta(rt, lambda: RT.b2a(rt, br))
+        assert got == want
+        # and the paper's Table I row, scaled by the 2 elements
+        ell = 64
+        r = PC.TRIDENT["b2a"](ell)
+        assert got == (r[0], r[1] * 2, r[2], r[3] * 2)
+
+    @pytest.mark.parametrize("d", [1, 16, 512])
+    def test_dotp_wire_cost_independent_of_length(self, d):
+        """Lemma C.3 observed on the wire: only the share() inputs scale."""
+        ctx, rt = pair()
+        x = enc(np.ones(d))
+        xj, xr = PR.share(ctx, x), RT.share(rt, x)
+        _, got = measured_delta(rt, lambda: RT.dotp(rt, xr, xr))
+        ell = 64
+        assert got == PC.TRIDENT["dotp"](ell)
+
+    def test_matmul_3l_per_output_element(self):
+        ctx, rt = pair()
+        a, b = enc(np.ones((4, 8))), enc(np.ones((8, 5)))
+        aj, bj = PR.share(ctx, a), PR.share(ctx, b)
+        ar, br = RT.share(rt, a), RT.share(rt, b)
+        _, want = tally_delta(ctx, lambda: PR.matmul(ctx, aj, bj))
+        _, got = measured_delta(rt, lambda: RT.matmul(rt, ar, br))
+        assert got == want == (1, 3 * 64 * 20, 1, 3 * 64 * 20)
+
+    def test_per_link_sums_to_total(self):
+        _, rt = pair()
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult_tr(rt, xs, xs)
+        per_link = rt.transport.per_link()
+        for phase in ("offline", "online"):
+            assert sum(l[phase] for l in per_link.values()) == \
+                rt.transport.phase_bits[phase]
+
+    def test_p0_silent_online_after_input_sharing(self):
+        """Trident's headline asymmetry: P0 sends nothing in the online
+        phase once inputs are shared (it only deals offline material)."""
+        _, rt = pair()
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        mark = {k: v["online"] for k, v in rt.transport.per_link().items()}
+        RT.mult_tr(rt, RT.mult(rt, xs, xs), xs)
+        for (src, dst), bits in rt.transport.per_link().items():
+            if src == 0:
+                assert bits["online"] == mark.get((src, dst), 0), \
+                    f"P0 sent online bits on link {(src, dst)}"
+
+
+class TestBitIdentity:
+    """Party-sliced outputs reconstruct bit-for-bit equal to the joint
+    simulation (same seed => same F_setup streams => identical shares)."""
+
+    @pytest.mark.parametrize("op", ["mult", "mult_tr", "dotp", "trunc"])
+    def test_share_stacks_identical(self, op):
+        ctx, rt = pair(seed=13)
+        joint_in, dist_in = setup_inputs(ctx, rt)
+        jf, rf = OPS[op]
+        jout = jf(ctx, joint_in)
+        rout = rf(rt, dist_in)
+        assert np.array_equal(np.asarray(rout.to_joint().data),
+                              np.asarray(jout.data))
+
+    def test_reconstruct_all_receivers_equal_joint(self):
+        ctx, rt = pair(seed=5)
+        joint_in, dist_in = setup_inputs(ctx, rt)
+        z = PR.mult_tr(ctx, *joint_in)
+        want = np.asarray(PR.reconstruct(ctx, z))
+        zr = RT.mult_tr(rt, *dist_in)
+        opened = RT.reconstruct(rt, zr)
+        assert set(opened) == {0, 1, 2, 3}
+        for p, val in opened.items():
+            assert np.array_equal(np.asarray(val), want), f"P{p} differs"
+
+    def test_partial_receivers(self):
+        ctx, rt = pair(seed=6)
+        joint_in, dist_in = setup_inputs(ctx, rt)
+        _, want = tally_delta(
+            ctx, lambda: PR.reconstruct(ctx, joint_in[0], receivers=(0, 3)))
+        opened, got = measured_delta(
+            rt, lambda: RT.reconstruct(rt, dist_in[0], receivers=(0, 3)))
+        assert got == want
+        assert set(opened) == {0, 3}
+
+    def test_b2a_values(self):
+        ctx, rt = pair(seed=8)
+        v = np.asarray([1, 7, 2**40], np.uint64)
+        aj = CV.b2a(ctx, BW.share_bool(ctx, v))
+        ar = RT.b2a(rt, RT.share_bool(rt, v))
+        assert np.array_equal(np.asarray(ar.to_joint().data),
+                              np.asarray(aj.data))
+        opened = RT.reconstruct(rt, ar)
+        assert np.array_equal(np.asarray(opened[1]), v)
+
+    def test_no_abort_on_honest_run(self):
+        _, rt = pair(seed=9)
+        xs = RT.share(rt, enc([1.0, -1.0]))
+        RT.b2a(rt, RT.share_bool(rt, np.asarray([3], np.uint64)))
+        RT.mult_tr(rt, xs, xs)
+        assert not bool(rt.abort_flag())
+
+
+class TestFaultInjection:
+    """A tampered wire message must flip the runtime's abort flag."""
+
+    def test_tampered_ash_aborts(self):
+        _, rt = pair(seed=2)
+        rt.transport.tamper(src=0, dst=1, tag=".v3", delta=3)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult_tr(rt, xs, xs)
+        assert bool(rt.abort_flag())
+
+    def test_tampered_online_part_aborts(self):
+        _, rt = pair(seed=2)
+        rt.transport.tamper(tag=".p1", delta=1)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult(rt, xs, xs)
+        assert bool(rt.abort_flag())
+
+    def test_tampered_gamma_aborts(self):
+        _, rt = pair(seed=2)
+        rt.transport.tamper(src=0, tag=".g2", delta=5)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult(rt, xs, xs)
+        assert bool(rt.abort_flag())
+
+    def test_tampered_share_broadcast_aborts(self):
+        _, rt = pair(seed=2)
+        rt.transport.tamper(src=0, dst=2, tag="sh#1", delta=1)
+        RT.share(rt, enc([1.0]))
+        assert bool(rt.abort_flag())
+
+    def test_tampered_bool_share_broadcast_aborts(self):
+        _, rt = pair(seed=2)
+        rt.transport.tamper(src=0, dst=2, tag="shB#1", xor=True, delta=1)
+        RT.share_bool(rt, np.asarray([3], np.uint64))
+        assert bool(rt.abort_flag())
+
+    def test_misdealt_truncation_pair_aborts(self):
+        """Tamper the r^t aSh so the Lemma D.1 relation breaks: the
+        range-check must catch it even though hashes still agree."""
+        _, rt = pair(seed=2)
+        # corrupt BOTH copies of v3 identically: the hash cross-check
+        # passes, only the relation check can object.
+        rt.transport.tamper(src=0, dst=1, tag=".rt.v3", delta=1 << 20)
+        rt.transport.tamper(src=0, dst=2, tag=".rt.v3", delta=1 << 20)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult_tr(rt, xs, xs)
+        assert bool(rt.abort_flag())
+
+    def test_untampered_run_is_clean(self):
+        _, rt = pair(seed=2)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult_tr(rt, xs, xs)
+        assert not bool(rt.abort_flag())
+
+
+class TestEndToEndPrediction:
+    def test_square_mlp_prediction_matches_joint(self):
+        rng = np.random.RandomState(0)
+        W1, W2 = rng.randn(6, 4) * 0.4, rng.randn(4, 2) * 0.4
+        X = rng.randn(5, 6)
+
+        ctx = make_context(RING64, seed=21)
+        xs = PR.share(ctx, enc(X))
+        w1 = PR.share(ctx, enc(W1))
+        w2 = PR.share(ctx, enc(W2))
+        h = PR.matmul_tr(ctx, xs, w1)
+        out = PR.matmul_tr(ctx, PR.mult_tr(ctx, h, h), w2)
+        want = np.asarray(PR.reconstruct(ctx, out))
+
+        rt = FourPartyRuntime(RING64, seed=21)
+        xr = RT.share(rt, enc(X))
+        w1r = RT.share(rt, enc(W1))
+        w2r = RT.share(rt, enc(W2))
+        hr = RT.matmul_tr(rt, xr, w1r)
+        outr = RT.matmul_tr(rt, RT.mult_tr(rt, hr, hr), w2r)
+        opened = RT.reconstruct(rt, outr)
+
+        assert np.array_equal(np.asarray(opened[1]), want)
+        assert rt.transport.totals() == ctx.tally.totals()
+        assert not bool(rt.abort_flag())
+        got = RING64.decode(opened[1])
+        assert np.allclose(np.asarray(got), (X @ W1) ** 2 @ W2, atol=0.05)
