@@ -1,0 +1,192 @@
+"""Network benchmark: measured wire traffic + modeled LAN/WAN wall-clock
+per ML block on the party-sliced runtime.
+
+Each block runs once over a LocalTransport wrapped in two stacked
+``NetModelTransport``s (LAN inner, WAN outer -- the model layer composes,
+so one run integrates both clocks), reporting
+
+  * measured bytes and rounds per phase (== the analytic CostTally, the
+    transport-vs-tally contract), and
+  * modeled wall-clock per phase under the paper's LAN (~0.2 ms rtt,
+    10 Gbps) and WAN (~72 ms rtt, 40 Mbps) environments.
+
+The WAN numbers make the paper's deployment observation quantitative: the
+activation path (ReLU / sigmoid -- BitExt + BitInj round chains) is
+round-dominated on WAN, while bulk linear algebra is bandwidth-bound on
+LAN.  ``--socket`` additionally runs the end-to-end NN block across four
+OS processes over TCP and reports measured wall-clock next to the models.
+
+One ``BENCH {json}`` line per block on stdout; the aggregate goes to
+``--out`` (default netbench.json) for CI artifact upload.
+
+    PYTHONPATH=src python -m benchmarks.netbench [--quick] [--socket]
+"""
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.core.ring import RING64
+from repro.runtime import FourPartyRuntime, LocalTransport
+from repro.runtime import activations as RA
+from repro.runtime import protocols as RT
+from repro.runtime.net import LAN, WAN, NetModelTransport, run_four_parties
+
+_rng = np.random.RandomState(0)
+_SOCK_W1 = _rng.randn(8, 6) * 0.4
+_SOCK_W2 = _rng.randn(6, 3) * 0.4
+_SOCK_X = _rng.randn(4, 8)
+
+
+def _enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+def _mlp(rt, X, W1, W2):
+    xs = RT.share(rt, _enc(X))
+    w1 = RT.share(rt, _enc(W1))
+    w2 = RT.share(rt, _enc(W2))
+    h = RA.relu(rt, RT.matmul_tr(rt, xs, w1))
+    out = RA.sigmoid(rt, RT.matmul_tr(rt, h, w2))
+    return RT.reconstruct(rt, out)
+
+
+def _socket_nn_program(rt, rank):
+    """Module-level so the spawned party processes can import it."""
+    opened = _mlp(rt, _SOCK_X, _SOCK_W1, _SOCK_W2)
+    return np.asarray(opened[rank])
+
+
+def _blocks(quick: bool):
+    rng = np.random.RandomState(0)
+    b, d_in, d_hid, d_out = (8, 32, 16, 10) if quick else (32, 128, 64, 10)
+    X = rng.randn(b, d_in)
+    W = rng.randn(d_in, d_hid) * 0.2
+    W2 = rng.randn(d_hid, d_out) * 0.2
+    H = rng.randn(b, d_hid)
+
+    def dense(rt):
+        RT.matmul_tr(rt, RT.share(rt, _enc(X)), RT.share(rt, _enc(W)))
+
+    def square(rt):
+        hs = RT.share(rt, _enc(H))
+        RT.mult_tr(rt, hs, hs)
+
+    def relu(rt):
+        RA.relu(rt, RT.share(rt, _enc(H)))
+
+    def sigmoid(rt):
+        RA.sigmoid(rt, RT.share(rt, _enc(H)))
+
+    def mlp(rt):
+        _mlp(rt, X, W, W2)
+
+    return [
+        (f"dense_{d_in}x{d_hid}_b{b}", dense),
+        (f"square_act_{b}x{d_hid}", square),
+        (f"relu_{b}x{d_hid}", relu),
+        (f"sigmoid_{b}x{d_hid}", sigmoid),
+        (f"mlp_inference_{d_in}-{d_hid}-{d_out}_b{b}", mlp),
+    ]
+
+
+def run_block(name, fn, seed=0) -> dict:
+    lan_tp = NetModelTransport(LocalTransport(), LAN)
+    wan_tp = NetModelTransport(lan_tp, WAN)     # models stack: one run, two clocks
+    rt = FourPartyRuntime(RING64, seed=seed, transport=wan_tp)
+    t0 = time.perf_counter()
+    fn(rt)
+    compute_s = time.perf_counter() - t0
+    totals = rt.transport.totals()
+    on_r = totals["online"]["rounds"]
+    rec = {
+        "bench": "netbench",
+        "block": name,
+        "offline_rounds": totals["offline"]["rounds"],
+        "offline_bits": totals["offline"]["bits"],
+        "online_rounds": on_r,
+        "online_bits": totals["online"]["bits"],
+        "lan_offline_s": lan_tp.seconds("offline"),
+        "lan_online_s": lan_tp.seconds("online"),
+        "wan_offline_s": wan_tp.seconds("offline"),
+        "wan_online_s": wan_tp.seconds("online"),
+        "wan_online_round_frac":
+            (on_r * WAN.default.rtt_s / wan_tp.seconds("online"))
+            if wan_tp.seconds("online") else 0.0,
+        "compute_s": compute_s,
+        "aborted": bool(rt.abort_flag()),
+    }
+    assert not rec["aborted"], f"{name}: honest run aborted"
+    return rec
+
+
+def run_socket_block(timeout: float = 300.0) -> dict:
+    t0 = time.perf_counter()
+    results = run_four_parties(_socket_nn_program, seed=7, timeout=timeout,
+                               net_model=WAN)
+    wall = time.perf_counter() - t0
+    ref = results[0]
+    assert all(r.totals == ref.totals for r in results)
+    assert not any(r.abort for r in results)
+    totals = ref.totals
+    return {
+        "bench": "netbench",
+        "block": "mlp_inference_socket_4proc",
+        "offline_rounds": totals["offline"]["rounds"],
+        "offline_bits": totals["offline"]["bits"],
+        "online_rounds": totals["online"]["rounds"],
+        "online_bits": totals["online"]["bits"],
+        "wan_offline_s": ref.modeled_s["offline"],
+        "wan_online_s": ref.modeled_s["online"],
+        "party_wall_s": max(r.wall_s for r in results),
+        "launch_wall_s": wall,
+        "aborted": False,
+    }
+
+
+def run(quick: bool = True, socket: bool = False, out: str | None = None,
+        timeout: float = 300.0):
+    records = []
+    print("netbench: measured wire traffic + modeled LAN/WAN wall-clock")
+    print(f"  LAN preset: rtt {LAN.default.rtt_s*1e3:.2f} ms, "
+          f"{LAN.default.bandwidth_bps/1e9:.0f} Gbps | "
+          f"WAN preset: rtt {WAN.default.rtt_s*1e3:.1f} ms, "
+          f"{WAN.default.bandwidth_bps/1e6:.0f} Mbps")
+    for name, fn in _blocks(quick):
+        rec = run_block(name, fn)
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    # the paper's WAN observation, asserted: activations round-dominated
+    for rec in records:
+        if "relu" in rec["block"] or "sigmoid" in rec["block"]:
+            assert rec["wan_online_round_frac"] > 0.9, rec
+    if socket:
+        rec = run_socket_block(timeout=timeout)
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
+    if out:
+        with open(out, "w") as f:
+            json.dump({"bench": "netbench", "quick": quick,
+                       "records": records}, f, indent=2)
+        print(f"[netbench] wrote {len(records)} records to {out}")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small block sizes (CI smoke)")
+    ap.add_argument("--socket", action="store_true",
+                    help="also run the 4-process socket NN block")
+    ap.add_argument("--out", default="netbench.json")
+    ap.add_argument("--timeout", type=float, default=300.0)
+    args = ap.parse_args()
+    run(quick=args.quick, socket=args.socket, out=args.out,
+        timeout=args.timeout)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

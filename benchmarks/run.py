@@ -15,7 +15,7 @@ def main():
 
     from . import (table_conversions, table_ml_blocks, table_training,
                    table_prediction, table_gordon_aes, table_monetary,
-                   fig20_throughput, runtime_smoke)
+                   fig20_throughput, runtime_smoke, netbench)
     t0 = time.time()
     table_conversions.run()
     print()
@@ -32,6 +32,8 @@ def main():
     fig20_throughput.run()
     print()
     runtime_smoke.run()
+    print()
+    netbench.run(quick=args.fast, out=None)
     print(f"\n[benchmarks done in {time.time()-t0:.1f}s]")
     return 0
 

@@ -208,9 +208,15 @@ def bit_inject(ctx: TridentContext, b: BShare, v: AShare) -> AShare:
     x1 = m_b
     x2 = m_v - 2 * m_v * m_b
     x3 = 2 * m_b - one
-    c2 = x0 - x1 * v.data[1] + x2 * y1_sh[1] + x3 * y2_sh[1]
-    c3 = -x1 * v.data[2] + x2 * y1_sh[2] + x3 * y2_sh[2]
-    c1 = -x1 * v.data[3] + x2 * y1_sh[0] + x3 * y2_sh[0]
+    # Each c_k is vSh'd by an owner pair, so it may only combine components
+    # BOTH owners hold: the aSh piece k (holders ASH_HOLDERS[k] = the pair)
+    # and the lambda_v component the pair shares -- (1,3) hold lambda_2,
+    # (2,1) hold lambda_3, (3,2) hold lambda_1.  Any assignment sums to
+    # x0 - x1*lam_v + x2*y1 + x3*y2 = [[b v]]; this one is the party-local
+    # computable split the runtime port executes verbatim.
+    c2 = x0 - x1 * v.data[2] + x2 * y1_sh[1] + x3 * y2_sh[1]
+    c3 = -x1 * v.data[3] + x2 * y1_sh[2] + x3 * y2_sh[2]
+    c1 = -x1 * v.data[1] + x2 * y1_sh[0] + x3 * y2_sh[0]
     with ctx.tally.parallel():
         s2 = vsh_arith(ctx, c2, owners=(1, 3))
         s3 = vsh_arith(ctx, c3, owners=(2, 1))

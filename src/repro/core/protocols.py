@@ -213,6 +213,19 @@ def matmul(ctx: TridentContext, x: AShare, y: AShare) -> AShare:
 # ---------------------------------------------------------------------------
 # Pi_MultTr (Fig. 18): multiplication with free truncation.
 # ---------------------------------------------------------------------------
+#
+# Guarded r sampling (TRUNC_GUARD): each r_j is uniform over
+# [0, 2^{ell-TRUNC_GUARD}), so r = r1+r2+r3 < 3 * 2^{ell-4} < 2^{ell-2} and
+# the opened z - r cannot wrap mod 2^ell whenever |z| < 2^{ell-2}.  With
+# full-ring uniform r the Fig. 18 probabilistic truncation fails with
+# probability ~|z|/2^ell -- negligible at ell=64 but a likely 2^{ell-2f}
+# decoded error at ell=32 (the seed's ring32 failure).  The trade is the
+# usual SecureML one: r keeps ell-4+log2(3) bits of entropy, masking values
+# bounded by 2^{ell-2} statistically rather than perfectly.
+#
+TRUNC_GUARD = 4
+
+
 def _trunc_pair(ctx: TridentContext, shape):
     """Offline (r, r^t): r = r1+r2+r3 sampled, P0 truncates and <.>-shares.
     The correctness check (Lemma D.1) ships one round later -- call
@@ -220,7 +233,8 @@ def _trunc_pair(ctx: TridentContext, shape):
     aSh overlaps the gamma exchange (Lemma D.2: 2 offline rounds total)."""
     ring = ctx.ring
     r_j = jnp.stack([
-        ctx.sample(tuple(p for p in PARTIES if p != j), shape)
+        ctx.sample_bounded(tuple(p for p in PARTIES if p != j), shape,
+                           ring.ell - TRUNC_GUARD)
         for j in (1, 2, 3)])
     r = r_j[0] + r_j[1] + r_j[2]
     r_t = ring.truncate(r)                      # arithmetic shift (signed)

@@ -17,15 +17,26 @@ Quick tour:
 The same programs run bit-identically on the joint simulation
 (core/protocols.py) -- tests/test_runtime.py holds the two backends equal,
 and holds the measured wire traffic equal to the analytic CostTally.
+
+Submodules: ``protocols`` (arithmetic world + B2A), ``boolean`` (XOR world
++ PPA), ``conversions`` (A2B/Bit2A/BitInj/BitExt), ``activations``
+(ReLU/sigmoid), and ``net`` (socket transport, multi-process cluster,
+LAN/WAN network model).  ``net`` is imported lazily to keep the in-process
+path free of socket machinery.
 """
 from . import protocols
 from .party import (DistAShare, DistBShare, Party, PartyAView, PartyBView,
                     PartyKeys)
 from .runtime import FourPartyRuntime, make_runtime
-from .transport import LocalTransport, TamperRule, Transport
+from .transport import (LocalTransport, MeasuredTransport, TamperRule,
+                        Transport)
+from . import boolean       # noqa: E402  (after party/runtime; cycle-free)
+from . import conversions   # noqa: E402
+from . import activations   # noqa: E402
 
 __all__ = [
     "DistAShare", "DistBShare", "FourPartyRuntime", "LocalTransport",
-    "Party", "PartyAView", "PartyBView", "PartyKeys", "TamperRule",
-    "Transport", "make_runtime", "protocols",
+    "MeasuredTransport", "Party", "PartyAView", "PartyBView", "PartyKeys",
+    "TamperRule", "Transport", "activations", "boolean", "conversions",
+    "make_runtime", "protocols",
 ]

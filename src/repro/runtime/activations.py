@@ -1,0 +1,62 @@
+"""ML activations over party-sliced shares (core/activations.py twins).
+
+ReLU and the piecewise-linear sigmoid, composed from the ported
+conversions with the same sampling order and the same round-overlap
+structure as the joint simulation: sigmoid's two BitExt instances run
+branch-parallel (their online rounds overlap, Table X's 5-round count),
+and all offline material ships together (Lemma D.5's 3 offline rounds).
+With these, a complete neural-network secure inference -- linear layers
+with fused truncation plus nonlinear activations -- runs end-to-end
+across four real processes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import conversions as CV
+from .party import DistAShare, DistBShare
+from .runtime import FourPartyRuntime
+
+
+def relu(rt: FourPartyRuntime, v: DistAShare, return_bit: bool = False):
+    """relu(v) = (1 xor b) * v with b = msb(v)."""
+    b = CV.bit_extract(rt, v)
+    nb = b.invert()
+    out = CV.bit_inject(rt, nb, v)
+    return (out, nb) if return_bit else out
+
+
+def drelu_from_bit(rt: FourPartyRuntime, nb: DistBShare) -> DistAShare:
+    """drelu = (1 xor b) as an arithmetic share (for backprop)."""
+    return CV.bit2a(rt, nb)
+
+
+def mul_by_cached_bit(rt: FourPartyRuntime, nb: DistBShare,
+                      v: DistAShare) -> DistAShare:
+    """dY * drelu using the bit cached by the forward pass (one BitInj)."""
+    return CV.bit_inject(rt, nb, v)
+
+
+def sigmoid(rt: FourPartyRuntime, v: DistAShare) -> DistAShare:
+    """sig(v) = (1^b1) b2 (v + 1/2) + (1^b2);
+    b1 = [v + 1/2 < 0], b2 = [v - 1/2 < 0]."""
+    from .boolean import and_bshare
+    ring = rt.ring
+    tp = rt.transport
+    half = ring.encode(0.5)
+    neg_half = (-ring.to_signed(half)).astype(ring.dtype)
+    v_hi = v.add_public(half)
+    v_lo = v.add_public(neg_half)
+    with tp.parallel(("offline",)):
+        with tp.parallel():
+            with tp.branch():
+                b1 = CV.bit_extract(rt, v_hi)
+            with tp.branch():
+                b2 = CV.bit_extract(rt, v_lo)
+        a = and_bshare(rt, b1.invert(), b2, active_bits=1)
+    with tp.parallel():
+        with tp.branch():
+            t = CV.bit_inject(rt, a, v_hi)
+        with tp.branch():
+            d = CV.bit2a(rt, b2.invert())
+    return t.add(d.mul_public(jnp.asarray(ring.scale, ring.dtype)))

@@ -1,0 +1,178 @@
+"""Party-local boolean world: XOR-shared circuits over a measured Transport.
+
+The message-level twins of core/boolean.py: Pi_vSh^B, the secure AND
+(Pi_Mult over Z_2, same gamma routing tables as the arithmetic world), and
+the Sklansky parallel-prefix adder built from them.  PRF counter order and
+the algebra (core/algebra.py GAMMA_* tables, XOR replacing +) match the
+joint simulation exactly, so outputs reconstruct bit-identically and the
+measured wire traffic equals the analytic CostTally per protocol.
+
+Word-level bit-slicing carries over unchanged: one AND message moves a full
+ring word but is tallied at ``active_bits`` per element, matching the
+joint tally's per-gate accounting (a 1-bit AND costs 3 bits online, not
+3*ell).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from ..core import algebra as AL
+from ..core.algebra import (GAMMA_LOCAL, GAMMA_RECV, PARTIES, ZERO_SUBSETS,
+                            lam_holders)
+from ..core.boolean import _bit_masks
+from .party import DistBShare, PartyBView
+from .protocols import _jmp, _open_parts
+from .runtime import FourPartyRuntime
+
+
+# ---------------------------------------------------------------------------
+# Pi_vSh^B (Fig. 7): verifiable boolean sharing by two owners.
+# ---------------------------------------------------------------------------
+def vsh_bool(rt: FourPartyRuntime, val_of, owners: tuple, shape,
+             nbits: int | None = None, *, tag: str,
+             phase: str = "online") -> DistBShare:
+    """``val_of(party)`` returns the owner's local copy of v.  The masked
+    value is jmp-sent to each non-owner online party (Lemma C.1: nbits per
+    element, doubled when P0 is an owner)."""
+    ring = rt.ring
+    nbits = ring.ell if nbits is None else nbits
+    mask = jnp.asarray((1 << nbits) - 1, ring.dtype)
+    lam = {}
+    for j in (1, 2, 3):
+        subset = PARTIES if j in owners else lam_holders(j)
+        lam[j] = rt.sample(subset, shape) & mask
+    non_owners = tuple(i for i in (1, 2, 3) if i not in owners)
+    m_owner = {p: (jnp.asarray(val_of(p), ring.dtype)
+                   ^ lam[1] ^ lam[2] ^ lam[3]) & mask
+               for p in owners}
+    m = dict(m_owner)
+    vf, hf = owners
+    tp = rt.transport
+    with tp.round(phase):
+        for dst in non_owners:
+            t = tag if len(non_owners) == 1 else f"{tag}.m{dst}"
+            m[dst] = _jmp(rt, vf, hf, dst, m_owner[vf], m_owner[hf],
+                          tag=t, nbits=nbits, phase=phase)
+    views = [PartyBView(None, dict(lam), nbits)]
+    for i in (1, 2, 3):
+        views.append(PartyBView(m[i], {j: lam[j] for j in (1, 2, 3)
+                                       if j != i}, nbits))
+    return DistBShare(tuple(views), tuple(shape), ring.dtype, nbits)
+
+
+# ---------------------------------------------------------------------------
+# Secure AND (Pi_Mult over Z_2, Fig. 4 with XOR/AND).
+# ---------------------------------------------------------------------------
+def _bool_gamma_piece(j: int, lam_x: dict, lam_y: dict, mask):
+    """XOR-world gamma piece j: same GAMMA_TERMS/GAMMA_MASK_F tables as the
+    arithmetic world with (XOR, AND) replacing (+, *)."""
+    acc = None
+    for a, b in AL.GAMMA_TERMS[j]:
+        t = lam_x[a] & lam_y[b]
+        acc = t if acc is None else acc ^ t
+    return acc ^ mask
+
+
+def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
+               active_bits: int | None = None) -> DistBShare:
+    """[[x AND y]]^B.  Offline: 3 gamma-piece jmps; online: 3 part jmps --
+    each tallied at ``active_bits`` bits per element (bit-sliced SIMD)."""
+    ring = rt.ring
+    tp = rt.transport
+    nbits = max(x.nbits, y.nbits)
+    active = nbits if active_bits is None else active_bits
+    out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))
+    tag = rt.next_tag("and")
+
+    # ---- offline: counter order matches core.boolean.and_bshare ----------
+    lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+    fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
+
+    def piece(party: int, j: int):
+        a, b = AL.GAMMA_MASK_F[j]
+        return _bool_gamma_piece(j, x.views[party].lam, y.views[party].lam,
+                                 fs[a] ^ fs[b])
+
+    gamma = [dict() for _ in PARTIES]
+    gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
+    with tp.round("offline"):
+        for j in (1, 2, 3):
+            local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
+            gamma[local][j] = piece(local, j)
+            gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
+                                  gamma[local][j], tag=f"{tag}.g{j}",
+                                  nbits=active, phase="offline")
+
+    # ---- online ----------------------------------------------------------
+    def parts_of(party: int, j: int):
+        vx, vy = x.views[party], y.views[party]
+        return (vx.lam[j] & vy.m) ^ (vx.m & vy.lam[j]) \
+            ^ gamma[party][j] ^ lam_z[j]
+
+    have = _open_parts(rt, parts_of, tag=tag, nbits=active)
+    views = [PartyBView(None, dict(lam_z), nbits)]
+    for i in (1, 2, 3):
+        m_z = (x.views[i].m & y.views[i].m) \
+            ^ have[i][1] ^ have[i][2] ^ have[i][3]
+        views.append(PartyBView(
+            m_z, {j: lam_z[j] for j in (1, 2, 3) if j != i}, nbits))
+    return DistBShare(tuple(views), out_shape, ring.dtype, nbits)
+
+
+# ---------------------------------------------------------------------------
+# Word-level parallel-prefix adder (Sklansky) on bit-packed shares.
+# ---------------------------------------------------------------------------
+def _smear_left(x: DistBShare, width: int) -> DistBShare:
+    """Broadcast isolated boundary bits `width` positions leftward (local:
+    shift-XOR doubling of disjoint bits = OR over GF(2))."""
+    cur = x
+    j = 1
+    while j < width:
+        cur = cur.xor(cur.shift_left(j))
+        j <<= 1
+    return cur
+
+
+def ppa_add(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
+            cin: int = 0) -> DistBShare:
+    """[[x + y + cin]]^B over Z_{2^ell}: log2(ell) AND-levels, each level's
+    two ANDs sharing one round (core.boolean.ppa_add twin)."""
+    ring = rt.ring
+    ell = ring.ell
+    tp = rt.transport
+    p0 = x.xor(y)
+    g = and_bshare(rt, x, y)                       # ell ANDs
+    p = p0
+    if cin:
+        g = g.xor(p.and_public(1))
+    levels = int(math.log2(ell))
+    for k in range(levels):
+        half = 1 << k
+        bnd, upper = _bit_masks(ell, k)
+        gb = _smear_left(g.and_public(bnd).shift_left(1), half)
+        pb = _smear_left(p.and_public(bnd).shift_left(1), half)
+        pu = p.and_public(upper)
+        with tp.parallel():
+            t_g = and_bshare(rt, pu, gb, active_bits=ell // 2)
+            t_p = and_bshare(rt, pu, pb, active_bits=ell // 2)
+        g = g.xor(t_g)
+        p = p.and_public(((1 << ell) - 1) ^ upper).xor(t_p)
+    s = p0.xor(g.shift_left(1))
+    if cin:
+        s = s.xor_public(jnp.asarray(1, ring.dtype))
+    return DistBShare(s.views, s.shape, s.dtype, ell)
+
+
+def ppa_sub(rt: FourPartyRuntime, x: DistBShare, y: DistBShare
+            ) -> DistBShare:
+    """[[x - y]]^B = x + NOT(y) + 1."""
+    return ppa_add(rt, x, y.invert(), cin=1)
+
+
+def msb_of_sum(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
+               cin: int = 0) -> DistBShare:
+    """[[msb(x + y + cin)]]^B as a 1-bit share."""
+    s = ppa_add(rt, x, y, cin=cin)
+    return s.bit(rt.ring.ell - 1)

@@ -1,0 +1,30 @@
+"""Distributed transport subsystem: real sockets + a network model.
+
+Three layers, all behind the ``Transport`` interface the party-local
+protocols are written against (runtime/transport.py):
+
+  * ``framing``      -- length-prefixed, tagged wire format for ring
+                        tensors (dtype + shape + raw bytes);
+  * ``SocketTransport`` -- each party in its own OS process, full TCP mesh,
+                        per-link / per-phase byte accounting identical to
+                        ``LocalTransport`` (same ``MeasuredTransport``
+                        base), hash cross-checks verified on real wire
+                        bytes;
+  * ``NetModel`` / ``NetModelTransport`` -- configurable per-directed-link
+                        latency + bandwidth imposed over either backend,
+                        reporting modeled wall-clock per phase (LAN / WAN
+                        presets from the paper's benchmarking environment).
+
+``cluster.run_four_parties`` launches the four processes on one machine
+and collects per-party results, measured traffic, and abort flags.
+"""
+from .framing import FramingError, recv_frame, send_frame
+from .model import LAN, WAN, LinkSpec, NetModel, NetModelTransport
+from .socket_transport import SocketTransport, TransportTimeout
+from .cluster import PartyResult, run_four_parties
+
+__all__ = [
+    "FramingError", "LAN", "WAN", "LinkSpec", "NetModel",
+    "NetModelTransport", "PartyResult", "SocketTransport",
+    "TransportTimeout", "recv_frame", "send_frame", "run_four_parties",
+]

@@ -1,0 +1,158 @@
+"""Launch the four parties as OS processes on one machine.
+
+``run_four_parties(program)`` spawns one process per party; each builds a
+``SocketTransport`` endpoint of the TCP mesh (optionally wrapped in a
+``NetModelTransport``), constructs a ``FourPartyRuntime`` over it, runs
+``program(rt, rank)``, and ships back a ``PartyResult`` with the program's
+return value, the measured traffic, the party's abort flag, and wall-clock.
+
+``program`` must be a module-level callable (the processes are spawned, so
+it travels by qualified name) and should return numpy-convertible pytrees.
+
+Determinism note: all four processes run the same protocol program from
+the same seed, so their PRF streams, message schedules, and measured
+tallies agree -- the driver asserts exactly that in tests.  Tamper rules
+are installed identically in every process; the process whose rank is the
+message's sender corrupts the wire copy, and every process mirrors the
+corruption in its local simulation so the replicated state stays
+consistent with what actually crossed the network.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import socket
+import time
+import traceback
+
+import numpy as np
+
+from ...core.ring import RING64, Ring
+
+DEFAULT_TIMEOUT = 120.0
+
+
+@dataclasses.dataclass
+class PartyResult:
+    """One party process's view of the run."""
+
+    rank: int
+    result: object
+    totals: dict
+    per_link: dict
+    abort: bool
+    wall_s: float
+    modeled_s: dict | None = None     # phase -> seconds (when net_model set)
+
+
+def _free_ports(n: int) -> list:
+    socks = []
+    try:
+        for _ in range(n):
+            s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            s.bind(("127.0.0.1", 0))
+            socks.append(s)
+        return [s.getsockname()[1] for s in socks]
+    finally:
+        for s in socks:
+            s.close()
+
+
+def _to_np(tree):
+    import jax
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _party_main(rank, endpoints, program, cfg, out_q):
+    try:
+        from .. import FourPartyRuntime
+        from .model import NetModelTransport
+        from .socket_transport import SocketTransport
+
+        base = SocketTransport(rank, endpoints, timeout=cfg["timeout"],
+                               connect_timeout=cfg["timeout"])
+        for rule in cfg["tampers"]:
+            base.tamper(**rule)
+        transport = base
+        if cfg["net_model"] is not None:
+            transport = NetModelTransport(base, cfg["net_model"])
+        rt = FourPartyRuntime(cfg["ring"], seed=cfg["seed"],
+                              transport=transport, **cfg["runtime_kwargs"])
+        t0 = time.perf_counter()
+        result = program(rt, rank)
+        wall = time.perf_counter() - t0
+        out_q.put(PartyResult(
+            rank=rank,
+            result=_to_np(result),
+            totals=base.totals(),
+            per_link={k: dict(v) for k, v in base.per_link().items()},
+            abort=bool(rt.abort_flag()),
+            wall_s=wall,
+            modeled_s=(dict(transport._sec.total)
+                       if transport is not base else None),
+        ))
+        base.close()
+    except BaseException:
+        out_q.put((rank, traceback.format_exc()))
+
+
+def run_four_parties(program, *, ring: Ring = RING64, seed: int = 0,
+                     timeout: float = DEFAULT_TIMEOUT, tampers=(),
+                     net_model=None, runtime_kwargs=None) -> list:
+    """Run ``program(rt, rank)`` across four OS processes over TCP.
+
+    Returns the four ``PartyResult``s ordered by rank.  ``tampers`` is a
+    sequence of keyword dicts forwarded to ``Transport.tamper`` in every
+    process.  ``net_model`` (a ``NetModel``) wraps each party's transport
+    in a ``NetModelTransport`` and fills ``PartyResult.modeled_s``.
+    """
+    ctx = mp.get_context("spawn")
+    endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
+    cfg = {
+        "ring": ring, "seed": seed, "timeout": timeout,
+        "tampers": list(tampers), "net_model": net_model,
+        "runtime_kwargs": dict(runtime_kwargs or {}),
+    }
+    out_q = ctx.Queue()
+    procs = [ctx.Process(target=_party_main,
+                         args=(rank, endpoints, program, cfg, out_q),
+                         daemon=True)
+             for rank in range(4)]
+    for p in procs:
+        p.start()
+    results, errors = {}, {}
+    deadline = time.monotonic() + timeout
+    try:
+        while len(results) + len(errors) < 4:
+            budget = deadline - time.monotonic()
+            if budget <= 0:
+                raise RuntimeError(
+                    f"party processes timed out after {timeout}s "
+                    f"(got {sorted(results)} / errors {sorted(errors)})")
+            try:
+                item = out_q.get(timeout=min(budget, 1.0))
+            except Exception:
+                if any(not p.is_alive() for p in procs) and out_q.empty():
+                    dead = [i for i, p in enumerate(procs)
+                            if not p.is_alive() and i not in results
+                            and i not in errors]
+                    if dead:
+                        raise RuntimeError(
+                            f"party process(es) {dead} died without a "
+                            "result") from None
+                continue
+            if isinstance(item, PartyResult):
+                results[item.rank] = item
+            else:
+                rank, tb = item
+                errors[rank] = tb
+    finally:
+        for p in procs:
+            p.join(timeout=5.0)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+    if errors:
+        msgs = "\n".join(f"--- P{r} ---\n{tb}" for r, tb in sorted(errors.items()))
+        raise RuntimeError(f"party process failures:\n{msgs}")
+    return [results[r] for r in range(4)]

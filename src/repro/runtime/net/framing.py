@@ -1,0 +1,80 @@
+"""Length-prefixed wire format for tagged ring-tensor messages.
+
+One frame is
+
+    [4B header length, big-endian] [header JSON, utf-8] [payload bytes]
+
+with the header carrying the demultiplexing tag plus enough dtype/shape
+metadata to reconstruct the array on the far side:
+
+    {"tag": str, "dtype": "uint64", "shape": [2, 3], "nbytes": 48}
+
+The payload is the array's C-contiguous raw bytes.  JSON keeps the header
+debuggable on the wire (``tcpdump`` shows the protocol choreography in
+clear text); the payload dominates, so header overhead is noise.  Note the
+framing is *transport* metadata -- the tallied communication stays
+``nbits * count`` exactly as the analytic lemmas count it; headers and
+hash copies ride along unbilled, matching the paper's amortized
+accounting.
+"""
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+_LEN = struct.Struct(">I")
+MAX_HEADER = 1 << 20          # sanity bound: a header is ~100 bytes
+
+
+class FramingError(RuntimeError):
+    """Malformed frame or closed connection mid-frame."""
+
+
+def _read_exact(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise FramingError(
+                f"connection closed with {n - len(buf)} bytes outstanding")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_frame(sock, tag: str, payload) -> None:
+    """Serialize one tagged array message onto a stream socket."""
+    arr = np.ascontiguousarray(np.asarray(payload))
+    body = arr.tobytes()
+    header = json.dumps({
+        "tag": tag,
+        "dtype": arr.dtype.str,
+        "shape": list(arr.shape),
+        "nbytes": len(body),
+    }).encode("utf-8")
+    sock.sendall(_LEN.pack(len(header)) + header + body)
+
+
+def recv_frame(sock) -> tuple:
+    """Read one frame; returns (tag, np.ndarray)."""
+    (hlen,) = _LEN.unpack(_read_exact(sock, _LEN.size))
+    if not 0 < hlen <= MAX_HEADER:
+        raise FramingError(f"implausible header length {hlen}")
+    try:
+        header = json.loads(_read_exact(sock, hlen).decode("utf-8"))
+        tag = header["tag"]
+        dtype = np.dtype(header["dtype"])
+        shape = tuple(header["shape"])
+        nbytes = int(header["nbytes"])
+    except (ValueError, KeyError, TypeError) as e:
+        raise FramingError(f"malformed frame header: {e}") from e
+    body = _read_exact(sock, nbytes)
+    try:
+        arr = np.frombuffer(body, dtype=dtype).reshape(shape)
+    except ValueError as e:
+        # header/payload inconsistency (nbytes not a multiple of itemsize,
+        # shape product mismatch): surface as a framing error so the reader
+        # thread posts its EOF sentinel instead of dying silently.
+        raise FramingError(f"frame body does not match header: {e}") from e
+    return tag, arr

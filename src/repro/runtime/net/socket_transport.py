@@ -1,0 +1,180 @@
+"""TCP transport: each party in its own OS process, full mesh.
+
+Execution model -- *replicated program, authoritative wire*: every party
+process runs the same deterministic four-party protocol program (same seed
+=> same F_setup PRF streams, same message schedule), but for every message
+the copy that matters is the one on the wire:
+
+  * when this process is the SENDER (``src == rank``) the payload is
+    framed and written to the TCP link -- these are real bytes leaving the
+    machine's network stack;
+  * when this process is the RECEIVER (``dst == rank``) the payload is
+    read back off the socket and *that* copy (not the locally simulated
+    one) feeds the party's ledger checks and subsequent computation -- a
+    tampered wire therefore flips this party's abort flag exactly as it
+    would in a deployment;
+  * messages between two remote parties are carried by the local
+    simulation queue so the lock-step program can continue (the remote
+    pair exchanges the same bytes on their own link).
+
+Byte/round accounting comes from ``MeasuredTransport`` -- identical to
+``LocalTransport`` by construction, so the transport-vs-tally contract is
+asserted against real wire traffic.  Each peer connection gets a reader
+thread that demultiplexes frames into per-peer queues, which makes the
+send-then-receive round choreography deadlock-free regardless of TCP
+buffer sizes.
+
+Mesh bring-up: every rank listens on its own endpoint, dials every lower
+rank (with retry while the peer's listener comes up), then accepts the
+higher ranks.  A one-byte hello carries the dialer's rank.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import threading
+import time
+from collections import defaultdict, deque
+
+import jax.numpy as jnp
+
+from ..transport import MeasuredTransport
+from .framing import FramingError, recv_frame, send_frame
+
+PARTIES = (0, 1, 2, 3)
+
+
+class TransportTimeout(RuntimeError):
+    """No frame arrived within the timeout (peer died or deadlocked)."""
+
+
+class SocketTransport(MeasuredTransport):
+    """One party's endpoint of the four-way TCP mesh.
+
+    endpoints: list of (host, port) per rank; this process serves
+    ``endpoints[rank]`` and dials the others.
+    """
+
+    def __init__(self, rank: int, endpoints, *, timeout: float = 60.0,
+                 connect_timeout: float = 30.0):
+        super().__init__()
+        assert rank in PARTIES, rank
+        assert len(endpoints) == len(PARTIES), endpoints
+        self.rank = rank
+        self.timeout = timeout
+        self._local: dict[tuple, deque] = defaultdict(deque)
+        self._socks: dict[int, socket.socket] = {}
+        self._inbox: dict[int, queue.Queue] = {
+            p: queue.Queue() for p in PARTIES if p != rank}
+        self._pending: dict[tuple, deque] = defaultdict(deque)
+        self._readers: list[threading.Thread] = []
+        self._reader_err: list[Exception] = []
+        self._closed = False
+        self._connect_mesh(endpoints, connect_timeout)
+        for peer, sock in self._socks.items():
+            t = threading.Thread(target=self._reader_loop,
+                                 args=(peer, sock), daemon=True)
+            t.start()
+            self._readers.append(t)
+
+    # -- mesh bring-up -----------------------------------------------------
+    def _connect_mesh(self, endpoints, connect_timeout: float) -> None:
+        host, port = endpoints[self.rank]
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((host, port))
+        listener.listen(len(PARTIES))
+        try:
+            for peer in range(self.rank):
+                self._socks[peer] = self._dial(endpoints[peer],
+                                               connect_timeout)
+            expect = {p for p in PARTIES if p > self.rank}
+            listener.settimeout(connect_timeout)
+            while expect:
+                conn, _ = listener.accept()
+                self._tune(conn)
+                peer = conn.recv(1)[0]
+                assert peer in expect, f"unexpected hello from rank {peer}"
+                expect.discard(peer)
+                self._socks[peer] = conn
+        finally:
+            listener.close()
+
+    def _dial(self, endpoint, connect_timeout: float) -> socket.socket:
+        deadline = time.monotonic() + connect_timeout
+        while True:
+            try:
+                sock = socket.create_connection(endpoint, timeout=2.0)
+                self._tune(sock)
+                sock.sendall(bytes([self.rank]))
+                return sock
+            except OSError:
+                if time.monotonic() > deadline:
+                    raise TransportTimeout(
+                        f"P{self.rank} could not reach {endpoint}")
+                time.sleep(0.05)
+
+    @staticmethod
+    def _tune(sock: socket.socket) -> None:
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def _reader_loop(self, peer: int, sock: socket.socket) -> None:
+        try:
+            while True:
+                self._inbox[peer].put(recv_frame(sock))
+        except (FramingError, OSError) as e:
+            if not self._closed:
+                self._reader_err.append(e)
+            self._inbox[peer].put(None)          # EOF sentinel
+
+    # -- message movement (MeasuredTransport hooks) ------------------------
+    def _put(self, src: int, dst: int, tag: str, payload) -> None:
+        if src == self.rank:
+            send_frame(self._socks[dst], tag, payload)
+        if dst != self.rank:
+            self._local[(src, dst, tag)].append(payload)
+
+    def _get(self, dst: int, src: int, tag: str):
+        if dst != self.rank:
+            q = self._local[(src, dst, tag)]
+            assert q, f"recv on empty simulated link P{src}->P{dst} ({tag})"
+            return q.popleft()
+        pend = self._pending[(src, tag)]
+        if pend:
+            return jnp.asarray(pend.popleft())
+        deadline = time.monotonic() + self.timeout
+        while True:
+            budget = deadline - time.monotonic()
+            if budget <= 0:
+                raise TransportTimeout(
+                    f"P{self.rank} timed out waiting for {tag} from P{src}")
+            try:
+                frame = self._inbox[src].get(timeout=budget)
+            except queue.Empty:
+                continue
+            if frame is None:
+                err = self._reader_err[-1] if self._reader_err else "EOF"
+                raise TransportTimeout(
+                    f"P{self.rank} link to P{src} died waiting for {tag}: "
+                    f"{err}")
+            got_tag, arr = frame
+            if got_tag == tag:
+                return jnp.asarray(arr)
+            self._pending[(src, got_tag)].append(arr)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        self._closed = True
+        for sock in self._socks.values():
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

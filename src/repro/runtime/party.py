@@ -81,6 +81,15 @@ class PartyAView:
         m = None if self.m is None else self.m + c
         return PartyAView(m, dict(self.lam))
 
+    def neg(self) -> "PartyAView":
+        m = None if self.m is None else -self.m
+        return PartyAView(m, {j: -v for j, v in self.lam.items()})
+
+    def mul_public(self, c) -> "PartyAView":
+        """Public *integer* scaling acts on every component (linear)."""
+        m = None if self.m is None else self.m * c
+        return PartyAView(m, {j: v * c for j, v in self.lam.items()})
+
 
 @dataclasses.dataclass
 class PartyBView:
@@ -89,6 +98,32 @@ class PartyBView:
     m: jax.Array | None
     lam: dict[int, jax.Array]
     nbits: int
+
+    def xor(self, other: "PartyBView") -> "PartyBView":
+        m = None if self.m is None else self.m ^ other.m
+        return PartyBView(m, {j: self.lam[j] ^ other.lam[j]
+                              for j in self.lam},
+                          max(self.nbits, other.nbits))
+
+    def xor_public(self, c) -> "PartyBView":
+        """Public XOR touches only m (the twin of add_public); P0 no-op."""
+        m = None if self.m is None else self.m ^ c
+        return PartyBView(m, dict(self.lam), self.nbits)
+
+    def and_public(self, mask) -> "PartyBView":
+        m = None if self.m is None else self.m & mask
+        return PartyBView(m, {j: v & mask for j, v in self.lam.items()},
+                          self.nbits)
+
+    def shift_left(self, k: int) -> "PartyBView":
+        m = None if self.m is None else self.m << k
+        return PartyBView(m, {j: v << k for j, v in self.lam.items()},
+                          self.nbits)
+
+    def shift_right(self, k: int) -> "PartyBView":
+        m = None if self.m is None else self.m >> k
+        return PartyBView(m, {j: v >> k for j, v in self.lam.items()},
+                          self.nbits)
 
 
 def _view_indices(party: int) -> tuple:
@@ -143,6 +178,17 @@ class DistAShare:
         return DistAShare(tuple(v.add_public(c) for v in self.views),
                           self.shape, self.dtype)
 
+    def sub(self, other: "DistAShare") -> "DistAShare":
+        return self.add(other.neg())
+
+    def neg(self) -> "DistAShare":
+        return DistAShare(tuple(v.neg() for v in self.views),
+                          self.shape, self.dtype)
+
+    def mul_public(self, c) -> "DistAShare":
+        return DistAShare(tuple(v.mul_public(c) for v in self.views),
+                          self.shape, self.dtype)
+
 
 @dataclasses.dataclass
 class DistBShare:
@@ -175,3 +221,41 @@ class DistBShare:
                     f"lambda^B_{j} view mismatch"
             lams.append(ref)
         return BShare(jnp.stack([m] + lams), self.nbits)
+
+    # -- local boolean linear ops (the runtime twins of BShare's) ----------
+    def xor(self, other: "DistBShare") -> "DistBShare":
+        return DistBShare(tuple(a.xor(b) for a, b in
+                                zip(self.views, other.views)),
+                          self.shape, self.dtype,
+                          max(self.nbits, other.nbits))
+
+    def xor_public(self, c) -> "DistBShare":
+        return DistBShare(tuple(v.xor_public(c) for v in self.views),
+                          self.shape, self.dtype, self.nbits)
+
+    def invert(self) -> "DistBShare":
+        """NOT = XOR with public all-ones over the valid bits."""
+        ones = jnp.asarray((1 << self.nbits) - 1, self.dtype)
+        return self.xor_public(ones)
+
+    def and_public(self, mask) -> "DistBShare":
+        mask = jnp.asarray(mask, self.dtype)
+        return DistBShare(tuple(v.and_public(mask) for v in self.views),
+                          self.shape, self.dtype, self.nbits)
+
+    def shift_left(self, k: int) -> "DistBShare":
+        return DistBShare(tuple(v.shift_left(k) for v in self.views),
+                          self.shape, self.dtype, self.nbits)
+
+    def shift_right(self, k: int) -> "DistBShare":
+        return DistBShare(tuple(v.shift_right(k) for v in self.views),
+                          self.shape, self.dtype, self.nbits)
+
+    def bit(self, k: int) -> "DistBShare":
+        """Extract bit plane k as a 1-bit share."""
+        one = jnp.asarray(1, self.dtype)
+        views = tuple(PartyBView(
+            None if v.m is None else (v.m >> k) & one,
+            {j: (lv >> k) & one for j, lv in v.lam.items()}, 1)
+            for v in self.views)
+        return DistBShare(views, self.shape, self.dtype, 1)

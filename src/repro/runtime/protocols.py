@@ -30,6 +30,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core import algebra as AL
+from ..core import protocols as PR
 from ..core.algebra import (ASH_SUBSETS, B2A_VALS, GAMMA_LOCAL, GAMMA_RECV,
                             PART_HOLDERS, PARTIES, REC_ROUTE, ZERO_SUBSETS,
                             as_op, lam_holders, matmul_shape)
@@ -245,9 +246,13 @@ def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
         pieces = None
     else:
         # counter order matches core.protocols.mult_tr: gamma, r_j, aSh(r^t).
+        # Guarded r sampling (core.protocols.TRUNC_GUARD): keeps the opened
+        # z - r from wrapping mod 2^ell for |z| < 2^{ell-2}.
         with tp.round("offline"):
             gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
-            r = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+            r = {j: rt.sample_bounded(lam_holders(j), out_shape,
+                                      ring.ell - PR.TRUNC_GUARD)
+                 for j in (1, 2, 3)}
             r_total = r[1] + r[2] + r[3]                  # P0-only knowledge
             pieces = _ash_pieces(rt, ring.truncate(r_total), tag=tag + ".rt")
         _trunc_pair_check(rt, r, pieces, tag=tag)
@@ -333,8 +338,10 @@ def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
     tp = rt.transport
     tag = rt.next_tag("trunc")
     out_shape = x.shape
-    # offline: (r, r^t) pair + Lemma D.1 check
-    r = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+    # offline: (r, r^t) pair + Lemma D.1 check (guarded r, see mult path)
+    r = {j: rt.sample_bounded(lam_holders(j), out_shape,
+                              ring.ell - PR.TRUNC_GUARD)
+         for j in (1, 2, 3)}
     pieces = _ash_pieces(rt, ring.truncate(r[1] + r[2] + r[3]),
                          tag=tag + ".rt")
     _trunc_pair_check(rt, r, pieces, tag=tag)
@@ -353,10 +360,12 @@ def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
 
 
 # ---------------------------------------------------------------------------
-# Pi_vSh (Fig. 7): sharing of a value two online parties both know.
+# Pi_vSh (Fig. 7): sharing of a value two parties both know.
 # `val_of(party)` returns the owner's local copy; the lambda streams mirror
-# core.conversions.vsh_arith and the masked value is jmp-sent to the single
-# non-owner online party (1 element, 1 round).
+# core.conversions.vsh_arith and the masked value is jmp-sent to every
+# non-owner *online* party: one element when both owners are online, two
+# when P0 is an owner (Lemma C.1's factor 2).  The caller provides the
+# round scope so parallel vSh instances share one round.
 # ---------------------------------------------------------------------------
 def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
          phase: str = "online") -> DistAShare:
@@ -365,11 +374,14 @@ def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
     for j in (1, 2, 3):
         subset = PARTIES if j in owners else lam_holders(j)
         lam[j] = rt.sample(subset, shape)
-    other = next(i for i in (1, 2, 3) if i not in owners)
+    non_owners = tuple(i for i in (1, 2, 3) if i not in owners)
     m_owner = {p: val_of(p) + lam[1] + lam[2] + lam[3] for p in owners}
-    m_other = _jmp(rt, owners[0], owners[1], other, m_owner[owners[0]],
-                   m_owner[owners[1]], tag=tag, nbits=ring.ell, phase=phase)
-    m = {other: m_other, **m_owner}
+    m = dict(m_owner)
+    vf, hf = owners
+    for dst in non_owners:
+        t = tag if len(non_owners) == 1 else f"{tag}.m{dst}"
+        m[dst] = _jmp(rt, vf, hf, dst, m_owner[vf], m_owner[hf],
+                      tag=t, nbits=ring.ell, phase=phase)
     views = [PartyAView(None, dict(lam))]
     for i in (1, 2, 3):
         views.append(PartyAView(m[i], {j: lam[j] for j in (1, 2, 3)

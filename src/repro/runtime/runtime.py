@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 
 from ..core.algebra import CheckLedger, PARTIES
-from ..core.prf import prf_bits
+from ..core.prf import prf_bits, prf_bounded
 from ..core.ring import Ring, RING64
 from .party import Party, PartyKeys
 from .transport import LocalTransport, Transport
@@ -27,11 +27,16 @@ from .transport import LocalTransport, Transport
 class FourPartyRuntime:
     def __init__(self, ring: Ring = RING64, seed: int = 0,
                  transport: Transport | None = None,
-                 malicious_checks: bool = True):
+                 malicious_checks: bool = True,
+                 bitext_guard: int = 24, bitext_method: str = "mul"):
         self.ring = ring
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.malicious_checks = malicious_checks
+        # BitExt knobs, mirroring TridentContext (same defaults so the two
+        # backends trace identical programs).
+        self.bitext_guard = bitext_guard
+        self.bitext_method = bitext_method
         master = jax.random.key(seed)
         self.parties = tuple(
             Party(i, PartyKeys(master, i), CheckLedger()) for i in PARTIES)
@@ -49,6 +54,11 @@ class FourPartyRuntime:
         from a key held by a member party (identical at every member)."""
         key = self.parties[min(subset)].keys.subset_key(subset)
         return prf_bits(key, self.fresh_counter(), shape, self.ring)
+
+    def sample_bounded(self, subset, shape, bits: int) -> jax.Array:
+        """Joint sampling of values uniform over [0, 2^bits)."""
+        key = self.parties[min(subset)].keys.subset_key(subset)
+        return prf_bounded(key, self.fresh_counter(), shape, self.ring, bits)
 
     # -- bookkeeping -------------------------------------------------------
     def next_tag(self, op: str) -> str:

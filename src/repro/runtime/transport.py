@@ -2,12 +2,12 @@
 
 ``Transport`` is the pluggable wire interface: point-to-point ``send`` /
 ``recv`` plus a ``round`` scope marking one synchronous communication step.
-``LocalTransport`` is the in-memory backend: messages are queued per
-directed link and every byte that crosses is recorded per link and per
-phase (offline/online), so tests can assert measured traffic against the
-analytic ``CostTally`` exactly.  The interface is deliberately shaped so a
-socket / multi-process backend can drop in later: protocols only ever call
-``send``/``recv``/``round`` with party indices and opaque payloads.
+``MeasuredTransport`` holds the accounting every backend shares -- per-link
+/ per-phase bits, round counting, tamper rules -- and delegates the actual
+message movement to ``_put`` / ``_get``.  ``LocalTransport`` is the
+in-memory backend (per-link deques); ``runtime.net.SocketTransport`` is the
+multi-process TCP backend and inherits the *identical* accounting, so the
+transport-vs-tally contract holds on a real wire too.
 
 Accounting conventions (matching the paper's amortized lemmas):
 
@@ -22,6 +22,11 @@ Accounting conventions (matching the paper's amortized lemmas):
     gamma exchange running alongside Pi_aSh) ship in a single round, the
     message-level realization of ``CostTally.parallel``.  A round scope
     that moves no bits counts zero rounds.
+  * ``parallel`` / ``branch`` scopes mirror ``CostTally.parallel`` /
+    ``CostTally.branch`` for *multi-round* protocols that run concurrently
+    (e.g. sigmoid's two BitExt instances): rounds closed in sibling
+    branches take the max, not the sum, exactly as the analytic tally
+    counts them.  Bits always sum.
 
 Fault injection: ``tamper`` registers a rule that corrupts matching
 payloads in flight (adds ``delta`` mod 2^ell / XORs for boolean payloads).
@@ -67,6 +72,68 @@ class TamperRule:
         return True
 
 
+class RoundFrames:
+    """Per-phase additive accounting with parallel (max) / branch (sum)
+    frames -- the transport-side twin of CostTally's round bookkeeping.
+
+    ``total`` maps phase -> accumulated quantity (int rounds for the
+    transports, float seconds for the network model).  ``add`` routes the
+    amount to the nearest enclosing frame capturing that phase; parallel
+    frames keep the max of their branches, branch frames sequence (sum).
+    """
+
+    def __init__(self):
+        self.total = {p: 0 for p in PHASES}
+        self._stack: list[dict] = []
+
+    def add(self, phase: str, amount) -> None:
+        frame = self._capturing_frame(phase)
+        if frame is None:
+            self.total[phase] += amount
+        elif frame["mode"] == "seq":
+            frame[phase] += amount
+        else:
+            frame[phase] = max(frame[phase], amount)
+
+    def _capturing_frame(self, phase):
+        for frame in reversed(self._stack):
+            if phase in frame["phases"]:
+                return frame
+        return None
+
+    @contextlib.contextmanager
+    def parallel(self, phases=PHASES):
+        frame = {"offline": 0, "online": 0, "phases": tuple(phases),
+                 "mode": "par"}
+        self._stack.append(frame)
+        try:
+            yield
+        finally:
+            self._stack.pop()
+            self._fold_out(frame)
+
+    @contextlib.contextmanager
+    def branch(self):
+        frame = {"offline": 0, "online": 0, "phases": PHASES, "mode": "seq"}
+        self._stack.append(frame)
+        try:
+            yield
+        finally:
+            self._stack.pop()
+            self._fold_out(frame)
+
+    def _fold_out(self, frame):
+        for phase in PHASES:
+            if frame[phase]:
+                parent = self._capturing_frame(phase)
+                if parent is None:
+                    self.total[phase] += frame[phase]
+                elif parent["mode"] == "seq":
+                    parent[phase] += frame[phase]
+                else:
+                    parent[phase] = max(parent[phase], frame[phase])
+
+
 class Transport:
     """Wire interface the party-local protocols are written against."""
 
@@ -81,17 +148,29 @@ class Transport:
         """Context manager scoping one synchronous communication round."""
         raise NotImplementedError
 
+    def parallel(self, phases=PHASES):
+        """Scope in which sibling branches' rounds overlap (max)."""
+        raise NotImplementedError
 
-class LocalTransport(Transport):
-    """In-memory transport with exact per-link, per-phase measurement."""
+    def branch(self):
+        """One concurrently-running branch of an enclosing parallel()."""
+        raise NotImplementedError
+
+
+class MeasuredTransport(Transport):
+    """Shared measurement layer: exact per-link, per-phase accounting.
+
+    Subclasses implement ``_put`` (deliver a payload on the directed link)
+    and ``_get`` (obtain the next payload of a (src, dst, tag) stream).
+    """
 
     def __init__(self):
-        self._queues: dict[tuple, deque] = defaultdict(deque)
+        self._frames = RoundFrames()
         # (src, dst) -> phase -> bits
         self.link_bits: dict[tuple, dict] = defaultdict(
             lambda: {p: 0 for p in PHASES})
         self.link_msgs: dict[tuple, int] = defaultdict(int)
-        self.rounds = {p: 0 for p in PHASES}
+        self.rounds = self._frames.total
         self.phase_bits = {p: 0 for p in PHASES}
         self._round_depth = {p: 0 for p in PHASES}
         self._round_traffic = {p: False for p in PHASES}
@@ -142,7 +221,13 @@ class LocalTransport(Transport):
         finally:
             self._round_depth[phase] -= 1
             if self._round_depth[phase] == 0 and self._round_traffic[phase]:
-                self.rounds[phase] += 1
+                self._frames.add(phase, 1)
+
+    def parallel(self, phases=PHASES):
+        return self._frames.parallel(phases)
+
+    def branch(self):
+        return self._frames.branch()
 
     def send(self, src: int, dst: int, payload, *, tag: str, nbits: int,
              phase: str) -> None:
@@ -156,9 +241,30 @@ class LocalTransport(Transport):
             self.link_bits[(src, dst)][phase] += bits
         self.link_msgs[(src, dst)] += 1
         payload = self._apply_tamper(src, dst, tag, payload)
-        self._queues[(src, dst, tag)].append(payload)
+        self._put(src, dst, tag, payload)
 
     def recv(self, dst: int, src: int, *, tag: str):
+        return self._get(dst, src, tag)
+
+    # -- backend hooks -----------------------------------------------------
+    def _put(self, src: int, dst: int, tag: str, payload) -> None:
+        raise NotImplementedError
+
+    def _get(self, dst: int, src: int, tag: str):
+        raise NotImplementedError
+
+
+class LocalTransport(MeasuredTransport):
+    """In-memory transport: all four parties lock-step in one process."""
+
+    def __init__(self):
+        super().__init__()
+        self._queues: dict[tuple, deque] = defaultdict(deque)
+
+    def _put(self, src: int, dst: int, tag: str, payload) -> None:
+        self._queues[(src, dst, tag)].append(payload)
+
+    def _get(self, dst: int, src: int, tag: str):
         q = self._queues[(src, dst, tag)]
         assert q, f"recv on empty link P{src}->P{dst} ({tag})"
         return q.popleft()

@@ -2,15 +2,27 @@
 
 The twin of serve/engine.py's ``PredictionServer``: same submit/flush
 batching, but each batch executes across four ``Party`` instances over a
-``LocalTransport`` -- so the reported network numbers are *measured* wire
+measured transport -- so the reported network numbers are *measured* wire
 traffic (per directed link, per phase), not analytic tallies.  Running both
 servers on the same model is the end-to-end cross-check of the paper's
 cost lemmas at serving scale (benchmarks/runtime_smoke.py does exactly
 that and asserts the two agree).
+
+Transport backends:
+
+  * default -- a fresh in-memory ``LocalTransport`` per batch (a real
+    deployment provisions fresh offline material the same way);
+  * ``net_model=`` -- wraps each batch's transport in a
+    ``NetModelTransport``, adding modeled per-phase wall-clock under the
+    given LAN/WAN link profile to the report;
+  * ``serve_over_sockets`` -- the distributed path: four OS processes over
+    TCP serve the whole query stream, returning predictions plus measured
+    per-link wire traffic and (optionally) modeled time.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable
 
@@ -18,8 +30,12 @@ import numpy as np
 
 from ..core.costs import LAN, WAN, NetworkModel
 from ..core.ring import RING64
-from ..runtime import FourPartyRuntime
+from ..runtime import FourPartyRuntime, LocalTransport
 from .engine import drain_in_batches
+
+# runtime.net (sockets, cluster spawn, network model) is imported lazily
+# inside the paths that need it, keeping the in-process serving path free
+# of socket machinery -- the same invariant runtime/__init__.py keeps.
 
 
 @dataclasses.dataclass
@@ -30,6 +46,8 @@ class PartyServeStats:
     online_bits: int = 0
     offline_bits: int = 0
     compute_s: float = 0.0
+    modeled_s: dict = dataclasses.field(
+        default_factory=lambda: {"offline": 0.0, "online": 0.0})
     link_online_bits: dict = dataclasses.field(default_factory=dict)
     aborted: bool = False
 
@@ -52,14 +70,19 @@ class PartyServeStats:
 class PartyPredictionServer:
     """predict_fn(rt, X_batch) -> np.ndarray predictions; a fresh
     FourPartyRuntime (fresh PRF counters + transport) per batch, as a real
-    deployment would provision fresh offline material."""
+    deployment would provision fresh offline material.
+
+    ``net_model`` (a runtime.net.NetModel) adds per-link modeled
+    wall-clock to the report alongside the coarse LAN/WAN estimates.
+    """
 
     def __init__(self, predict_fn: Callable, batch_size: int = 32,
-                 ring=RING64, seed: int = 0):
+                 ring=RING64, seed: int = 0, net_model=None):
         self.predict_fn = predict_fn
         self.batch_size = batch_size
         self.ring = ring
         self.seed = seed
+        self.net_model = net_model
         self.stats = PartyServeStats()
         self._queue: list[np.ndarray] = []
 
@@ -68,13 +91,22 @@ class PartyPredictionServer:
 
     def flush(self) -> list:
         def run_batch(X, n):
-            rt = FourPartyRuntime(self.ring, seed=self.seed)
+            base = LocalTransport()
+            if self.net_model is not None:
+                from ..runtime.net import NetModelTransport
+                tp = NetModelTransport(base, self.net_model)
+            else:
+                tp = base
+            rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
             t0 = time.perf_counter()
             preds = np.asarray(self.predict_fn(rt, X))
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.batches += 1
             self.stats.queries += n
-            self.stats.add_transport(rt.transport)
+            self.stats.add_transport(base)
+            if self.net_model is not None:
+                for phase in ("offline", "online"):
+                    self.stats.modeled_s[phase] += tp.seconds(phase)
             self.stats.aborted = self.stats.aborted or bool(rt.abort_flag())
             return preds
 
@@ -83,7 +115,7 @@ class PartyPredictionServer:
     def report(self) -> dict:
         links = {f"P{a}->P{b}": bits for (a, b), bits
                  in sorted(self.stats.link_online_bits.items())}
-        return {
+        out = {
             "queries": self.stats.queries,
             "batches": self.stats.batches,
             "aborted": self.stats.aborted,
@@ -97,3 +129,59 @@ class PartyPredictionServer:
             "wan_latency_s": self.stats.latency(WAN),
             "link_online_bits": links,
         }
+        if self.net_model is not None:
+            nb = max(self.stats.batches, 1)
+            out[f"modeled_{self.net_model.name}_online_s_per_batch"] = \
+                self.stats.modeled_s["online"] / nb
+            out[f"modeled_{self.net_model.name}_offline_s_per_batch"] = \
+                self.stats.modeled_s["offline"] / nb
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Distributed serving: four OS processes over TCP.
+# ---------------------------------------------------------------------------
+def _serve_batches(rt, rank, predict_fn=None, batches=None):
+    """Party-process main for socket serving: the mesh and PRF stream
+    persist across the batch loop (one offline provisioning per stream,
+    unlike the per-batch reset of the in-process server)."""
+    return [np.asarray(predict_fn(rt, X)) for X in batches]
+
+
+def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
+                       ring=RING64, seed: int = 0, net_model=None,
+                       timeout: float = 300.0):
+    """Serve a query stream across four party processes over TCP.
+
+    ``predict_fn(rt, X_batch)`` has the same contract as
+    ``PartyPredictionServer``'s: a module-level (picklable, since the
+    party processes are spawned) callable returning the prediction
+    *array* for the batch -- reconstruct inside and return one party's
+    opened copy, as examples/secure_inference_parties.py does.  Returns
+    (predictions list, report dict); the report carries the measured
+    per-link wire traffic all four processes agree on.
+    """
+    from ..runtime.net import run_four_parties
+    queries = [np.asarray(q) for q in queries]
+    batches = [np.stack(queries[i:i + batch_size])
+               for i in range(0, len(queries), batch_size)]
+    program = functools.partial(_serve_batches, predict_fn=predict_fn,
+                                batches=batches)
+    results = run_four_parties(program, ring=ring, seed=seed,
+                               net_model=net_model, timeout=timeout)
+    ref = results[0]
+    assert all(r.totals == ref.totals for r in results), \
+        "party processes disagree on measured traffic"
+    preds = [p for batch in results[1].result for p in batch]
+    report = {
+        "queries": len(queries),
+        "batches": len(batches),
+        "aborted": any(r.abort for r in results),
+        "totals": ref.totals,
+        "link_online_bits": {f"P{a}->P{b}": bits["online"]
+                             for (a, b), bits in ref.per_link.items()},
+        "party_wall_s": max(r.wall_s for r in results),
+    }
+    if net_model is not None:
+        report[f"modeled_{net_model.name}_s"] = ref.modeled_s
+    return preds, report

@@ -6,7 +6,6 @@ lives in test_arch_smoke.py.
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core.context import make_context
 from repro.nn.engine import TridentEngine, PlainEngine
@@ -125,13 +124,10 @@ class TestModelEndToEnd:
     """One full Trident-vs-Plain train step (dense family; the other
     families are covered structurally by the arch smokes)."""
 
-    @pytest.mark.xfail(
-        reason="pre-existing seed failure (recorded in the seed's pytest "
-               "cache): fixed-point quantization noise at this tiny scale "
-               "pushes the loss/grad agreement past the test tolerance; "
-               "ROADMAP item.",
-        strict=False)
     def test_dense_train_step_consistency(self, rng):
+        """The guarded truncation pair (core.protocols.TRUNC_GUARD) bounds
+        the Fig. 18 error to its 1-LSB probabilistic level, which keeps the
+        tiny-scale loss/grad agreement inside the tolerances below."""
         cfg = tiny("dense")
         params_np = M.init_params(cfg, seed=1)
         ids = rng.randint(0, cfg.vocab, (2, 8))

@@ -1,0 +1,120 @@
+"""NetModel / NetModelTransport: modeled wall-clock over measured traffic.
+
+The model composes over the in-process backend here (the socket-backed
+composition is exercised by tests/test_socket_transport.py).  Pinned
+properties: per-round integration (rtt + slowest link's bits/bandwidth),
+parallel-branch overlap (max, mirroring the round accounting), preset
+provenance, and the LAN-vs-WAN regime split -- WAN time round-dominated,
+LAN time bandwidth-sensitive.
+"""
+import numpy as np
+import pytest
+
+from repro.core.ring import RING64
+from repro.runtime import FourPartyRuntime, LocalTransport
+from repro.runtime import activations as RA
+from repro.runtime import protocols as RT
+from repro.runtime.net import LAN, WAN, LinkSpec, NetModel, NetModelTransport
+
+
+def enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+def modeled_runtime(model, seed=0):
+    tp = NetModelTransport(LocalTransport(), model)
+    return FourPartyRuntime(RING64, seed=seed, transport=tp), tp
+
+
+class TestPresets:
+    def test_paper_environment(self):
+        """Paper Section VI: LAN ~0.2 ms rtt / 10 Gbps; WAN ~72 ms rtt /
+        40 Mbps."""
+        assert LAN.default.rtt_s == pytest.approx(0.2e-3)
+        assert LAN.default.bandwidth_bps == pytest.approx(10e9)
+        assert WAN.default.rtt_s == pytest.approx(72e-3)
+        assert WAN.default.bandwidth_bps == pytest.approx(40e6)
+
+    def test_link_overrides(self):
+        slow = LinkSpec(rtt_s=0.5, bandwidth_bps=1e6)
+        net = NetModel("het", LAN.default, overrides=(((0, 1), slow),))
+        assert net.link(0, 1) is slow
+        assert net.link(1, 0) == LAN.default
+        # the slowest active link gates the round
+        assert net.round_seconds({(0, 1): 1e6, (2, 3): 1e6}) == \
+            pytest.approx(0.5 + 1.0)
+
+
+class TestModeledTime:
+    def test_mult_round_accounting(self):
+        """Pi_Mult: 1 offline + 1 online round; each round's time is
+        rtt + max over links of bits/bandwidth."""
+        net = NetModel("unit", LinkSpec(rtt_s=1.0, bandwidth_bps=64.0))
+        rt, tp = modeled_runtime(net)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        online_share = tp.seconds("online")
+        RT.mult(rt, xs, xs)
+        # offline: one round, 3 gamma messages on distinct links, 128 bits
+        # each at 64 bps -> 1 + 2 s
+        assert tp.seconds("offline") == pytest.approx(3.0)
+        # online: one round, slowest link again 128 bits
+        assert tp.seconds("online") - online_share == pytest.approx(3.0)
+
+    def test_hash_copies_are_free(self):
+        """0-bit hash copies move bytes but add no modeled time beyond the
+        round they ride in (amortized-hash convention)."""
+        net = NetModel("unit", LinkSpec(rtt_s=1.0, bandwidth_bps=1e12))
+        rt, tp = modeled_runtime(net)
+        xs = RT.share(rt, enc([1.0]))
+        RT.reconstruct(rt, xs)
+        # share: 1 online round; reconstruct: 1 online round
+        assert tp.seconds("online") == pytest.approx(2.0, abs=1e-6)
+
+    def test_sigmoid_branches_overlap(self):
+        """The two BitExts' modeled time takes the max, not the sum: total
+        online time stays at 5 rounds' worth of rtt (Table X)."""
+        net = NetModel("rtt", LinkSpec(rtt_s=1.0, bandwidth_bps=1e15))
+        rt, tp = modeled_runtime(net)
+        xs = RT.share(rt, enc([0.3]))
+        base = tp.seconds("online")
+        RA.sigmoid(rt, xs)
+        assert tp.seconds("online") - base == pytest.approx(5.0, abs=1e-6)
+
+    def test_wan_activation_path_is_round_dominated(self):
+        """The deployment regime the paper stresses: the multi-round
+        activation path (ReLU on a 16x32 layer output) pays ~all its WAN
+        time in rtts, while the same program on LAN is not rtt-bound."""
+        fracs = {}
+        for model in (WAN, LAN):
+            rt, tp = modeled_runtime(model)
+            xs = RT.share(rt, enc(np.ones((16, 32)) * 0.5))
+            RA.relu(rt, xs)
+            rounds = sum(rt.transport.rounds.values())
+            fracs[model.name] = rounds * model.default.rtt_s / tp.seconds()
+        assert fracs["wan"] > 0.95
+        assert fracs["lan"] < fracs["wan"]
+
+    def test_lan_bulk_matmul_is_bandwidth_bound(self):
+        """Bulk linear algebra flips the regime on LAN: a 256x256-element
+        multiply (~50 Mbit) spends most of its modeled LAN time moving
+        bytes, not waiting on rtts."""
+        rt, tp = modeled_runtime(LAN)
+        xs = RT.share(rt, enc(np.ones((256, 256))))
+        RT.mult_tr(rt, xs, xs)
+        rounds = sum(rt.transport.rounds.values())
+        assert rounds * LAN.default.rtt_s / tp.seconds() < 0.5
+
+    def test_measurement_api_passthrough(self):
+        rt, tp = modeled_runtime(LAN)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult(rt, xs, xs)
+        inner = tp.inner
+        assert tp.totals() == inner.totals()
+        assert tp.per_link() == inner.per_link()
+
+    def test_tamper_through_wrapper(self):
+        rt, tp = modeled_runtime(LAN, seed=2)
+        tp.tamper(tag=".p1", delta=1)
+        xs = RT.share(rt, enc([1.0, 2.0]))
+        RT.mult(rt, xs, xs)
+        assert bool(rt.abort_flag())

@@ -233,13 +233,10 @@ class TestMalicious:
 # 32-bit ring
 # ---------------------------------------------------------------------------
 class TestRing32:
-    @pytest.mark.xfail(
-        reason="pre-existing seed failure: Fig. 18 probabilistic truncation "
-               "wraps with prob ~|z|/2^ell; at ell=32, frac=13 the product "
-               "range makes a 2^(ell-2f)=64 error likely over 50 elements "
-               "(this seed hits 1). Needs guarded r sampling; ROADMAP item.",
-        strict=False)
     def test_mult_tr_ring32(self, ctx32, rng):
+        """Guarded r sampling (protocols.TRUNC_GUARD) keeps the opened
+        z - r from wrapping mod 2^32, so the Fig. 18 truncation error stays
+        at the 1-LSB probabilistic level even at ell=32, frac=13."""
         x, y = rng.randn(50), rng.randn(50)
         z = PR.mult_tr(ctx32, PR.share(ctx32, ctx32.ring.encode(x)),
                        PR.share(ctx32, ctx32.ring.encode(y)))

@@ -1,0 +1,253 @@
+"""Ported conversions/activations on the party runtime: the same
+transport-vs-tally + bit-identity + fault-injection contract that
+tests/test_runtime.py pins for the arithmetic protocols.
+
+For each of A2B, Bit2A, BitInj, BitExt (both variants), secure AND, ReLU
+and sigmoid:
+
+  * bytes and rounds measured on the LocalTransport == the joint trace's
+    analytic CostTally (which tests/test_costs.py pins to the paper);
+  * outputs reconstruct bit-for-bit equal to the joint simulation;
+  * one tampered wire message flips the runtime's abort flag.
+"""
+import numpy as np
+import pytest
+
+from repro.core import activations as ACT
+from repro.core import boolean as BW
+from repro.core import conversions as CV
+from repro.core import paper_costs as PC
+from repro.core import protocols as PR
+from repro.core.context import make_context
+from repro.core.ring import RING64
+from repro.runtime import FourPartyRuntime
+from repro.runtime import activations as RA
+from repro.runtime import boolean as RB
+from repro.runtime import conversions as RC
+from repro.runtime import protocols as RT
+
+
+def pair(seed=7):
+    ctx = make_context(RING64, seed=seed)
+    rt = FourPartyRuntime(RING64, seed=seed)
+    return ctx, rt
+
+
+def tally_delta(ctx, fn):
+    before = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+              ctx.tally.online.rounds, ctx.tally.online.bits)
+    out = fn()
+    after = (ctx.tally.offline.rounds, ctx.tally.offline.bits,
+             ctx.tally.online.rounds, ctx.tally.online.bits)
+    return out, tuple(a - b for a, b in zip(after, before))
+
+
+def measured_delta(rt, fn):
+    tp = rt.transport
+    before = (tp.rounds["offline"], tp.phase_bits["offline"],
+              tp.rounds["online"], tp.phase_bits["online"])
+    out = fn()
+    after = (tp.rounds["offline"], tp.phase_bits["offline"],
+             tp.rounds["online"], tp.phase_bits["online"])
+    return out, tuple(a - b for a, b in zip(after, before))
+
+
+def enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+VALS = np.asarray([2.0, -3.0, 0.5])
+BITS = np.asarray([1, 0, 1], np.uint64)
+
+
+def setup_bit(ctx, rt):
+    return (BW.share_bool(ctx, BITS, nbits=1),
+            RT.share_bool(rt, BITS, nbits=1))
+
+
+def setup_arith(ctx, rt):
+    return PR.share(ctx, enc(VALS)), RT.share(rt, enc(VALS))
+
+
+# op -> (joint fn, runtime fn, input builder)
+OPS = {
+    "a2b": (lambda ctx, j: CV.a2b(ctx, j),
+            lambda rt, d: RC.a2b(rt, d), setup_arith),
+    "bit2a": (lambda ctx, j: CV.bit2a(ctx, j),
+              lambda rt, d: RC.bit2a(rt, d), setup_bit),
+    "bitext_mul": (lambda ctx, j: CV.bit_extract(ctx, j, method="mul"),
+                   lambda rt, d: RC.bit_extract(rt, d, method="mul"),
+                   setup_arith),
+    "bitext_ppa": (lambda ctx, j: CV.bit_extract(ctx, j, method="ppa"),
+                   lambda rt, d: RC.bit_extract(rt, d, method="ppa"),
+                   setup_arith),
+    "relu": (lambda ctx, j: ACT.relu(ctx, j),
+             lambda rt, d: RA.relu(rt, d), setup_arith),
+    "sigmoid": (lambda ctx, j: ACT.sigmoid(ctx, j),
+                lambda rt, d: RA.sigmoid(rt, d), setup_arith),
+}
+
+
+def run_both(op, seed=7):
+    ctx, rt = pair(seed)
+    jf, rf, build = OPS[op]
+    joint_in, dist_in = build(ctx, rt)
+    jout, want = tally_delta(ctx, lambda: jf(ctx, joint_in))
+    rout, got = measured_delta(rt, lambda: rf(rt, dist_in))
+    return ctx, rt, jout, rout, want, got
+
+
+class TestTransportEqualsTally:
+    @pytest.mark.parametrize("op", sorted(OPS))
+    def test_bytes_and_rounds(self, op):
+        *_, want, got = run_both(op)
+        assert got == want, f"{op}: measured {got} != tally {want}"
+
+    def test_bit_inject(self):
+        ctx, rt = pair()
+        bj, br = setup_bit(ctx, rt)
+        vj, vr = setup_arith(ctx, rt)
+        _, want = tally_delta(ctx, lambda: CV.bit_inject(ctx, bj, vj))
+        _, got = measured_delta(rt, lambda: RC.bit_inject(rt, br, vr))
+        assert got == want
+        # Lemma C.11 per element (3 elements shared here)
+        r = PC.TRIDENT["bitinj"](64)
+        assert got == (r[0], r[1] * 3, r[2], r[3] * 3)
+
+    def test_and_bshare(self):
+        ctx, rt = pair()
+        bj, br = setup_bit(ctx, rt)
+        cj, cr = setup_bit(ctx, rt)
+        _, want = tally_delta(
+            ctx, lambda: BW.and_bshare(ctx, bj, cj, active_bits=1))
+        _, got = measured_delta(
+            rt, lambda: RB.and_bshare(rt, br, cr, active_bits=1))
+        # 3 gamma + 3 part messages, 1 active bit, 3 elements: 9 bits/phase
+        assert got == want == (1, 9, 1, 9)
+
+    @pytest.mark.parametrize("op,row", [
+        ("bitext_mul", "bitext"), ("relu", "relu"), ("sigmoid", "sigmoid")])
+    def test_matches_paper_lemmas(self, op, row):
+        """Measured wire traffic == the implementation-exact lemma
+        composition (paper_costs.TRIDENT_IMPL), scaled by the 3 elements."""
+        *_, _, got = run_both(op)
+        r = PC.TRIDENT_IMPL[row](64)
+        assert got == (r[0], r[1] * 3, r[2], r[3] * 3)
+
+    def test_sigmoid_rounds_overlap(self):
+        """Sigmoid's two BitExts overlap: 5 online rounds total (Table X),
+        not the 8 a sequential schedule would pay."""
+        *_, got = run_both("sigmoid")
+        assert got[2] == 5
+
+
+class TestBitIdentity:
+    @pytest.mark.parametrize("op", sorted(OPS))
+    def test_share_stacks_identical(self, op):
+        _, _, jout, rout, *_ = run_both(op, seed=13)
+        assert np.array_equal(np.asarray(rout.to_joint().data),
+                              np.asarray(jout.data))
+
+    def test_relu_values(self):
+        _, rt, _, rout, *_ = run_both("relu", seed=5)
+        got = RING64.decode(np.asarray(RT.reconstruct(rt, rout)[1]))
+        np.testing.assert_allclose(np.asarray(got), np.maximum(VALS, 0),
+                                   atol=1e-2)
+        assert not bool(rt.abort_flag())
+
+    def test_sigmoid_values(self):
+        _, rt, _, rout, *_ = run_both("sigmoid", seed=5)
+        got = RING64.decode(np.asarray(RT.reconstruct(rt, rout)[1]))
+        # piecewise-linear approximation: clip(v + 1/2, 0, 1)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.clip(VALS + 0.5, 0.0, 1.0), atol=1e-2)
+        assert not bool(rt.abort_flag())
+
+    def test_a2b_roundtrip_values(self):
+        _, rt, _, rout, *_ = run_both("a2b", seed=9)
+        got = np.asarray(rout.to_joint().reveal())
+        assert np.array_equal(got, np.asarray(enc(VALS)))
+
+    def test_bit_inject_identical(self):
+        ctx, rt = pair(11)
+        bj, br = setup_bit(ctx, rt)
+        vj, vr = setup_arith(ctx, rt)
+        jout = CV.bit_inject(ctx, bj, vj)
+        rout = RC.bit_inject(rt, br, vr)
+        assert np.array_equal(np.asarray(rout.to_joint().data),
+                              np.asarray(jout.data))
+        got = RING64.decode(np.asarray(RT.reconstruct(rt, rout)[1]))
+        np.testing.assert_allclose(np.asarray(got), BITS.astype(float) * VALS,
+                                   atol=1e-3)
+
+
+class TestFaultInjection:
+    """One tampered wire message per ported protocol flips the abort flag."""
+
+    def tampered(self, tag, fn, *, xor=False, seed=3):
+        rt_clean = FourPartyRuntime(RING64, seed=seed)
+        fn(rt_clean)
+        assert not bool(rt_clean.abort_flag()), "clean run must not abort"
+        rt = FourPartyRuntime(RING64, seed=seed)
+        rt.transport.tamper(tag=tag, delta=1, xor=xor)
+        fn(rt)
+        assert bool(rt.abort_flag()), f"tamper on {tag} went undetected"
+
+    def test_a2b_vsh_tamper(self):
+        self.tampered(".y.m2", lambda rt: RC.a2b(
+            rt, RT.share(rt, enc(VALS))), xor=True)
+
+    def test_and_gamma_tamper(self):
+        self.tampered(".g1", lambda rt: RB.and_bshare(
+            rt, RT.share_bool(rt, BITS, nbits=1),
+            RT.share_bool(rt, BITS, nbits=1)), xor=True)
+
+    def test_bit2a_check_tamper(self):
+        self.tampered(".ck", lambda rt: RC.bit2a(
+            rt, RT.share_bool(rt, BITS, nbits=1)))
+
+    def test_bit2a_ash_tamper(self):
+        self.tampered(".p.v3", lambda rt: RC.bit2a(
+            rt, RT.share_bool(rt, BITS, nbits=1)))
+
+    def test_bitinj_y2_check_tamper(self):
+        self.tampered(".ck2", lambda rt: RC.bit_inject(
+            rt, RT.share_bool(rt, BITS, nbits=1),
+            RT.share(rt, enc(VALS))))
+
+    def test_bitext_rec_tamper(self):
+        self.tampered(".c3", lambda rt: RC.bit_extract(
+            rt, RT.share(rt, enc(VALS))))
+
+    def test_sigmoid_part_tamper(self):
+        self.tampered(".p2", lambda rt: RA.sigmoid(
+            rt, RT.share(rt, enc(VALS))))
+
+
+class TestEndToEndNN:
+    def test_mlp_relu_sigmoid_matches_joint(self):
+        """share -> matmul_tr -> relu -> matmul_tr -> sigmoid -> rec,
+        bit-identical across backends with measured == tally."""
+        rng = np.random.RandomState(0)
+        W1, W2 = rng.randn(5, 4) * 0.4, rng.randn(4, 2) * 0.4
+        X = rng.randn(3, 5)
+
+        ctx = make_context(RING64, seed=21)
+        h = ACT.relu(ctx, PR.matmul_tr(ctx, PR.share(ctx, enc(X)),
+                                       PR.share(ctx, enc(W1))))
+        out = ACT.sigmoid(ctx, PR.matmul_tr(ctx, h, PR.share(ctx, enc(W2))))
+        want = np.asarray(PR.reconstruct(ctx, out))
+
+        rt = FourPartyRuntime(RING64, seed=21)
+        hr = RA.relu(rt, RT.matmul_tr(rt, RT.share(rt, enc(X)),
+                                      RT.share(rt, enc(W1))))
+        outr = RA.sigmoid(rt, RT.matmul_tr(rt, hr, RT.share(rt, enc(W2))))
+        opened = RT.reconstruct(rt, outr)
+
+        assert np.array_equal(np.asarray(opened[1]), want)
+        assert rt.transport.totals() == ctx.tally.totals()
+        assert not bool(rt.abort_flag())
+        # plaintext reference of the piecewise-linear sigmoid
+        ref = np.clip(np.maximum(X @ W1, 0.0) @ W2 + 0.5, 0.0, 1.0)
+        got = np.asarray(RING64.decode(opened[1]))
+        assert np.abs(got - ref).max() < 1e-2
