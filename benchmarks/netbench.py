@@ -1,20 +1,29 @@
 """Network benchmark: measured wire traffic + modeled LAN/WAN wall-clock
-per ML block on the party-sliced runtime.
+per ML block on the party-sliced runtime -- end-to-end AND online-only.
 
-Each block runs once over a LocalTransport wrapped in two stacked
-``NetModelTransport``s (LAN inner, WAN outer -- the model layer composes,
-so one run integrates both clocks), reporting
+Each block runs three ways:
 
-  * measured bytes and rounds per phase (== the analytic CostTally, the
-    transport-vs-tally contract), and
-  * modeled wall-clock per phase under the paper's LAN (~0.2 ms rtt,
-    10 Gbps) and WAN (~72 ms rtt, 40 Mbps) environments.
+  * interleaved (the classic path): one run over a LocalTransport wrapped
+    in two stacked ``NetModelTransport``s (LAN inner, WAN outer -- the
+    model layer composes, so one run integrates both clocks), reporting
+    measured bytes/rounds per phase (== the analytic CostTally) and
+    modeled end-to-end wall-clock per phase;
+  * prep-ahead dealer (repro.offline.deal): the offline half alone, priced
+    under the same stacked models (``*_offline_prep_ms``);
+  * online-only executor (repro.offline.run_online): the online half
+    alone, from the dealer's PrepStore, with offline-phase sends forbidden
+    on the transport -- ``lan_online_only_ms`` / ``wan_online_only_ms``
+    are the numbers directly comparable to the paper's online-phase
+    benchmark tables, printed next to end-to-end.  The bench asserts the
+    split is exact: online-only bytes/rounds == the interleaved run's
+    online phase, zero offline bytes, and (for the NN block) bit-identical
+    predictions.
 
-The WAN numbers make the paper's deployment observation quantitative: the
-activation path (ReLU / sigmoid -- BitExt + BitInj round chains) is
-round-dominated on WAN, while bulk linear algebra is bandwidth-bound on
-LAN.  ``--socket`` additionally runs the end-to-end NN block across four
-OS processes over TCP and reports measured wall-clock next to the models.
+``--socket`` adds the 4-process backends: the end-to-end NN block over
+TCP, and the **pipelined** NN block -- every party process runs a
+background dealer (bounded-queue PrepPipeline) while its online consumer
+drains the stores over the real socket mesh -- reporting measured
+``online_only_ms`` wall-clock next to the modeled LAN/WAN times.
 
 One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 ``--out`` (default netbench.json) for CI artifact upload.
@@ -23,12 +32,14 @@ One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 """
 import argparse
 import json
+import math
 import sys
 import time
 
 import numpy as np
 
 from repro.core.ring import RING64
+from repro.offline import OnlinePrep, PrepPipeline, deal, run_online
 from repro.runtime import FourPartyRuntime, LocalTransport
 from repro.runtime import activations as RA
 from repro.runtime import protocols as RT
@@ -38,6 +49,8 @@ _rng = np.random.RandomState(0)
 _SOCK_W1 = _rng.randn(8, 6) * 0.4
 _SOCK_W2 = _rng.randn(6, 3) * 0.4
 _SOCK_X = _rng.randn(4, 8)
+_SOCK_SEED = 7
+_SOCK_SESSIONS = 3
 
 
 def _enc(x):
@@ -57,6 +70,47 @@ def _socket_nn_program(rt, rank):
     """Module-level so the spawned party processes can import it."""
     opened = _mlp(rt, _SOCK_X, _SOCK_W1, _SOCK_W2)
     return np.asarray(opened[rank])
+
+
+def _sock_deal_program(rt):
+    """Offline twin of _socket_nn_program: shapes only (zeros)."""
+    _mlp(rt, np.zeros_like(_SOCK_X), _SOCK_W1, _SOCK_W2)
+
+
+def _socket_pipelined_program(rt, rank):
+    """Pipelined offline/online over the real mesh: a background dealer
+    thread (LocalTransport, deterministic -- every process derives the
+    identical per-party material) streams PrepStores into a bounded
+    queue; the online consumer drains them over the socket mesh, which
+    forbids offline traffic for the span of each online run."""
+    base = rt.transport
+    lan_tp = NetModelTransport(base, LAN)
+    wan_tp = NetModelTransport(lan_tp, WAN)
+    outs = []
+    online_wall = 0.0
+    deal_wall = 0.0
+    programs = [_sock_deal_program] * _SOCK_SESSIONS
+    with PrepPipeline(programs, ring=rt.ring,
+                      base_seed=_SOCK_SEED) as pipe:
+        for _k, store, drep in pipe.stores():
+            deal_wall += drep.wall_s
+            base.forbid_phase("offline")
+            try:
+                ort = FourPartyRuntime(rt.ring, transport=wan_tp,
+                                       prep=OnlinePrep(store))
+                t0 = time.perf_counter()
+                opened = _mlp(ort, _SOCK_X, _SOCK_W1, _SOCK_W2)
+                online_wall += time.perf_counter() - t0
+            finally:
+                base.allow_phase("offline")
+            outs.append(np.asarray(opened[rank]))
+    return {
+        "out": outs,
+        "online_wall_s": online_wall,
+        "deal_wall_s": deal_wall,
+        "lan_online_s": lan_tp.seconds("online"),
+        "wan_online_s": wan_tp.seconds("online"),
+    }
 
 
 def _blocks(quick: bool):
@@ -81,7 +135,7 @@ def _blocks(quick: bool):
         RA.sigmoid(rt, RT.share(rt, _enc(H)))
 
     def mlp(rt):
-        _mlp(rt, X, W, W2)
+        return np.asarray(_mlp(rt, X, W, W2)[1])
 
     return [
         (f"dense_{d_in}x{d_hid}_b{b}", dense),
@@ -92,12 +146,18 @@ def _blocks(quick: bool):
     ]
 
 
-def run_block(name, fn, seed=0) -> dict:
+def _stacked():
     lan_tp = NetModelTransport(LocalTransport(), LAN)
-    wan_tp = NetModelTransport(lan_tp, WAN)     # models stack: one run, two clocks
+    wan_tp = NetModelTransport(lan_tp, WAN)  # models stack: one run, 2 clocks
+    return lan_tp, wan_tp
+
+
+def run_block(name, fn, seed=0) -> dict:
+    # ---- interleaved end-to-end ------------------------------------------
+    lan_tp, wan_tp = _stacked()
     rt = FourPartyRuntime(RING64, seed=seed, transport=wan_tp)
     t0 = time.perf_counter()
-    fn(rt)
+    interleaved_out = fn(rt)
     compute_s = time.perf_counter() - t0
     totals = rt.transport.totals()
     on_r = totals["online"]["rounds"]
@@ -119,13 +179,43 @@ def run_block(name, fn, seed=0) -> dict:
         "aborted": bool(rt.abort_flag()),
     }
     assert not rec["aborted"], f"{name}: honest run aborted"
+
+    # ---- offline/online split: dealer, then the online-only executor -----
+    lan_d, wan_d = _stacked()
+    store, drep = deal(fn, ring=RING64, seed=seed, transport=wan_d)
+    lan_o, wan_o = _stacked()
+    online_out, orep = run_online(fn, store, ring=RING64, transport=wan_o)
+
+    # the split must be exact: same online wire cost, zero offline bytes,
+    # and the same modeled online clock the interleaved run integrated
+    assert (orep.online_rounds, orep.online_bits) == \
+        (on_r, totals["online"]["bits"]), (orep, totals)
+    assert orep.offline_bits == 0
+    assert (drep.offline_rounds, drep.offline_bits) == \
+        (totals["offline"]["rounds"], totals["offline"]["bits"])
+    assert math.isclose(wan_o.seconds("online"), wan_tp.seconds("online"),
+                        rel_tol=1e-9)
+    if interleaved_out is not None:
+        assert np.array_equal(np.asarray(interleaved_out),
+                              np.asarray(online_out)), \
+            f"{name}: online-only result diverged"
+
+    rec.update({
+        "prep_entries": drep.entries,
+        "offline_deal_wall_s": drep.wall_s,
+        "lan_offline_prep_ms": lan_d.seconds("offline") * 1e3,
+        "wan_offline_prep_ms": wan_d.seconds("offline") * 1e3,
+        "lan_online_only_ms": lan_o.seconds("online") * 1e3,
+        "wan_online_only_ms": wan_o.seconds("online") * 1e3,
+        "online_only_wall_s": orep.wall_s,
+    })
     return rec
 
 
 def run_socket_block(timeout: float = 300.0) -> dict:
     t0 = time.perf_counter()
-    results = run_four_parties(_socket_nn_program, seed=7, timeout=timeout,
-                               net_model=WAN)
+    results = run_four_parties(_socket_nn_program, seed=_SOCK_SEED,
+                               timeout=timeout, net_model=WAN)
     wall = time.perf_counter() - t0
     ref = results[0]
     assert all(r.totals == ref.totals for r in results)
@@ -140,6 +230,48 @@ def run_socket_block(timeout: float = 300.0) -> dict:
         "online_bits": totals["online"]["bits"],
         "wan_offline_s": ref.modeled_s["offline"],
         "wan_online_s": ref.modeled_s["online"],
+        "frames_sent": sum(ref.frames_sent.values()),
+        "party_wall_s": max(r.wall_s for r in results),
+        "launch_wall_s": wall,
+        "aborted": False,
+    }
+
+
+def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
+    """The pipelined 4-process backend: background dealers + online-only
+    consumers over the real TCP mesh; ``online_only_ms`` is measured
+    per-batch online wall-clock (max over parties)."""
+    t0 = time.perf_counter()
+    results = run_four_parties(_socket_pipelined_program, seed=_SOCK_SEED,
+                               timeout=timeout)
+    wall = time.perf_counter() - t0
+    ref = results[0]
+    assert all(r.totals == ref.totals for r in results)
+    assert not any(r.abort for r in results)
+    # the mesh carried ONLY online traffic (dealing is process-local)
+    assert ref.totals["offline"]["bits"] == 0, ref.totals
+    # every session must reproduce its interleaved twin (session k is
+    # dealt from seed _SOCK_SEED + k) bit-for-bit, at every party
+    for k in range(_SOCK_SESSIONS):
+        local = FourPartyRuntime(RING64, seed=_SOCK_SEED + k)
+        want = np.asarray(_mlp(local, _SOCK_X, _SOCK_W1, _SOCK_W2)[1])
+        for res in results:
+            assert np.array_equal(res.result["out"][k], want), \
+                f"pipelined online diverged (session {k}, P{res.rank})"
+    n = _SOCK_SESSIONS
+    return {
+        "bench": "netbench",
+        "block": "mlp_inference_socket_4proc_pipelined",
+        "sessions": n,
+        "online_rounds": ref.totals["online"]["rounds"] // n,
+        "online_bits": ref.totals["online"]["bits"] // n,
+        "offline_bits_on_mesh": ref.totals["offline"]["bits"],
+        "online_only_ms":
+            max(r.result["online_wall_s"] for r in results) / n * 1e3,
+        "offline_deal_ms_overlapped":
+            max(r.result["deal_wall_s"] for r in results) / n * 1e3,
+        "lan_online_only_ms": float(ref.result["lan_online_s"]) / n * 1e3,
+        "wan_online_only_ms": float(ref.result["wan_online_s"]) / n * 1e3,
         "party_wall_s": max(r.wall_s for r in results),
         "launch_wall_s": wall,
         "aborted": False,
@@ -149,7 +281,8 @@ def run_socket_block(timeout: float = 300.0) -> dict:
 def run(quick: bool = True, socket: bool = False, out: str | None = None,
         timeout: float = 300.0):
     records = []
-    print("netbench: measured wire traffic + modeled LAN/WAN wall-clock")
+    print("netbench: measured wire traffic + modeled LAN/WAN wall-clock "
+          "(end-to-end AND online-only)")
     print(f"  LAN preset: rtt {LAN.default.rtt_s*1e3:.2f} ms, "
           f"{LAN.default.bandwidth_bps/1e9:.0f} Gbps | "
           f"WAN preset: rtt {WAN.default.rtt_s*1e3:.1f} ms, "
@@ -166,6 +299,9 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
         rec = run_socket_block(timeout=timeout)
         records.append(rec)
         print("BENCH " + json.dumps(rec))
+        rec = run_socket_pipelined_block(timeout=timeout)
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
     if out:
         with open(out, "w") as f:
             json.dump({"bench": "netbench", "quick": quick,
@@ -179,7 +315,8 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="small block sizes (CI smoke)")
     ap.add_argument("--socket", action="store_true",
-                    help="also run the 4-process socket NN block")
+                    help="also run the 4-process socket NN blocks "
+                         "(end-to-end + pipelined online-only)")
     ap.add_argument("--out", default="netbench.json")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()

@@ -1,0 +1,60 @@
+"""Offline preprocessing subsystem: prep-ahead dealer, serialized
+PrepStore, online-only executor, and offline/online pipelining.
+
+Trident's offline-online paradigm, made executable rather than merely
+tallied:
+
+    dealer  -> PrepStore -> online-only executor
+    (deal)     (disk)       (zero offline bytes, bit-identical outputs)
+
+  * ``store``    -- PrepStore/PrepBank: per-party, tag-keyed, use-once
+                    (replay-protected) offline material, serializable to
+                    disk; plus the DealPrep/OnlinePrep engines behind
+                    ``FourPartyRuntime.prep``;
+  * ``dealer``   -- ``deal(program)`` walks a protocol program's offline
+                    half ahead of time (zero online bytes asserted);
+  * ``executor`` -- ``run_online(program, store)`` runs the online half
+                    alone, with the transport *forbidding* offline traffic;
+  * ``workload`` -- declarative counts/shapes -> canonical program;
+  * ``pipeline`` -- background dealer streaming sessions into a bounded
+                    queue while the online consumer drains them.
+
+Quick tour:
+
+    from repro.offline import Workload, deal, run_online
+
+    wl = Workload().matmul_tr((8, 32), (32, 16)).relu((8, 16))
+    store, drep = deal(wl.program(), seed=7)     # offline, ahead of time
+    store.save("prep/")                          # per-party npz + manifest
+    _, orep = run_online(wl.program(),           # later / elsewhere:
+                         store.load("prep/"))    # online-only, 0 offline B
+
+The heavier modules (dealer/executor/workload/pipeline import the runtime)
+load lazily so ``repro.runtime`` can import ``offline.store`` freely.
+"""
+from .store import (DealPrep, OnlinePrep, PrepBank, PrepError,
+                    PrepKindError, PrepMissingError, PrepReplayError,
+                    PrepStore)
+
+_LAZY = {
+    "deal": "dealer", "deal_sessions": "dealer", "DealReport": "dealer",
+    "run_online": "executor", "online_runtime": "executor",
+    "OnlineReport": "executor",
+    "Workload": "workload", "OpSpec": "workload",
+    "PrepPipeline": "pipeline",
+}
+
+__all__ = [
+    "DealPrep", "DealReport", "OnlinePrep", "OpSpec", "OnlineReport",
+    "PrepBank", "PrepError", "PrepKindError", "PrepMissingError",
+    "PrepPipeline", "PrepReplayError", "PrepStore", "Workload", "deal",
+    "deal_sessions", "online_runtime", "run_online",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,89 @@
+"""The online-only executor: run a protocol program against a PrepStore.
+
+``run_online(program, store)`` executes ``program(rt)`` on a runtime in
+**online mode** (``OnlinePrep``): every protocol pops its offline material
+from the store by tag and runs only its online half.  Two hard guarantees,
+enforced rather than assumed:
+
+  * the transport **forbids the offline phase** -- any offline-phase send
+    raises ``PhaseViolation``, so "zero offline bytes during online
+    execution" is a wire-level invariant, not an accounting convention;
+  * the runtime refuses PRF sampling -- every random value the online run
+    uses provably came out of the serialized store.
+
+Outputs are bit-identical to the interleaved path (same program, same
+dealer seed): the dealer drew the same F_setup streams in the same counter
+order the inline protocols would have.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from ..core.ring import RING64, Ring
+from .store import OnlinePrep, PrepError, PrepStore
+
+
+@dataclasses.dataclass
+class OnlineReport:
+    """What one online-only pass moved (offline is zero by construction)."""
+
+    online_rounds: int
+    online_bits: int
+    offline_bits: int               # asserted 0
+    leftover_entries: int
+    wall_s: float
+    abort: bool
+
+
+def online_runtime(store: PrepStore, *, ring: Ring = RING64, transport=None,
+                   runtime_kwargs: dict | None = None):
+    """Build a consume-mode FourPartyRuntime over `transport` (default: a
+    fresh LocalTransport) with the offline phase forbidden on the wire.
+    Use this directly when composing with an existing transport (e.g. a
+    party daemon's socket mesh); remember to ``allow_phase`` afterwards if
+    the transport is shared with interleaved runs."""
+    from ..runtime import FourPartyRuntime, LocalTransport
+
+    tp = transport if transport is not None else LocalTransport()
+    tp.forbid_phase("offline")
+    return FourPartyRuntime(ring, seed=0, transport=tp,
+                            prep=OnlinePrep(store), **(runtime_kwargs or {}))
+
+
+def run_online(program, store: PrepStore, *, ring: Ring = RING64,
+               transport=None, runtime_kwargs: dict | None = None,
+               strict: bool = True):
+    """Run ``program(rt)`` online-only from `store`; returns
+    (program result, OnlineReport).
+
+    ``strict`` additionally requires the program to consume the store
+    exactly (leftover entries mean the online program diverged from the
+    dealt workload -- as hard an error as a missing entry)."""
+    rt = online_runtime(store, ring=ring, transport=transport,
+                        runtime_kwargs=runtime_kwargs)
+    tp = rt.transport
+    before = tp.totals()
+    t0 = time.perf_counter()
+    try:
+        result = program(rt)
+    finally:
+        tp.allow_phase("offline")
+    wall = time.perf_counter() - t0
+    totals = tp.totals()
+    leftover = store.remaining()
+    if strict and leftover:
+        raise PrepError(
+            f"online program left {leftover} prep entries unconsumed "
+            f"({store.summary()}): it diverged from the dealt workload")
+    report = OnlineReport(
+        online_rounds=totals["online"]["rounds"]
+        - before["online"]["rounds"],
+        online_bits=totals["online"]["bits"] - before["online"]["bits"],
+        offline_bits=totals["offline"]["bits"] - before["offline"]["bits"],
+        leftover_entries=leftover,
+        wall_s=wall,
+        abort=bool(rt.abort_flag()),
+    )
+    assert report.offline_bits == 0, "forbidden phase moved bits"
+    return result, report

@@ -1,0 +1,128 @@
+"""Offline/online pipelining: a background dealer streams PrepStores into
+a bounded queue while the online consumer drains them.
+
+This is the deployment shape of the offline-online paradigm: the dealer
+(offline producer) runs one session ahead -- or as many as ``capacity``
+allows -- of the online executor, so online latency never waits on
+preprocessing and offline cost disappears from the serving critical path.
+The bounded queue gives backpressure: a slow consumer stalls the dealer
+instead of accumulating unbounded material.
+
+The producer deals on its own in-process transport (offline dealing is
+deterministic given the session seed -- in the distributed setting every
+party process runs the same producer and derives identical per-party
+material, shipping none of it over the serving mesh); the consumer runs
+each session online-only over whatever transport it is given, LocalTransport
+or a party daemon's SocketTransport mesh.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+from ..core.ring import RING64, Ring
+from .dealer import deal
+from .store import PrepError
+
+_DONE = object()
+
+
+class PrepPipeline:
+    """Producer/consumer pipeline over the sessions of ``programs``.
+
+    ``programs``: a sequence of protocol programs, one per session (use
+    ``[program] * n`` for n identical batches).  Session k is dealt from
+    seed ``base_seed + k``.  Iterate ``stores()`` (or call
+    ``next_store()``) to consume in order.
+    """
+
+    def __init__(self, programs, *, ring: Ring = RING64, base_seed: int = 0,
+                 capacity: int = 2, transport_factory=None,
+                 runtime_kwargs: dict | None = None):
+        assert capacity >= 1
+        self._programs = list(programs)
+        self._ring = ring
+        self._base_seed = base_seed
+        self._factory = transport_factory
+        self._runtime_kwargs = runtime_kwargs
+        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        self._error: BaseException | None = None
+        self._taken = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._produce, daemon=True,
+                                        name="prep-dealer")
+        self._thread.start()
+
+    @property
+    def sessions(self) -> int:
+        return len(self._programs)
+
+    def _offer(self, item) -> bool:
+        """Bounded put that gives up when the pipeline is cancelled (an
+        abandoned consumer must not leave the dealer parked in put())."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.2)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self) -> None:
+        try:
+            for k, program in enumerate(self._programs):
+                if self._stop.is_set():
+                    return
+                tp = self._factory() if self._factory is not None else None
+                store, report = deal(
+                    program, ring=self._ring, seed=self._base_seed + k,
+                    transport=tp, runtime_kwargs=self._runtime_kwargs,
+                    meta={"session": k})
+                if not self._offer((k, store, report)):
+                    return
+        except BaseException as e:          # surfaced on the consumer side
+            self._error = e
+        finally:
+            self._offer(_DONE)
+
+    def next_store(self, timeout: float | None = None):
+        """(session index, PrepStore, DealReport) of the next session;
+        raises the producer's error, PrepError when exhausted, or
+        PrepError on timeout (the dealer is still mid-session)."""
+        try:
+            item = self._q.get(timeout=timeout)
+        except queue.Empty:
+            raise PrepError(
+                f"timed out after {timeout}s waiting for the dealer "
+                f"(session {self._taken} not yet produced)") from None
+        if item is _DONE:
+            self._q.put(_DONE)              # stay terminal for later calls
+            if self._error is not None:
+                raise self._error
+            raise PrepError(
+                f"prep pipeline exhausted after {self._taken} sessions")
+        self._taken += 1
+        return item
+
+    def stores(self):
+        """Iterate (k, store, report) over all remaining sessions."""
+        while self._taken < len(self._programs):
+            yield self.next_store()
+        # drain the terminal sentinel so producer errors still surface
+        if self._error is not None:
+            raise self._error
+
+    def close(self) -> None:
+        """Cancel the producer: no further sessions are dealt, and a
+        producer blocked on the bounded queue is released."""
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

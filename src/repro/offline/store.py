@@ -1,0 +1,306 @@
+"""PrepStore: serialized, use-once preprocessing material, keyed by tag.
+
+One *entry* is the complete offline product of one protocol invocation --
+lambda/gamma shares for Pi_Mult, the Fig. 18 truncation pair (r, r^t) for
+Pi_MultTr, the <u>/<p> conversion masks for Bit2A/B2A, vSh lambda masks
+(plus the exchanged masked value when the vSh itself is offline), ... --
+stored as **four per-party records**: record i holds exactly the
+components P_i is entitled to after the offline phase, nothing more, so a
+serialized store can be sliced per party and shipped to four real hosts.
+
+Keys are the runtime's protocol tags ("multtr#3", "b2a#7.v0", ...), which
+are deterministic program-order identifiers: the dealer pass and the
+online-only pass of the *same* program generate the same tag sequence, so
+the online executor finds its material by the tag it would have used to
+sample inline.  Entries are **use-once**: popping twice raises
+``PrepReplayError`` (mask reuse is a real secret-sharing break, not a
+bookkeeping nicety), popping an unknown tag raises ``PrepMissingError``,
+and a kind mismatch (the program diverged from the dealt workload) raises
+``PrepKindError``.
+
+Disk format (``save``/``load``): a directory with ``manifest.json`` (entry
+order, kinds, metadata) plus one ``party{i}.npz`` per party -- the
+per-party material files a deployment would hand to each host.
+
+``DealPrep`` / ``OnlinePrep`` are the two non-inline engines behind
+``FourPartyRuntime.prep`` (see runtime.runtime.InlinePrep for the seam
+contract).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+PARTIES = (0, 1, 2, 3)
+
+_SEP = "|"          # npz key = f"{tag}|{path}"; tags must not contain it
+_PATH_SEP = "."     # nested record path; int keys encoded as "#<k>"
+
+
+class PrepError(RuntimeError):
+    """Base class for preprocessing-store failures."""
+
+
+class PrepMissingError(PrepError):
+    """The online run asked for a tag the dealer never produced."""
+
+
+class PrepReplayError(PrepError):
+    """A prep entry was consumed twice -- offline material is use-once."""
+
+
+class PrepKindError(PrepError):
+    """Entry exists but was dealt for a different protocol kind."""
+
+
+# ---------------------------------------------------------------------------
+# Record (de)flattening: records are nested dicts with int/str keys and
+# array leaves (that is all the protocol preps produce).
+# ---------------------------------------------------------------------------
+def _enc_key(k) -> str:
+    if isinstance(k, bool):
+        raise PrepError(f"unsupported record key {k!r}")
+    if isinstance(k, (int, np.integer)):
+        return f"#{int(k)}"
+    assert isinstance(k, str) and _PATH_SEP not in k and _SEP not in k \
+        and not k.startswith("#"), f"unsupported record key {k!r}"
+    return k
+
+
+def _dec_key(s: str):
+    return int(s[1:]) if s.startswith("#") else s
+
+
+def _flatten(tree, prefix: str, out: dict) -> None:
+    if isinstance(tree, dict):
+        if not tree:
+            raise PrepError("empty dict in prep record (not round-trippable)")
+        for k, v in tree.items():
+            key = _enc_key(k)
+            _flatten(v, f"{prefix}{_PATH_SEP}{key}" if prefix else key, out)
+    else:
+        out[prefix] = np.asarray(tree)
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for path, arr in flat.items():
+        keys = [_dec_key(s) for s in path.split(_PATH_SEP)]
+        node = tree
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = arr
+    return tree
+
+
+def _to_np(parts: list) -> list:
+    out = []
+    for rec in parts:
+        flat: dict = {}
+        _flatten(rec, "", flat)
+        out.append(_unflatten({p: np.asarray(a) for p, a in flat.items()}))
+    return out
+
+
+def _to_jnp(parts: list) -> list:
+    import jax.numpy as jnp
+
+    def conv(tree):
+        if isinstance(tree, dict):
+            return {k: conv(v) for k, v in tree.items()}
+        return jnp.asarray(tree)
+
+    return [conv(rec) for rec in parts]
+
+
+class PrepStore:
+    """Tag-keyed, use-once offline material for one protocol program run."""
+
+    def __init__(self, meta: dict | None = None):
+        self.meta = dict(meta or {})
+        self._entries: dict[str, tuple[str, list]] = {}
+        self._consumed: dict[str, str] = {}
+        self._order: list[str] = []
+
+    # -- dealer side -------------------------------------------------------
+    def put(self, tag: str, kind: str, parts: list) -> None:
+        assert _SEP not in tag, f"tag {tag!r} may not contain {_SEP!r}"
+        if tag in self._entries or tag in self._consumed:
+            raise PrepError(f"duplicate prep entry {tag!r}")
+        if len(parts) != len(PARTIES):
+            raise PrepError(f"{tag!r}: expected 4 per-party records, "
+                            f"got {len(parts)}")
+        self._entries[tag] = (kind, _to_np(parts))
+        self._order.append(tag)
+
+    # -- online side -------------------------------------------------------
+    def pop(self, tag: str, kind: str) -> list:
+        if tag in self._consumed:
+            raise PrepReplayError(
+                f"prep entry {tag!r} ({self._consumed[tag]}) already "
+                "consumed -- offline material is use-once")
+        if tag not in self._entries:
+            raise PrepMissingError(
+                f"no prep entry {tag!r} (kind {kind!r}) in store; the "
+                "online program diverged from the dealt workload")
+        got_kind, parts = self._entries.pop(tag)
+        if got_kind != kind:
+            raise PrepKindError(
+                f"prep entry {tag!r} was dealt as {got_kind!r}, "
+                f"consumed as {kind!r}")
+        self._consumed[tag] = got_kind
+        return _to_jnp(parts)
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def tags(self) -> list:
+        return [t for t in self._order if t in self._entries]
+
+    def remaining(self) -> int:
+        return len(self._entries)
+
+    def consumed(self) -> int:
+        return len(self._consumed)
+
+    def summary(self) -> dict:
+        """{kind: entry count} over un-consumed entries."""
+        out: dict = {}
+        for kind, _ in self._entries.values():
+            out[kind] = out.get(kind, 0) + 1
+        return out
+
+    def nbytes(self, party: int | None = None) -> int:
+        total = 0
+        for _, parts in self._entries.values():
+            recs = parts if party is None else [parts[party]]
+            for rec in recs:
+                flat: dict = {}
+                _flatten(rec, "", flat)
+                total += sum(a.nbytes for a in flat.values())
+        return total
+
+    # -- disk --------------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Write manifest.json + per-party material files party{i}.npz."""
+        os.makedirs(path, exist_ok=True)
+        per_party: list[dict] = [{} for _ in PARTIES]
+        entries = []
+        for tag in self.tags():
+            kind, parts = self._entries[tag]
+            entries.append({"tag": tag, "kind": kind})
+            for i in PARTIES:
+                flat: dict = {}
+                _flatten(parts[i], "", flat)
+                for p, arr in flat.items():
+                    per_party[i][f"{tag}{_SEP}{p}"] = arr
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump({"version": 1, "meta": self.meta,
+                       "entries": entries}, f, indent=2)
+        for i in PARTIES:
+            np.savez_compressed(os.path.join(path, f"party{i}.npz"),
+                                **per_party[i])
+
+    @classmethod
+    def load(cls, path: str) -> "PrepStore":
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != 1:
+            raise PrepError(f"unknown PrepStore version in {path}")
+        per_party = [dict(np.load(os.path.join(path, f"party{i}.npz")))
+                     for i in PARTIES]
+        store = cls(meta=manifest.get("meta"))
+        for ent in manifest["entries"]:
+            tag, kind = ent["tag"], ent["kind"]
+            prefix = tag + _SEP
+            parts = []
+            for i in PARTIES:
+                flat = {k[len(prefix):]: v for k, v in per_party[i].items()
+                        if k.startswith(prefix)}
+                parts.append(_unflatten(flat))
+            store._entries[tag] = (kind, parts)
+            store._order.append(tag)
+        return store
+
+
+class PrepBank:
+    """An ordered sequence of PrepStores (one per stream/batch session).
+
+    Party daemons load a bank once at startup and consume one session per
+    submitted batch -- the serving twin of the store's use-once contract.
+    """
+
+    def __init__(self, stores: list | None = None):
+        self._stores = list(stores or [])
+        self._next = 0
+
+    def add(self, store: PrepStore) -> None:
+        self._stores.append(store)
+
+    def __len__(self) -> int:
+        return len(self._stores)
+
+    @property
+    def sessions_left(self) -> int:
+        return len(self._stores) - self._next
+
+    def next(self) -> PrepStore:
+        if self._next >= len(self._stores):
+            raise PrepMissingError(
+                f"prep bank exhausted after {self._next} sessions")
+        store = self._stores[self._next]
+        self._next += 1
+        return store
+
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, "bank.json"), "w") as f:
+            json.dump({"version": 1, "sessions": len(self._stores)}, f)
+        for k, store in enumerate(self._stores):
+            store.save(os.path.join(path, f"session_{k:04d}"))
+
+    @classmethod
+    def load(cls, path: str) -> "PrepBank":
+        with open(os.path.join(path, "bank.json")) as f:
+            n = json.load(f)["sessions"]
+        return cls([PrepStore.load(os.path.join(path, f"session_{k:04d}"))
+                    for k in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# The two non-inline prep engines (see runtime.runtime.InlinePrep).
+# ---------------------------------------------------------------------------
+class DealPrep:
+    """Dealer pass: run every offline half for real (sampling + offline
+    messaging on the dealer's transport) and record the per-party material;
+    protocols skip their online halves (``skip_online``), so only
+    lambda-level data flows between them."""
+
+    mode = "deal"
+    skip_online = True
+    consuming = False
+
+    def __init__(self, store: PrepStore):
+        self.store = store
+
+    def acquire(self, tag: str, kind: str, build):
+        parts = build()
+        self.store.put(tag, kind, parts)
+        return parts
+
+
+class OnlinePrep:
+    """Online-only pass: never build -- pop the dealer's material by tag."""
+
+    mode = "online"
+    skip_online = False
+    consuming = True
+
+    def __init__(self, store: PrepStore):
+        self.store = store
+
+    def acquire(self, tag: str, kind: str, build):
+        return self.store.pop(tag, kind)

@@ -1,0 +1,168 @@
+"""Declared workloads: counts/shapes of protocol invocations, compiled to
+a canonical program the dealer can walk.
+
+A ``Workload`` is the declarative way to provision preprocessing when the
+exact serving program is not at hand -- "I will need 128 matmul+trunc of
+(32,128)x(128,64), 128 ReLUs of (32,64), ..." -- the shape/count language
+the paper's offline phase is parameterized by.  ``program()`` turns the
+declaration into a deterministic protocol program (inputs are shared as
+zeros: the offline phase is data-independent, only shapes matter) that
+both the dealer and the online-only executor run, so one declaration
+yields both the store and its consumer.
+
+For prep-ahead of an *actual* model, skip the declaration and hand your
+predict function to ``dealer.deal`` directly -- any data-independent
+program is a workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.ring import RING64, Ring
+
+# op kind -> number of operand shapes it consumes
+_OPS = {
+    "mult": 2, "dotp": 2, "matmul": 2, "mult_tr": 2, "matmul_tr": 2,
+    "trunc": 1, "and": 2, "a2b": 1, "b2a": 1, "bit2a": 1, "bit_inject": 2,
+    "bit_extract": 1, "relu": 1, "sigmoid": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    kind: str
+    shapes: tuple
+    count: int
+    options: tuple = ()             # e.g. (("method", "mul"),)
+
+
+class Workload:
+    """Builder: ``Workload().matmul_tr((8, 32), (32, 16)).relu((8, 16))``.
+
+    Every declaration method takes the operand shape(s) plus ``n`` (how
+    many independent instances) and returns self for chaining.
+    """
+
+    def __init__(self, ring: Ring = RING64):
+        self.ring = ring
+        self.ops: list[OpSpec] = []
+
+    def _add(self, kind: str, shapes, n: int, **options) -> "Workload":
+        shapes = tuple(tuple(s) for s in shapes)
+        assert len(shapes) == _OPS[kind], (kind, shapes)
+        self.ops.append(OpSpec(kind, shapes, n,
+                               tuple(sorted(options.items()))))
+        return self
+
+    def mult(self, shape, n: int = 1):
+        return self._add("mult", (shape, shape), n)
+
+    def dotp(self, shape, n: int = 1):
+        return self._add("dotp", (shape, shape), n)
+
+    def matmul(self, a, b, n: int = 1):
+        return self._add("matmul", (a, b), n)
+
+    def mult_tr(self, shape, n: int = 1):
+        return self._add("mult_tr", (shape, shape), n)
+
+    def matmul_tr(self, a, b, n: int = 1):
+        return self._add("matmul_tr", (a, b), n)
+
+    def trunc(self, shape, n: int = 1):
+        return self._add("trunc", (shape,), n)
+
+    def and_bits(self, shape, n: int = 1):
+        return self._add("and", (shape, shape), n)
+
+    def a2b(self, shape, n: int = 1):
+        return self._add("a2b", (shape,), n)
+
+    def b2a(self, shape, n: int = 1):
+        return self._add("b2a", (shape,), n)
+
+    def bit2a(self, shape, n: int = 1):
+        return self._add("bit2a", (shape,), n)
+
+    def bit_inject(self, bit_shape, val_shape, n: int = 1):
+        return self._add("bit_inject", (bit_shape, val_shape), n)
+
+    def bit_extract(self, shape, n: int = 1, method: str | None = None):
+        return self._add("bit_extract", (shape,), n, method=method)
+
+    def relu(self, shape, n: int = 1):
+        return self._add("relu", (shape,), n)
+
+    def sigmoid(self, shape, n: int = 1):
+        return self._add("sigmoid", (shape,), n)
+
+    # -- introspection -----------------------------------------------------
+    def counts(self) -> dict:
+        out: dict = {}
+        for spec in self.ops:
+            out[spec.kind] = out.get(spec.kind, 0) + spec.count
+        return out
+
+    def describe(self) -> list:
+        return [{"kind": s.kind, "shapes": s.shapes, "count": s.count,
+                 **dict(s.options)} for s in self.ops]
+
+    # -- compilation -------------------------------------------------------
+    def program(self):
+        """The canonical protocol program realizing this declaration;
+        runs under any prep mode (deal / online / interleaved)."""
+        import jax.numpy as jnp
+
+        from ..runtime import activations as RA
+        from ..runtime import boolean as RB
+        from ..runtime import conversions as RC
+        from ..runtime import protocols as RT
+
+        ops = list(self.ops)
+
+        def run(rt):
+            def arith(shape):
+                return RT.share(rt, jnp.zeros(shape, rt.ring.dtype))
+
+            def boolean(shape, nbits=1):
+                return RT.share_bool(rt, jnp.zeros(shape, rt.ring.dtype),
+                                     nbits=nbits)
+
+            for spec in ops:
+                opts = dict(spec.options)
+                for _ in range(spec.count):
+                    s = spec.shapes
+                    if spec.kind == "mult":
+                        RT.mult(rt, arith(s[0]), arith(s[1]))
+                    elif spec.kind == "dotp":
+                        RT.dotp(rt, arith(s[0]), arith(s[1]))
+                    elif spec.kind == "matmul":
+                        RT.matmul(rt, arith(s[0]), arith(s[1]))
+                    elif spec.kind == "mult_tr":
+                        RT.mult_tr(rt, arith(s[0]), arith(s[1]))
+                    elif spec.kind == "matmul_tr":
+                        RT.matmul_tr(rt, arith(s[0]), arith(s[1]))
+                    elif spec.kind == "trunc":
+                        RT.truncate_share(rt, arith(s[0]))
+                    elif spec.kind == "and":
+                        RB.and_bshare(rt, boolean(s[0]), boolean(s[1]),
+                                      active_bits=1)
+                    elif spec.kind == "a2b":
+                        RC.a2b(rt, arith(s[0]))
+                    elif spec.kind == "b2a":
+                        RT.b2a(rt, boolean(s[0], nbits=rt.ring.ell))
+                    elif spec.kind == "bit2a":
+                        RC.bit2a(rt, boolean(s[0]))
+                    elif spec.kind == "bit_inject":
+                        RC.bit_inject(rt, boolean(s[0]), arith(s[1]))
+                    elif spec.kind == "bit_extract":
+                        RC.bit_extract(rt, arith(s[0]),
+                                       method=opts.get("method"))
+                    elif spec.kind == "relu":
+                        RA.relu(rt, arith(s[0]))
+                    elif spec.kind == "sigmoid":
+                        RA.sigmoid(rt, arith(s[0]))
+                    else:               # pragma: no cover
+                        raise ValueError(spec.kind)
+
+        return run

@@ -27,16 +27,16 @@ path free of socket machinery.
 from . import protocols
 from .party import (DistAShare, DistBShare, Party, PartyAView, PartyBView,
                     PartyKeys)
-from .runtime import FourPartyRuntime, make_runtime
-from .transport import (LocalTransport, MeasuredTransport, TamperRule,
-                        Transport)
+from .runtime import FourPartyRuntime, InlinePrep, make_runtime
+from .transport import (LocalTransport, MeasuredTransport, PhaseViolation,
+                        TamperRule, Transport)
 from . import boolean       # noqa: E402  (after party/runtime; cycle-free)
 from . import conversions   # noqa: E402
 from . import activations   # noqa: E402
 
 __all__ = [
-    "DistAShare", "DistBShare", "FourPartyRuntime", "LocalTransport",
-    "MeasuredTransport", "Party", "PartyAView", "PartyBView", "PartyKeys",
-    "TamperRule", "Transport", "activations", "boolean", "conversions",
-    "make_runtime", "protocols",
+    "DistAShare", "DistBShare", "FourPartyRuntime", "InlinePrep",
+    "LocalTransport", "MeasuredTransport", "Party", "PartyAView",
+    "PartyBView", "PartyKeys", "PhaseViolation", "TamperRule", "Transport",
+    "activations", "boolean", "conversions", "make_runtime", "protocols",
 ]

@@ -8,6 +8,12 @@ and all offline material ships together (Lemma D.5's 3 offline rounds).
 With these, a complete neural-network secure inference -- linear layers
 with fused truncation plus nonlinear activations -- runs end-to-end
 across four real processes.
+
+Offline/online split: the activations are pure compositions of the
+prep-aware conversions, so they need no mode handling of their own -- in
+deal mode lambda-only shares flow straight through (every local view op
+tolerates m=None), and in online-only mode each constituent conversion
+draws its material from the PrepStore.
 """
 from __future__ import annotations
 

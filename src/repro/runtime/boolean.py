@@ -23,7 +23,7 @@ from ..core.algebra import (GAMMA_LOCAL, GAMMA_RECV, PARTIES, ZERO_SUBSETS,
                             lam_holders)
 from ..core.boolean import _bit_masks
 from .party import DistBShare, PartyBView
-from .protocols import _jmp, _open_parts
+from .protocols import _jmp, _open_parts, _vsh_lam_parts, _vsh_exchange
 from .runtime import FourPartyRuntime
 
 
@@ -35,30 +35,45 @@ def vsh_bool(rt: FourPartyRuntime, val_of, owners: tuple, shape,
              phase: str = "online") -> DistBShare:
     """``val_of(party)`` returns the owner's local copy of v.  The masked
     value is jmp-sent to each non-owner online party (Lemma C.1: nbits per
-    element, doubled when P0 is an owner)."""
+    element, doubled when P0 is an owner).
+
+    Prep semantics mirror protocols._vsh: lambdas are always offline
+    material; a phase="offline" vSh^B also runs its exchange at deal time
+    (the record carries m), a phase="online" one exchanges online."""
     ring = rt.ring
     nbits = ring.ell if nbits is None else nbits
     mask = jnp.asarray((1 << nbits) - 1, ring.dtype)
-    lam = {}
-    for j in (1, 2, 3):
-        subset = PARTIES if j in owners else lam_holders(j)
-        lam[j] = rt.sample(subset, shape) & mask
-    non_owners = tuple(i for i in (1, 2, 3) if i not in owners)
-    m_owner = {p: (jnp.asarray(val_of(p), ring.dtype)
-                   ^ lam[1] ^ lam[2] ^ lam[3]) & mask
-               for p in owners}
-    m = dict(m_owner)
-    vf, hf = owners
     tp = rt.transport
-    with tp.round(phase):
-        for dst in non_owners:
-            t = tag if len(non_owners) == 1 else f"{tag}.m{dst}"
-            m[dst] = _jmp(rt, vf, hf, dst, m_owner[vf], m_owner[hf],
-                          tag=t, nbits=nbits, phase=phase)
-    views = [PartyBView(None, dict(lam), nbits)]
-    for i in (1, 2, 3):
-        views.append(PartyBView(m[i], {j: lam[j] for j in (1, 2, 3)
-                                       if j != i}, nbits))
+
+    def exchange(lam_of):
+        with tp.round(phase):
+            return _vsh_exchange(
+                rt, lambda p: jnp.asarray(val_of(p), ring.dtype) & mask,
+                owners, lam_of, tag=tag, nbits=nbits, phase=phase, xor=True)
+
+    def build():
+        lam, parts = _vsh_lam_parts(rt, owners, shape, mask=mask)
+        if phase == "offline":
+            m = exchange(lambda p: lam)
+            for i in (1, 2, 3):
+                parts[i]["m"] = m[i]
+        return parts
+
+    parts = rt.prep.acquire(tag, f"vshB.{phase}", build)
+
+    def view(i: int, m) -> PartyBView:
+        return PartyBView(m, {j: parts[i]["lam"][j] for j in (1, 2, 3)
+                              if j != i}, nbits)
+
+    if phase == "offline":
+        views = [view(0, None)] + [view(i, parts[i]["m"])
+                                   for i in (1, 2, 3)]
+        return DistBShare(tuple(views), tuple(shape), ring.dtype, nbits)
+    if rt.prep.skip_online:
+        views = [view(i, None) for i in PARTIES]
+        return DistBShare(tuple(views), tuple(shape), ring.dtype, nbits)
+    m = exchange(lambda p: parts[p]["lam"])
+    views = [view(0, None)] + [view(i, m[i]) for i in (1, 2, 3)]
     return DistBShare(tuple(views), tuple(shape), ring.dtype, nbits)
 
 
@@ -86,38 +101,47 @@ def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
     out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))
     tag = rt.next_tag("and")
 
-    # ---- offline: counter order matches core.boolean.and_bshare ----------
-    lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
-    fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
+    def build():
+        # ---- offline: counter order matches core.boolean.and_bshare ------
+        lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+        fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
 
-    def piece(party: int, j: int):
-        a, b = AL.GAMMA_MASK_F[j]
-        return _bool_gamma_piece(j, x.views[party].lam, y.views[party].lam,
-                                 fs[a] ^ fs[b])
+        def piece(party: int, j: int):
+            a, b = AL.GAMMA_MASK_F[j]
+            return _bool_gamma_piece(j, x.views[party].lam,
+                                     y.views[party].lam, fs[a] ^ fs[b])
 
-    gamma = [dict() for _ in PARTIES]
-    gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
-    with tp.round("offline"):
-        for j in (1, 2, 3):
-            local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
-            gamma[local][j] = piece(local, j)
-            gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
-                                  gamma[local][j], tag=f"{tag}.g{j}",
-                                  nbits=active, phase="offline")
+        gamma = [dict() for _ in PARTIES]
+        gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
+        with tp.round("offline"):
+            for j in (1, 2, 3):
+                local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
+                gamma[local][j] = piece(local, j)
+                gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
+                                      gamma[local][j], tag=f"{tag}.g{j}",
+                                      nbits=active, phase="offline")
+        return [{"gamma": dict(gamma[i]),
+                 "lam_z": {j: lam_z[j] for j in (1, 2, 3) if j != i}}
+                for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "and", build)
+    if rt.prep.skip_online:
+        views = [PartyBView(None, dict(parts[i]["lam_z"]), nbits)
+                 for i in PARTIES]
+        return DistBShare(tuple(views), out_shape, ring.dtype, nbits)
 
     # ---- online ----------------------------------------------------------
     def parts_of(party: int, j: int):
         vx, vy = x.views[party], y.views[party]
         return (vx.lam[j] & vy.m) ^ (vx.m & vy.lam[j]) \
-            ^ gamma[party][j] ^ lam_z[j]
+            ^ parts[party]["gamma"][j] ^ parts[party]["lam_z"][j]
 
     have = _open_parts(rt, parts_of, tag=tag, nbits=active)
-    views = [PartyBView(None, dict(lam_z), nbits)]
+    views = [PartyBView(None, dict(parts[0]["lam_z"]), nbits)]
     for i in (1, 2, 3):
         m_z = (x.views[i].m & y.views[i].m) \
             ^ have[i][1] ^ have[i][2] ^ have[i][3]
-        views.append(PartyBView(
-            m_z, {j: lam_z[j] for j in (1, 2, 3) if j != i}, nbits))
+        views.append(PartyBView(m_z, dict(parts[i]["lam_z"]), nbits))
     return DistBShare(tuple(views), out_shape, ring.dtype, nbits)
 
 

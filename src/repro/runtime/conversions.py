@@ -16,15 +16,19 @@ wire flips the receiving party's ledger):
     towards P0, who alone holds lambda_b * lambda_v (2*ell + 1 bits per
     element total, one offline round -- Lemma C.11's accounting);
   * BitExt inherits Pi_Mult's and Pi_Rec's jmp hash checks.
+
+All conversion masks (<u>, <p>, y1/y2, BitExt's (r, msb(r)) pair) are prep
+material: built and verified at deal time, drawn from the PrepStore by the
+online-only executor (see protocols.py's module docstring for the seam).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..core.algebra import lam_holders
+from ..core.algebra import PARTIES, lam_holders
 from . import boolean as RB
 from .party import DistAShare, DistBShare, PartyAView
-from .protocols import _ash_pieces, _open_parts, _vsh, reconstruct
+from .protocols import _ash_pieces, _held_lam, _open_parts, _vsh, reconstruct
 from .protocols import b2a  # noqa: F401  (B2A belongs to this namespace too)
 from .protocols import mult as rt_mult
 from .runtime import FourPartyRuntime
@@ -42,16 +46,16 @@ def _public_to_dist(rt: FourPartyRuntime, vals: dict, shape) -> DistAShare:
     return DistAShare(tuple(views), tuple(shape), ring.dtype)
 
 
-def _pieces_to_neg_lam(rt: FourPartyRuntime, pieces: list,
-                       shape) -> DistAShare:
+def _parts_to_neg_lam(rt: FourPartyRuntime, parts: list, shape,
+                      key: str = "p") -> DistAShare:
     """<u> -> [[u]]: m = 0, lambda_j = -u_j (aSh piece j's holders are
-    exactly lambda_j's online holders)."""
+    exactly lambda_j's online holders).  In deal mode m stays None."""
     ring = rt.ring
-    zero = jnp.zeros(shape, ring.dtype)
-    views = [PartyAView(None, {j: -pieces[0][j] for j in (1, 2, 3)})]
+    zero = None if rt.prep.skip_online else jnp.zeros(shape, ring.dtype)
+    views = [PartyAView(None, {j: -parts[0][key][j] for j in (1, 2, 3)})]
     for i in (1, 2, 3):
-        views.append(PartyAView(zero, {j: -pieces[i][j]
-                                       for j in pieces[i]}))
+        views.append(PartyAView(zero, {j: -parts[i][key][j]
+                                       for j in parts[i][key]}))
     return DistAShare(tuple(views), tuple(shape), ring.dtype)
 
 
@@ -62,7 +66,9 @@ def a2b(rt: FourPartyRuntime, v: DistAShare) -> DistBShare:
     tp = rt.transport
     tag = rt.next_tag("a2b")
     with tp.parallel(("offline",)):
-        # y = lam_2 + lam_3 (P0, P1); x = m_v - lam_1 (P2, P3).
+        # y = lam_2 + lam_3 (P0, P1): data-independent, a full offline vSh
+        # (its record carries the masked value); x = m_v - lam_1 (P2, P3):
+        # data-dependent, exchanged online over prep lambdas.
         yb = RB.vsh_bool(rt, lambda p: v.views[p].lam[2] + v.views[p].lam[3],
                          (0, 1), v.shape, tag=tag + ".y", phase="offline")
         xb = RB.vsh_bool(rt, lambda p: v.views[p].m - v.views[p].lam[1],
@@ -98,22 +104,32 @@ def _u_check(rt: FourPartyRuntime, b: DistBShare, pieces: list, *,
         rt.parties[1].check_equal(s, lam_b, tag + ".ck")
 
 
-def _mult_lam0(rt: FourPartyRuntime, u: DistAShare, m_pub: dict,
-               out_shape, *, tag: str) -> DistAShare:
+def _mult_lam0(rt: FourPartyRuntime, u: DistAShare, m_pub, out_shape, *,
+               tag: str) -> DistAShare:
     """Pi_Mult specialization for a public right operand (lam_v = 0, gamma
-    vanishes): online-only, 1 round, 3*ell bits (Lemma C.9)."""
+    vanishes): online-only, 1 round, 3*ell bits (Lemma C.9).  The output
+    mask lam_z is the only prep material."""
     ring = rt.ring
-    lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+
+    def build():
+        lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
+        return [{"lam_z": _held_lam(lam_z, i)} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag + ".lz", "mult_lam0", build)
+    if rt.prep.skip_online:
+        views = [PartyAView(None, dict(parts[i]["lam_z"]))
+                 for i in PARTIES]
+        return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
     def parts_of(party: int, j: int):
-        return -(u.views[party].lam[j] * m_pub[party]) + lam_z[j]
+        return -(u.views[party].lam[j] * m_pub[party]) \
+            + parts[party]["lam_z"][j]
 
     have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
-    views = [PartyAView(None, dict(lam_z))]
+    views = [PartyAView(None, dict(parts[0]["lam_z"]))]
     for i in (1, 2, 3):
         m_z = u.views[i].m * m_pub[i] + have[i][1] + have[i][2] + have[i][3]
-        views.append(PartyAView(m_z, {j: lam_z[j] for j in (1, 2, 3)
-                                      if j != i}))
+        views.append(PartyAView(m_z, dict(parts[i]["lam_z"])))
     return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
 
@@ -123,12 +139,20 @@ def bit2a(rt: FourPartyRuntime, b: DistBShare) -> DistAShare:
     assert b.nbits == 1
     one = jnp.asarray(1, ring.dtype)
     tag = rt.next_tag("bit2a")
-    # offline: <u> dealt by P0 (who holds every lambda), then verified.
-    lam_bit0 = (b.views[0].lam[1] ^ b.views[0].lam[2]
-                ^ b.views[0].lam[3]) & one
-    pieces = _ash_pieces(rt, lam_bit0, tag=tag + ".p")
-    _u_check(rt, b, pieces, tag=tag)
-    u = _pieces_to_neg_lam(rt, pieces, b.shape)
+
+    def build():
+        # offline: <u> dealt by P0 (who holds every lambda), then verified.
+        lam_bit0 = (b.views[0].lam[1] ^ b.views[0].lam[2]
+                    ^ b.views[0].lam[3]) & one
+        pieces = _ash_pieces(rt, lam_bit0, tag=tag + ".p")
+        _u_check(rt, b, pieces, tag=tag)
+        return [{"p": dict(pieces[i])} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "bit2a", build)
+    u = _parts_to_neg_lam(rt, parts, b.shape)
+    if rt.prep.skip_online:
+        uv = _mult_lam0(rt, u, None, b.shape, tag=tag)
+        return u.sub(uv.add(uv))
     # online: [[v]] is the public non-interactive sharing; uv via the
     # gamma-free mult.
     m_bit = {i: b.views[i].m & one for i in (1, 2, 3)}
@@ -149,34 +173,41 @@ def bit_inject(rt: FourPartyRuntime, b: DistBShare,
     out_shape = tuple(jnp.broadcast_shapes(b.shape, v.shape))
     tag = rt.next_tag("binj")
 
-    # ---- offline: <y1> = <lam_b>, <y2> = <lam_b lam_v> by P0 -------------
-    lam_b0 = jnp.broadcast_to(
-        (b.views[0].lam[1] ^ b.views[0].lam[2] ^ b.views[0].lam[3]) & one,
-        out_shape)
-    lam_v0 = jnp.broadcast_to(
-        v.views[0].lam[1] + v.views[0].lam[2] + v.views[0].lam[3], out_shape)
-    with tp.parallel(("offline",)):
-        y1 = _ash_pieces(rt, lam_b0, tag=tag + ".y1")
-        y2 = _ash_pieces(rt, lam_b0 * lam_v0, tag=tag + ".y2")
-    # Verification round: <y1> as in Bit2A; <y2> aggregated to P0, the only
-    # party holding lam_b * lam_v.  (2*ell + 1 bits, 1 round: Lemma C.11.)
-    agg2 = y2[1][2] + y2[1][3]
-    with tp.round("offline"):
-        tp.send(3, 1, y1[3][1] + y1[3][2], tag=tag + ".ck1",
-                nbits=ring.ell, phase="offline")
-        l1_bit = jnp.broadcast_to(b.views[2].lam[1] & one, out_shape)
-        tp.send(2, 1, l1_bit, tag=tag + ".l1", nbits=1, phase="offline")
-        tp.send(1, 0, agg2, tag=tag + ".ck2", nbits=ring.ell,
-                phase="offline")
-        got_agg1 = tp.recv(1, 3, tag=tag + ".ck1")
-        got_l1 = tp.recv(1, 2, tag=tag + ".l1")
-        got_agg2 = tp.recv(0, 1, tag=tag + ".ck2")
-    if rt.malicious_checks:
-        lam_b1 = got_l1 ^ jnp.broadcast_to(
-            (b.views[1].lam[2] ^ b.views[1].lam[3]) & one, out_shape)
-        rt.parties[1].check_equal(got_agg1 + y1[1][3], lam_b1, tag + ".ck1")
-        rt.parties[0].check_equal(y2[0][1] + got_agg2, lam_b0 * lam_v0,
-                                  tag + ".ck2")
+    def build():
+        # ---- offline: <y1> = <lam_b>, <y2> = <lam_b lam_v> by P0 ---------
+        lam_b0 = jnp.broadcast_to(
+            (b.views[0].lam[1] ^ b.views[0].lam[2] ^ b.views[0].lam[3])
+            & one, out_shape)
+        lam_v0 = jnp.broadcast_to(
+            v.views[0].lam[1] + v.views[0].lam[2] + v.views[0].lam[3],
+            out_shape)
+        with tp.parallel(("offline",)):
+            y1 = _ash_pieces(rt, lam_b0, tag=tag + ".y1")
+            y2 = _ash_pieces(rt, lam_b0 * lam_v0, tag=tag + ".y2")
+        # Verification round: <y1> as in Bit2A; <y2> aggregated to P0, the
+        # only party holding lam_b * lam_v.  (2*ell + 1 bits, 1 round:
+        # Lemma C.11.)
+        agg2 = y2[1][2] + y2[1][3]
+        with tp.round("offline"):
+            tp.send(3, 1, y1[3][1] + y1[3][2], tag=tag + ".ck1",
+                    nbits=ring.ell, phase="offline")
+            l1_bit = jnp.broadcast_to(b.views[2].lam[1] & one, out_shape)
+            tp.send(2, 1, l1_bit, tag=tag + ".l1", nbits=1, phase="offline")
+            tp.send(1, 0, agg2, tag=tag + ".ck2", nbits=ring.ell,
+                    phase="offline")
+            got_agg1 = tp.recv(1, 3, tag=tag + ".ck1")
+            got_l1 = tp.recv(1, 2, tag=tag + ".l1")
+            got_agg2 = tp.recv(0, 1, tag=tag + ".ck2")
+        if rt.malicious_checks:
+            lam_b1 = got_l1 ^ jnp.broadcast_to(
+                (b.views[1].lam[2] ^ b.views[1].lam[3]) & one, out_shape)
+            rt.parties[1].check_equal(got_agg1 + y1[1][3], lam_b1,
+                                      tag + ".ck1")
+            rt.parties[0].check_equal(y2[0][1] + got_agg2, lam_b0 * lam_v0,
+                                      tag + ".ck2")
+        return [{"y1": dict(y1[i]), "y2": dict(y2[i])} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "binj", build)
 
     # ---- online: c_k from the m's + the components each pair holds -------
     def c_of(party: int, k: int):
@@ -189,7 +220,8 @@ def bit_inject(rt: FourPartyRuntime, b: DistBShare,
         # pair (1,3) -> lam_2 & piece 2; (2,1) -> lam_3 & piece 3;
         # (3,2) -> lam_1 & piece 1  (core.conversions.bit_inject split).
         lam_idx = {2: 2, 3: 3, 1: 1}[k]
-        c = -x1 * vv.lam[lam_idx] + x2 * y1[party][k] + x3 * y2[party][k]
+        c = -x1 * vv.lam[lam_idx] + x2 * parts[party]["y1"][k] \
+            + x3 * parts[party]["y2"][k]
         if k == 2:
             c = m_b * m_v + c
         return c
@@ -230,23 +262,35 @@ def _bit_extract_mul(rt: FourPartyRuntime, v: DistAShare,
     shape = v.shape
     one = jnp.asarray(1, ring.dtype)
     with tp.parallel(("offline",)):
-        # offline: P1,P2 sample r (guard-bounded, odd -- nonzero), x = msb(r)
-        mag = rt.sample_bounded((1, 2), shape, ring.ell - 1 - rt.bitext_guard)
-        sign = rt.sample((1, 2), shape) >> (ring.ell - 1)
-        r = jnp.where(sign.astype(bool), -(mag | one), mag | one)
-        r = r.astype(ring.dtype)
-        x_bit = ring.msb(r)
-        with tp.round("offline"):
-            r_sh = _vsh(rt, lambda p: r, (1, 2), shape, tag=tag + ".r",
+        if rt.prep.consuming:
+            # online-only: the (r, msb(r)) pair comes straight from the
+            # store (both are offline vSh records carrying their m).
+            r_sh = _vsh(rt, None, (1, 2), shape, tag=tag + ".r",
                         phase="offline")
-        x_sh = RB.vsh_bool(rt, lambda p: x_bit, (1, 2), shape, nbits=1,
-                           tag=tag + ".xb", phase="offline")
-        # online: [[rv]], opened towards P0 & P3; y = msb(rv)
+            x_sh = RB.vsh_bool(rt, None, (1, 2), shape, nbits=1,
+                               tag=tag + ".xb", phase="offline")
+        else:
+            # offline: P1,P2 sample r (guard-bounded, odd -- nonzero),
+            # x = msb(r)
+            mag = rt.sample_bounded((1, 2), shape,
+                                    ring.ell - 1 - rt.bitext_guard)
+            sign = rt.sample((1, 2), shape) >> (ring.ell - 1)
+            r = jnp.where(sign.astype(bool), -(mag | one), mag | one)
+            r = r.astype(ring.dtype)
+            x_bit = ring.msb(r)
+            with tp.round("offline"):
+                r_sh = _vsh(rt, lambda p: r, (1, 2), shape, tag=tag + ".r",
+                            phase="offline")
+            x_sh = RB.vsh_bool(rt, lambda p: x_bit, (1, 2), shape, nbits=1,
+                               tag=tag + ".xb", phase="offline")
+        # online: [[rv]], opened towards P0 & P3; y = msb(rv).  In the
+        # dealer pass reconstruct returns placeholders (the y vSh is
+        # data-dependent: only its lambda masks are prep, val_of unused).
         rv = rt_mult(rt, r_sh, v)
         rv_val = reconstruct(rt, rv, receivers=(0, 3))
         y_bit = {p: ring.msb(rv_val[p]) for p in (0, 3)}
-        y_sh = RB.vsh_bool(rt, lambda p: y_bit[p], (3, 0), shape, nbits=1,
-                           tag=tag + ".yb")
+        y_sh = RB.vsh_bool(rt, lambda p: y_bit[p], (3, 0), shape,
+                           nbits=1, tag=tag + ".yb")
     return x_sh.xor(y_sh)
 
 

@@ -15,16 +15,21 @@ protocols are written against (runtime/transport.py):
                         reporting modeled wall-clock per phase (LAN / WAN
                         presets from the paper's benchmarking environment).
 
-``cluster.run_four_parties`` launches the four processes on one machine
-and collects per-party results, measured traffic, and abort flags.
+``cluster.PartyCluster`` runs the four parties as LONG-LIVED daemons on
+one machine -- mesh built once, optional PrepBank loaded at startup, then
+protocol programs submitted as tasks (interleaved or online-only from the
+bank); ``cluster.run_four_parties`` is the one-shot wrapper.  Outgoing
+messages are coalesced into one frame per (link, round) -- batched
+framing -- so a WAN round costs one rtt regardless of message count.
 """
-from .framing import FramingError, recv_frame, send_frame
+from .framing import FramingError, recv_frame, send_frame, send_frames
 from .model import LAN, WAN, LinkSpec, NetModel, NetModelTransport
 from .socket_transport import SocketTransport, TransportTimeout
-from .cluster import PartyResult, run_four_parties
+from .cluster import PartyCluster, PartyResult, run_four_parties
 
 __all__ = [
     "FramingError", "LAN", "WAN", "LinkSpec", "NetModel",
-    "NetModelTransport", "PartyResult", "SocketTransport",
-    "TransportTimeout", "recv_frame", "send_frame", "run_four_parties",
+    "NetModelTransport", "PartyCluster", "PartyResult", "SocketTransport",
+    "TransportTimeout", "recv_frame", "send_frame", "send_frames",
+    "run_four_parties",
 ]

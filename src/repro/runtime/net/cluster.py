@@ -1,10 +1,26 @@
-"""Launch the four parties as OS processes on one machine.
+"""Long-lived party daemons on one machine, plus the one-shot launcher.
 
-``run_four_parties(program)`` spawns one process per party; each builds a
-``SocketTransport`` endpoint of the TCP mesh (optionally wrapped in a
-``NetModelTransport``), constructs a ``FourPartyRuntime`` over it, runs
-``program(rt, rank)``, and ships back a ``PartyResult`` with the program's
-return value, the measured traffic, the party's abort flag, and wall-clock.
+``PartyCluster`` spawns one OS process per party; each builds its
+``SocketTransport`` endpoint of the TCP mesh ONCE (optionally wrapped in a
+``NetModelTransport``), optionally loads a serialized ``PrepBank`` at
+startup, and then serves **tasks** -- submitted protocol programs -- until
+closed.  The mesh, the loaded prep material, and the warm JAX runtime
+persist across tasks, so a query stream pays connection setup and store
+deserialization once, not per batch (the per-stream spawn cost used to
+dominate short streams).
+
+``cluster.submit(program)`` runs ``program(rt, rank)`` in every party
+process on a fresh ``FourPartyRuntime`` over the persistent transport and
+returns the four ``PartyResult``s; measured traffic/modeled time are
+**per-task deltas**, so results compose across a stream.  A task with
+``prep="bank"`` consumes the next PrepBank session and executes
+online-only: the daemon's transport *forbids* offline traffic for the span
+of the task (any offline send raises), realizing the offline/online split
+on the real wire.
+
+``run_four_parties(program)`` is the one-shot path (spawn, run one task,
+tear down) used by tests and benches; it is now a thin wrapper over a
+temporary cluster.
 
 ``program`` must be a module-level callable (the processes are spawned, so
 it travels by qualified name) and should return numpy-convertible pytrees.
@@ -34,7 +50,7 @@ DEFAULT_TIMEOUT = 120.0
 
 @dataclasses.dataclass
 class PartyResult:
-    """One party process's view of the run."""
+    """One party process's view of one task."""
 
     rank: int
     result: object
@@ -43,6 +59,8 @@ class PartyResult:
     abort: bool
     wall_s: float
     modeled_s: dict | None = None     # phase -> seconds (when net_model set)
+    frames_sent: dict | None = None   # (src, dst) -> wire frames (this task)
+    task_id: int | None = None        # correlates results with submissions
 
 
 def _free_ports(n: int) -> list:
@@ -63,9 +81,60 @@ def _to_np(tree):
     return jax.tree_util.tree_map(np.asarray, tree)
 
 
-def _party_main(rank, endpoints, program, cfg, out_q):
+def _totals_delta(after: dict, before: dict) -> dict:
+    return {p: {k: after[p][k] - before[p][k] for k in after[p]}
+            for p in after}
+
+
+def _run_task(task, *, ring, transport, base, bank, out_q, rank):
+    from .. import FourPartyRuntime
+
+    t_before = base.totals()
+    l_before = {k: dict(v) for k, v in base.per_link().items()}
+    f_before = dict(base.frames_sent)
+    m_before = dict(transport._sec.total) if transport is not base else None
+
+    prep = None
+    if task.get("prep") == "bank":
+        from ...offline.store import OnlinePrep
+        if bank is None:
+            raise RuntimeError("task wants prep='bank' but the daemon "
+                               "loaded no PrepBank (prep_path unset)")
+        prep = OnlinePrep(bank.next())
+        base.forbid_phase("offline")
     try:
-        from .. import FourPartyRuntime
+        rt = FourPartyRuntime(ring, seed=task["seed"], transport=transport,
+                              prep=prep, **task["runtime_kwargs"])
+        t0 = time.perf_counter()
+        result = task["program"](rt, rank)
+        wall = time.perf_counter() - t0
+    finally:
+        if prep is not None:
+            base.allow_phase("offline")
+
+    t_after = base.totals()
+    per_link = {}
+    for link, bits in base.per_link().items():
+        was = l_before.get(link, {p: 0 for p in bits})
+        per_link[link] = {p: bits[p] - was[p] for p in bits}
+    frames = {k: v - f_before.get(k, 0)
+              for k, v in base.frames_sent.items()}
+    out_q.put(PartyResult(
+        rank=rank,
+        result=_to_np(result),
+        totals=_totals_delta(t_after, t_before),
+        per_link=per_link,
+        abort=bool(rt.abort_flag()),
+        wall_s=wall,
+        modeled_s=({p: transport._sec.total[p] - m_before[p]
+                    for p in m_before} if m_before is not None else None),
+        frames_sent={k: v for k, v in frames.items() if v},
+        task_id=task["id"],
+    ))
+
+
+def _daemon_main(rank, endpoints, cfg, task_q, out_q):
+    try:
         from .model import NetModelTransport
         from .socket_transport import SocketTransport
 
@@ -76,83 +145,166 @@ def _party_main(rank, endpoints, program, cfg, out_q):
         transport = base
         if cfg["net_model"] is not None:
             transport = NetModelTransport(base, cfg["net_model"])
-        rt = FourPartyRuntime(cfg["ring"], seed=cfg["seed"],
-                              transport=transport, **cfg["runtime_kwargs"])
-        t0 = time.perf_counter()
-        result = program(rt, rank)
-        wall = time.perf_counter() - t0
-        out_q.put(PartyResult(
-            rank=rank,
-            result=_to_np(result),
-            totals=base.totals(),
-            per_link={k: dict(v) for k, v in base.per_link().items()},
-            abort=bool(rt.abort_flag()),
-            wall_s=wall,
-            modeled_s=(dict(transport._sec.total)
-                       if transport is not base else None),
-        ))
+        bank = None
+        if cfg["prep_path"] is not None:
+            from ...offline.store import PrepBank
+            bank = PrepBank.load(cfg["prep_path"])
+        out_q.put(("ready", rank, len(bank) if bank is not None else 0))
+        while True:
+            task = task_q.get()
+            if task is None:
+                break
+            try:
+                _run_task(task, ring=cfg["ring"], transport=transport,
+                          base=base, bank=bank, out_q=out_q, rank=rank)
+            except BaseException:
+                # a failed task leaves the lock-step mesh undefined: report
+                # and stop serving (the driver tears the cluster down)
+                out_q.put(("error", rank, traceback.format_exc()))
+                break
         base.close()
     except BaseException:
-        out_q.put((rank, traceback.format_exc()))
+        out_q.put(("error", rank, traceback.format_exc()))
+
+
+class PartyCluster:
+    """Four long-lived party daemons over a persistent TCP mesh."""
+
+    def __init__(self, *, ring: Ring = RING64,
+                 timeout: float = DEFAULT_TIMEOUT, tampers=(),
+                 net_model=None, prep_path: str | None = None):
+        ctx = mp.get_context("spawn")
+        endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
+        cfg = {
+            "ring": ring, "timeout": timeout, "tampers": list(tampers),
+            "net_model": net_model, "prep_path": prep_path,
+        }
+        self.ring = ring
+        self.timeout = timeout
+        self.net_model = net_model
+        self._task_qs = [ctx.Queue() for _ in range(4)]
+        self._out_q = ctx.Queue()
+        self._procs = [
+            ctx.Process(target=_daemon_main,
+                        args=(rank, endpoints, cfg, self._task_qs[rank],
+                              self._out_q),
+                        daemon=True)
+            for rank in range(4)]
+        self._closed = False
+        self.tasks_run = 0
+        self._task_id = 0
+        for p in self._procs:
+            p.start()
+        try:
+            self._collect(lambda item: item[0] == "ready", self.timeout)
+        except Exception:
+            self.close()
+            raise
+
+    # -- task round-trips --------------------------------------------------
+    def _collect(self, is_ack, timeout: float) -> list:
+        """Gather one ack per daemon; raise with the collected tracebacks
+        as soon as all four have answered (result or error) or on
+        timeout/death.  ``is_ack`` filters tuple-shaped acks; stale
+        PartyResults from an abandoned (timed-out) task are discarded by
+        task id."""
+        got, errors = [], {}
+        answered: set[int] = set()
+        deadline = time.monotonic() + timeout
+        while len(got) + len(errors) < 4:
+            budget = deadline - time.monotonic()
+            if budget <= 0:
+                raise RuntimeError(
+                    f"party daemons timed out after {timeout}s "
+                    f"(acks {len(got)}/4, errors {sorted(errors)})")
+            try:
+                item = self._out_q.get(timeout=min(budget, 1.0))
+            except Exception:
+                # only daemons that never answered count as silent deaths;
+                # a daemon that posted its error and exited is accounted for
+                dead = [i for i, p in enumerate(self._procs)
+                        if not p.is_alive() and i not in answered]
+                if dead and self._out_q.empty():
+                    raise RuntimeError(
+                        f"party daemon(s) {dead} died without a result"
+                        + (f"; collected errors:\n" + "\n".join(
+                            f"--- P{r} ---\n{tb}"
+                            for r, tb in sorted(errors.items()))
+                           if errors else "")) from None
+                continue
+            if isinstance(item, tuple) and item[0] == "error":
+                errors[item[1]] = item[2]
+                answered.add(item[1])
+            elif isinstance(item, PartyResult):
+                if item.task_id == self._task_id:
+                    got.append(item)
+                    answered.add(item.rank)
+                # else: stale result of a task whose submit() timed out
+            elif isinstance(item, tuple) and is_ack(item):
+                got.append(item)
+                answered.add(item[1])
+        if errors:
+            msgs = "\n".join(f"--- P{r} ---\n{tb}"
+                             for r, tb in sorted(errors.items()))
+            raise RuntimeError(f"party daemon failures:\n{msgs}")
+        return got
+
+    def submit(self, program, *, seed: int = 0, prep: str | None = None,
+               runtime_kwargs: dict | None = None,
+               timeout: float | None = None) -> list:
+        """Run ``program(rt, rank)`` as one task across the four daemons;
+        returns the per-rank ``PartyResult``s (measured deltas for this
+        task).  ``prep="bank"`` consumes the next PrepBank session and
+        executes online-only (offline sends forbidden on the wire)."""
+        assert not self._closed, "cluster is closed"
+        self._task_id += 1
+        task = {"program": program, "seed": seed, "prep": prep,
+                "runtime_kwargs": dict(runtime_kwargs or {}),
+                "id": self._task_id}
+        for q in self._task_qs:
+            q.put(task)
+        results = self._collect(lambda item: False,
+                                timeout or self.timeout)
+        self.tasks_run += 1
+        return sorted(results, key=lambda r: r.rank)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._task_qs:
+            try:
+                q.put(None)
+            except Exception:
+                pass
+        for p in self._procs:
+            p.join(timeout=5.0)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
 
 def run_four_parties(program, *, ring: Ring = RING64, seed: int = 0,
                      timeout: float = DEFAULT_TIMEOUT, tampers=(),
-                     net_model=None, runtime_kwargs=None) -> list:
-    """Run ``program(rt, rank)`` across four OS processes over TCP.
+                     net_model=None, runtime_kwargs=None,
+                     prep_path: str | None = None,
+                     prep: str | None = None) -> list:
+    """One-shot: spawn a cluster, run ``program(rt, rank)``, tear down.
 
     Returns the four ``PartyResult``s ordered by rank.  ``tampers`` is a
     sequence of keyword dicts forwarded to ``Transport.tamper`` in every
     process.  ``net_model`` (a ``NetModel``) wraps each party's transport
     in a ``NetModelTransport`` and fills ``PartyResult.modeled_s``.
     """
-    ctx = mp.get_context("spawn")
-    endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
-    cfg = {
-        "ring": ring, "seed": seed, "timeout": timeout,
-        "tampers": list(tampers), "net_model": net_model,
-        "runtime_kwargs": dict(runtime_kwargs or {}),
-    }
-    out_q = ctx.Queue()
-    procs = [ctx.Process(target=_party_main,
-                         args=(rank, endpoints, program, cfg, out_q),
-                         daemon=True)
-             for rank in range(4)]
-    for p in procs:
-        p.start()
-    results, errors = {}, {}
-    deadline = time.monotonic() + timeout
-    try:
-        while len(results) + len(errors) < 4:
-            budget = deadline - time.monotonic()
-            if budget <= 0:
-                raise RuntimeError(
-                    f"party processes timed out after {timeout}s "
-                    f"(got {sorted(results)} / errors {sorted(errors)})")
-            try:
-                item = out_q.get(timeout=min(budget, 1.0))
-            except Exception:
-                if any(not p.is_alive() for p in procs) and out_q.empty():
-                    dead = [i for i, p in enumerate(procs)
-                            if not p.is_alive() and i not in results
-                            and i not in errors]
-                    if dead:
-                        raise RuntimeError(
-                            f"party process(es) {dead} died without a "
-                            "result") from None
-                continue
-            if isinstance(item, PartyResult):
-                results[item.rank] = item
-            else:
-                rank, tb = item
-                errors[rank] = tb
-    finally:
-        for p in procs:
-            p.join(timeout=5.0)
-        for p in procs:
-            if p.is_alive():
-                p.terminate()
-    if errors:
-        msgs = "\n".join(f"--- P{r} ---\n{tb}" for r, tb in sorted(errors.items()))
-        raise RuntimeError(f"party process failures:\n{msgs}")
-    return [results[r] for r in range(4)]
+    with PartyCluster(ring=ring, timeout=timeout, tampers=tampers,
+                      net_model=net_model, prep_path=prep_path) as cluster:
+        return cluster.submit(program, seed=seed, prep=prep,
+                              runtime_kwargs=runtime_kwargs,
+                              timeout=timeout)

@@ -4,18 +4,26 @@ One frame is
 
     [4B header length, big-endian] [header JSON, utf-8] [payload bytes]
 
-with the header carrying the demultiplexing tag plus enough dtype/shape
-metadata to reconstruct the array on the far side:
+with the header carrying, per message, the demultiplexing tag plus enough
+dtype/shape metadata to reconstruct the array on the far side.  A frame
+may carry **one message** (header = object) or a **batch** (header =
+array of objects, payload = concatenated bodies in header order):
 
-    {"tag": str, "dtype": "uint64", "shape": [2, 3], "nbytes": 48}
+    {"tag": "mult#1.p1", "dtype": "<u8", "shape": [2, 3], "nbytes": 48}
+    [{...}, {...}, ...]
 
-The payload is the array's C-contiguous raw bytes.  JSON keeps the header
+Batching is how ``SocketTransport`` coalesces every message a (link,
+round) carries into a single frame -- one syscall, one TCP segment train,
+and under a WAN model one rtt per round per link no matter how many jmp
+payloads and hash copies ride along (the per-tag *bit accounting* is
+untouched: tally happens in ``MeasuredTransport.send`` before framing).
+
+The payload is each array's C-contiguous raw bytes.  JSON keeps headers
 debuggable on the wire (``tcpdump`` shows the protocol choreography in
-clear text); the payload dominates, so header overhead is noise.  Note the
-framing is *transport* metadata -- the tallied communication stays
-``nbits * count`` exactly as the analytic lemmas count it; headers and
-hash copies ride along unbilled, matching the paper's amortized
-accounting.
+clear text); payloads dominate, so header overhead is noise.  Framing is
+*transport* metadata -- the tallied communication stays ``nbits * count``
+exactly as the analytic lemmas count it; headers and hash copies ride
+along unbilled, matching the paper's amortized accounting.
 """
 from __future__ import annotations
 
@@ -25,7 +33,7 @@ import struct
 import numpy as np
 
 _LEN = struct.Struct(">I")
-MAX_HEADER = 1 << 20          # sanity bound: a header is ~100 bytes
+MAX_HEADER = 1 << 24          # batched headers: ~100 bytes per message
 
 
 class FramingError(RuntimeError):
@@ -43,30 +51,37 @@ def _read_exact(sock, n: int) -> bytes:
     return bytes(buf)
 
 
-def send_frame(sock, tag: str, payload) -> None:
-    """Serialize one tagged array message onto a stream socket."""
+def _describe(tag: str, payload) -> tuple:
     arr = np.ascontiguousarray(np.asarray(payload))
     body = arr.tobytes()
-    header = json.dumps({
-        "tag": tag,
-        "dtype": arr.dtype.str,
-        "shape": list(arr.shape),
-        "nbytes": len(body),
-    }).encode("utf-8")
+    return {"tag": tag, "dtype": arr.dtype.str, "shape": list(arr.shape),
+            "nbytes": len(body)}, body
+
+
+def send_frames(sock, items) -> None:
+    """Serialize a batch of (tag, payload) messages as ONE frame."""
+    entries, bodies = [], []
+    for tag, payload in items:
+        ent, body = _describe(tag, payload)
+        entries.append(ent)
+        bodies.append(body)
+    header = json.dumps(entries).encode("utf-8")
+    sock.sendall(_LEN.pack(len(header)) + header + b"".join(bodies))
+
+
+def send_frame(sock, tag: str, payload) -> None:
+    """Serialize one tagged array message onto a stream socket."""
+    header_obj, body = _describe(tag, payload)
+    header = json.dumps(header_obj).encode("utf-8")
     sock.sendall(_LEN.pack(len(header)) + header + body)
 
 
-def recv_frame(sock) -> tuple:
-    """Read one frame; returns (tag, np.ndarray)."""
-    (hlen,) = _LEN.unpack(_read_exact(sock, _LEN.size))
-    if not 0 < hlen <= MAX_HEADER:
-        raise FramingError(f"implausible header length {hlen}")
+def _decode_entry(ent, sock) -> tuple:
     try:
-        header = json.loads(_read_exact(sock, hlen).decode("utf-8"))
-        tag = header["tag"]
-        dtype = np.dtype(header["dtype"])
-        shape = tuple(header["shape"])
-        nbytes = int(header["nbytes"])
+        tag = ent["tag"]
+        dtype = np.dtype(ent["dtype"])
+        shape = tuple(ent["shape"])
+        nbytes = int(ent["nbytes"])
     except (ValueError, KeyError, TypeError) as e:
         raise FramingError(f"malformed frame header: {e}") from e
     body = _read_exact(sock, nbytes)
@@ -78,3 +93,17 @@ def recv_frame(sock) -> tuple:
         # thread posts its EOF sentinel instead of dying silently.
         raise FramingError(f"frame body does not match header: {e}") from e
     return tag, arr
+
+
+def recv_frame(sock) -> list:
+    """Read one frame; returns its messages as a list of (tag, ndarray)
+    (single-message frames yield a one-element list)."""
+    (hlen,) = _LEN.unpack(_read_exact(sock, _LEN.size))
+    if not 0 < hlen <= MAX_HEADER:
+        raise FramingError(f"implausible header length {hlen}")
+    try:
+        header = json.loads(_read_exact(sock, hlen).decode("utf-8"))
+    except ValueError as e:
+        raise FramingError(f"malformed frame header: {e}") from e
+    entries = header if isinstance(header, list) else [header]
+    return [_decode_entry(ent, sock) for ent in entries]

@@ -24,6 +24,17 @@ thread that demultiplexes frames into per-peer queues, which makes the
 send-then-receive round choreography deadlock-free regardless of TCP
 buffer sizes.
 
+Batched framing: outgoing messages are buffered per destination and
+flushed as ONE multi-message frame per (link, round) -- a WAN round costs
+one rtt on a link regardless of how many jmp payloads and hash copies it
+carries.  Flush points: before this process blocks on a receive (the
+co-processes need what we buffered to make progress -- this is what keeps
+the lock-step choreography deadlock-free), at the close of every
+outermost round scope, and at shutdown.  Per-tag byte accounting is
+untouched (it happens in ``MeasuredTransport.send`` before framing);
+``frames_sent[(src, dst)]`` counts the wire frames for the coalescing
+tests and benches.
+
 Mesh bring-up: every rank listens on its own endpoint, dials every lower
 rank (with retry while the peer's listener comes up), then accepts the
 higher ranks.  A one-byte hello carries the dialer's rank.
@@ -39,7 +50,7 @@ from collections import defaultdict, deque
 import jax.numpy as jnp
 
 from ..transport import MeasuredTransport
-from .framing import FramingError, recv_frame, send_frame
+from .framing import FramingError, recv_frame, send_frames
 
 PARTIES = (0, 1, 2, 3)
 
@@ -63,6 +74,8 @@ class SocketTransport(MeasuredTransport):
         self.rank = rank
         self.timeout = timeout
         self._local: dict[tuple, deque] = defaultdict(deque)
+        self._outbuf: dict[int, list] = defaultdict(list)
+        self.frames_sent: dict[tuple, int] = defaultdict(int)
         self._socks: dict[int, socket.socket] = {}
         self._inbox: dict[int, queue.Queue] = {
             p: queue.Queue() for p in PARTIES if p != rank}
@@ -122,7 +135,8 @@ class SocketTransport(MeasuredTransport):
     def _reader_loop(self, peer: int, sock: socket.socket) -> None:
         try:
             while True:
-                self._inbox[peer].put(recv_frame(sock))
+                for msg in recv_frame(sock):     # a frame may batch many
+                    self._inbox[peer].put(msg)
         except (FramingError, OSError) as e:
             if not self._closed:
                 self._reader_err.append(e)
@@ -131,9 +145,24 @@ class SocketTransport(MeasuredTransport):
     # -- message movement (MeasuredTransport hooks) ------------------------
     def _put(self, src: int, dst: int, tag: str, payload) -> None:
         if src == self.rank:
-            send_frame(self._socks[dst], tag, payload)
+            # coalesce: one frame per (link, round), flushed lazily
+            self._outbuf[dst].append((tag, payload))
         if dst != self.rank:
             self._local[(src, dst, tag)].append(payload)
+
+    def _flush_out(self, dst: int | None = None) -> None:
+        """Ship buffered outgoing messages, one multi-message frame per
+        destination (in buffer order, so per-link FIFO is preserved)."""
+        dsts = (dst,) if dst is not None else tuple(self._outbuf)
+        for d in dsts:
+            items = self._outbuf.get(d)
+            if items:
+                send_frames(self._socks[d], items)
+                self.frames_sent[(self.rank, d)] += 1
+                self._outbuf[d] = []
+
+    def _round_flush(self, phase: str) -> None:
+        self._flush_out()
 
     def _get(self, dst: int, src: int, tag: str):
         if dst != self.rank:
@@ -143,6 +172,9 @@ class SocketTransport(MeasuredTransport):
         pend = self._pending[(src, tag)]
         if pend:
             return jnp.asarray(pend.popleft())
+        # about to block: everything we buffered must hit the wire first,
+        # or the lock-step co-processes can never reach their sends
+        self._flush_out()
         deadline = time.monotonic() + self.timeout
         while True:
             budget = deadline - time.monotonic()
@@ -166,6 +198,10 @@ class SocketTransport(MeasuredTransport):
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
         self._closed = True
+        try:
+            self._flush_out()
+        except OSError:
+            pass
         for sock in self._socks.values():
             try:
                 sock.shutdown(socket.SHUT_RDWR)

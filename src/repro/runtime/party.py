@@ -72,7 +72,8 @@ class PartyAView:
     lam: dict[int, jax.Array]
 
     def add(self, other: "PartyAView") -> "PartyAView":
-        m = None if self.m is None else self.m + other.m
+        # either side may be a lambda-only (dealer-pass) view: m stays None
+        m = None if self.m is None or other.m is None else self.m + other.m
         return PartyAView(m, {j: self.lam[j] + other.lam[j]
                               for j in self.lam})
 
@@ -100,7 +101,8 @@ class PartyBView:
     nbits: int
 
     def xor(self, other: "PartyBView") -> "PartyBView":
-        m = None if self.m is None else self.m ^ other.m
+        # either side may be a lambda-only (dealer-pass) view: m stays None
+        m = None if self.m is None or other.m is None else self.m ^ other.m
         return PartyBView(m, {j: self.lam[j] ^ other.lam[j]
                               for j in self.lam},
                           max(self.nbits, other.nbits))

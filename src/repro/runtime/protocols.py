@@ -24,6 +24,18 @@ Message choreography (see algebra.py routing tables):
   * Pi_DotP contracts gamma pieces and online parts *before* they cross
     the wire, making measured communication independent of vector length
     (Lemma C.3 observed on the wire, not just tallied).
+
+Offline/online split (the offline preprocessing subsystem, repro.offline):
+every protocol acquires its data-independent material -- lambda/gamma
+shares, Fig. 18 truncation pairs, conversion masks -- through
+``rt.prep.acquire(tag, kind, build)``.  ``build`` is the protocol's
+offline half: it samples (in exactly the pre-split PRF counter order, so
+all three prep modes stay bit-identical) and moves the offline messages,
+returning **four per-party records** of what each P_i holds afterwards.
+Inline mode runs it in place; deal mode records it into a PrepStore and
+stops before the online half (shares carry only lambdas); online mode pops
+the record and executes the online half alone -- with zero offline bytes
+on the wire, enforced by ``Transport.forbid_phase``.
 """
 from __future__ import annotations
 
@@ -51,6 +63,11 @@ def _jmp(rt: FourPartyRuntime, value_from: int, hash_from: int, dst: int,
     if rt.malicious_checks:
         rt.parties[dst].check_equal(got, h, tag)
     return got
+
+
+def _held_lam(lam: dict, i: int) -> dict:
+    """The lambda components party i holds: all but its own (P0: all)."""
+    return {j: lam[j] for j in lam if j != i}
 
 
 # ---------------------------------------------------------------------------
@@ -85,13 +102,21 @@ def share(rt: FourPartyRuntime, v, owner: int = 0) -> DistAShare:
     ring = rt.ring
     v = jnp.asarray(v, ring.dtype)
     tag = rt.next_tag("sh")
-    lam = {j: rt.sample(lam_holders(j), v.shape) for j in (1, 2, 3)}
-    m = v + lam[1] + lam[2] + lam[3]
+
+    def build():
+        lam = {j: rt.sample(lam_holders(j), v.shape) for j in (1, 2, 3)}
+        return [{"lam": _held_lam(lam, i)} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "share", build)
+    if rt.prep.skip_online:
+        views = [PartyAView(None, dict(parts[i]["lam"])) for i in PARTIES]
+        return DistAShare(tuple(views), tuple(v.shape), ring.dtype)
+    lam0 = parts[0]["lam"]
+    m = v + lam0[1] + lam0[2] + lam0[3]
     got = _broadcast_by_p0(rt, m, tag=tag, nbits=ring.ell)
-    views = [PartyAView(None, dict(lam))]
+    views = [PartyAView(None, dict(lam0))]
     for i in (1, 2, 3):
-        views.append(PartyAView(got[i],
-                                {j: lam[j] for j in (1, 2, 3) if j != i}))
+        views.append(PartyAView(got[i], dict(parts[i]["lam"])))
     return DistAShare.from_views(views)
 
 
@@ -104,13 +129,23 @@ def share_bool(rt: FourPartyRuntime, v, owner: int = 0,
     v = jnp.asarray(v, ring.dtype)
     mask = jnp.asarray((1 << nbits) - 1, ring.dtype)
     tag = rt.next_tag("shB")
-    lam = {j: rt.sample(lam_holders(j), v.shape) & mask for j in (1, 2, 3)}
-    m = (v ^ lam[1] ^ lam[2] ^ lam[3]) & mask
+
+    def build():
+        lam = {j: rt.sample(lam_holders(j), v.shape) & mask
+               for j in (1, 2, 3)}
+        return [{"lam": _held_lam(lam, i)} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "shareB", build)
+    if rt.prep.skip_online:
+        views = [PartyBView(None, dict(parts[i]["lam"]), nbits)
+                 for i in PARTIES]
+        return DistBShare(tuple(views), tuple(v.shape), ring.dtype, nbits)
+    lam0 = parts[0]["lam"]
+    m = (v ^ lam0[1] ^ lam0[2] ^ lam0[3]) & mask
     got = _broadcast_by_p0(rt, m, tag=tag, nbits=nbits)
-    views = [PartyBView(None, dict(lam), nbits)]
+    views = [PartyBView(None, dict(lam0), nbits)]
     for i in (1, 2, 3):
-        views.append(PartyBView(
-            got[i], {j: lam[j] for j in (1, 2, 3) if j != i}, nbits))
+        views.append(PartyBView(got[i], dict(parts[i]["lam"]), nbits))
     return DistBShare(tuple(views), tuple(v.shape), ring.dtype, nbits)
 
 
@@ -122,7 +157,12 @@ def reconstruct(rt: FourPartyRuntime, x: DistAShare,
     """Open [[x]] towards `receivers`; returns {party: plaintext}."""
     ring = rt.ring
     tp = rt.transport
-    tag = rt.next_tag("rec")
+    tag = rt.next_tag("rec")        # allocated in every mode: tag parity
+    if rt.prep.skip_online:
+        # dealer pass: opening is pure online; placeholders keep driver
+        # programs (which may post-process the opened value) runnable.
+        zero = jnp.zeros(x.shape, ring.dtype)
+        return {r: zero for r in receivers}
     got = {}
     with tp.round("online"):
         for r in receivers:
@@ -150,7 +190,8 @@ def reconstruct(rt: FourPartyRuntime, x: DistAShare,
 def _ash_pieces(rt: FourPartyRuntime, v0, *, tag: str,
                 phase: str = "offline") -> list:
     """Deal <v0> by P0.  Returns per-party piece dicts {index: value};
-    piece i is held by P0 and the pair ASH_HOLDERS[i]."""
+    piece i is held by P0 and the pair ASH_HOLDERS[i].  Offline-half
+    machinery: only ever runs inline or on the dealer's transport."""
     ring = rt.ring
     tp = rt.transport
     v0 = jnp.asarray(v0, ring.dtype)
@@ -235,51 +276,60 @@ def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
         out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))
     tag = rt.next_tag(name)
 
-    # ---- offline ----------------------------------------------------------
+    # ---- offline half (the prep build; PRF order matches the joint sim) --
     if not truncate:
-        # counter order matches core.protocols._mult_like: lam_z, then gamma.
-        lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
-        with tp.round("offline"):
-            gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
-        mask_term = {j: lam_z[j] for j in (1, 2, 3)}
-        lam_out = lam_z
-        pieces = None
+        def build():
+            # counter order matches core.protocols._mult_like: lam_z, gamma.
+            lam_z = {j: rt.sample(lam_holders(j), out_shape)
+                     for j in (1, 2, 3)}
+            with tp.round("offline"):
+                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+            return [{"gamma": dict(gamma[i]), "lam_z": _held_lam(lam_z, i)}
+                    for i in PARTIES]
     else:
-        # counter order matches core.protocols.mult_tr: gamma, r_j, aSh(r^t).
-        # Guarded r sampling (core.protocols.TRUNC_GUARD): keeps the opened
-        # z - r from wrapping mod 2^ell for |z| < 2^{ell-2}.
-        with tp.round("offline"):
-            gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
-            r = {j: rt.sample_bounded(lam_holders(j), out_shape,
-                                      ring.ell - PR.TRUNC_GUARD)
-                 for j in (1, 2, 3)}
-            r_total = r[1] + r[2] + r[3]                  # P0-only knowledge
-            pieces = _ash_pieces(rt, ring.truncate(r_total), tag=tag + ".rt")
-        _trunc_pair_check(rt, r, pieces, tag=tag)
-        mask_term = {j: -r[j] for j in (1, 2, 3)}
-        lam_out = None
+        def build():
+            # counter order matches core.protocols.mult_tr: gamma, r_j,
+            # aSh(r^t).  Guarded r sampling (core.protocols.TRUNC_GUARD):
+            # keeps the opened z - r from wrapping for |z| < 2^{ell-2}.
+            with tp.round("offline"):
+                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+                r = {j: rt.sample_bounded(lam_holders(j), out_shape,
+                                          ring.ell - PR.TRUNC_GUARD)
+                     for j in (1, 2, 3)}
+                r_total = r[1] + r[2] + r[3]              # P0-only knowledge
+                pieces = _ash_pieces(rt, ring.truncate(r_total),
+                                     tag=tag + ".rt")
+            _trunc_pair_check(rt, r, pieces, tag=tag)
+            return [{"gamma": dict(gamma[i]), "r": _held_lam(r, i),
+                     "rt": dict(pieces[i])} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, name, build)
+
+    def out_lam(i: int) -> dict:
+        if truncate:
+            return {j: -parts[i]["rt"][j] for j in parts[i]["rt"]}
+        return dict(parts[i]["lam_z"])
+
+    if rt.prep.skip_online:
+        views = [PartyAView(None, out_lam(i)) for i in PARTIES]
+        return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
     # ---- online -----------------------------------------------------------
     def parts_of(party: int, j: int):
         vx, vy = x.views[party], y.views[party]
+        mask = -parts[party]["r"][j] if truncate \
+            else parts[party]["lam_z"][j]
         return AL.mult_online_part(op, vx.lam[j], vy.lam[j], vx.m, vy.m,
-                                   gamma[party][j], mask_term[j])
+                                   parts[party]["gamma"][j], mask)
 
     have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
-    views = [None]
+    views = [PartyAView(None, out_lam(0))]
     for i in (1, 2, 3):
         mm = op(x.views[i].m, y.views[i].m)
         m_z = mm + have[i][1] + have[i][2] + have[i][3]
         if truncate:
             m_z = ring.truncate(m_z)                      # (z - r)^t, public
-            lam_i = {j: -pieces[i][j] for j in pieces[i]}
-        else:
-            lam_i = {j: lam_out[j] for j in (1, 2, 3) if j != i}
-        views.append(PartyAView(m_z, lam_i))
-    if truncate:
-        views[0] = PartyAView(None, {j: -pieces[0][j] for j in (1, 2, 3)})
-    else:
-        views[0] = PartyAView(None, dict(lam_out))
+        views.append(PartyAView(m_z, out_lam(i)))
     return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
 
@@ -335,27 +385,38 @@ def matmul_tr(rt: FourPartyRuntime, x: DistAShare,
 def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
     """Standalone truncation (core.protocols.truncate_share twin)."""
     ring = rt.ring
-    tp = rt.transport
     tag = rt.next_tag("trunc")
     out_shape = x.shape
-    # offline: (r, r^t) pair + Lemma D.1 check (guarded r, see mult path)
-    r = {j: rt.sample_bounded(lam_holders(j), out_shape,
-                              ring.ell - PR.TRUNC_GUARD)
-         for j in (1, 2, 3)}
-    pieces = _ash_pieces(rt, ring.truncate(r[1] + r[2] + r[3]),
-                         tag=tag + ".rt")
-    _trunc_pair_check(rt, r, pieces, tag=tag)
+
+    def build():
+        # offline: (r, r^t) pair + Lemma D.1 check (guarded r, see mult)
+        r = {j: rt.sample_bounded(lam_holders(j), out_shape,
+                                  ring.ell - PR.TRUNC_GUARD)
+             for j in (1, 2, 3)}
+        pieces = _ash_pieces(rt, ring.truncate(r[1] + r[2] + r[3]),
+                             tag=tag + ".rt")
+        _trunc_pair_check(rt, r, pieces, tag=tag)
+        return [{"r": _held_lam(r, i), "rt": dict(pieces[i])}
+                for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "trunc", build)
+
+    def out_lam(i: int) -> dict:
+        return {j: -parts[i]["rt"][j] for j in parts[i]["rt"]}
+
+    if rt.prep.skip_online:
+        views = [PartyAView(None, out_lam(i)) for i in PARTIES]
+        return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
     # online: open z - r via the same part routing (part j = -(lam_j + r_j))
     def parts_of(party: int, j: int):
-        return -(x.views[party].lam[j] + r[j])
+        return -(x.views[party].lam[j] + parts[party]["r"][j])
 
     have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
-    views = [PartyAView(None, {j: -pieces[0][j] for j in (1, 2, 3)})]
+    views = [PartyAView(None, out_lam(0))]
     for i in (1, 2, 3):
         z_minus_r = x.views[i].m + have[i][1] + have[i][2] + have[i][3]
-        views.append(PartyAView(ring.truncate(z_minus_r),
-                                {j: -pieces[i][j] for j in pieces[i]}))
+        views.append(PartyAView(ring.truncate(z_minus_r), out_lam(i)))
     return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
 
@@ -366,26 +427,81 @@ def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
 # non-owner *online* party: one element when both owners are online, two
 # when P0 is an owner (Lemma C.1's factor 2).  The caller provides the
 # round scope so parallel vSh instances share one round.
+#
+# Prep semantics by phase: the lambda masks are always offline material;
+# a phase="offline" vSh (a2b's y, BitExt's r/msb(r)) additionally runs its
+# exchange at deal time, so its record carries the masked value m too and
+# the online-only run rebuilds the full share without touching the wire.
+# A phase="online" vSh is data-dependent: only the lambdas are prep, the
+# exchange stays online (val_of is never called in deal mode).
 # ---------------------------------------------------------------------------
-def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
-         phase: str = "online") -> DistAShare:
-    ring = rt.ring
+def _vsh_lam_parts(rt: FourPartyRuntime, owners: tuple, shape,
+                   mask=None) -> tuple:
+    """Sample the three vSh lambda streams (owner indices joint-sampled by
+    all parties) and slice per party: P_i keeps lambda_j iff it is in the
+    sampling subset -- its view drops its own index unless it is an owner
+    (owners need all three to mask the value)."""
     lam = {}
     for j in (1, 2, 3):
         subset = PARTIES if j in owners else lam_holders(j)
         lam[j] = rt.sample(subset, shape)
+        if mask is not None:
+            lam[j] = lam[j] & mask
+    parts = [{"lam": {j: lam[j] for j in (1, 2, 3)
+                      if j != i or j in owners}} for i in PARTIES]
+    return lam, parts
+
+
+def _vsh_exchange(rt: FourPartyRuntime, val_of, owners: tuple, lam_of,
+                  *, tag: str, nbits: int, phase: str, xor: bool) -> dict:
+    """Mask the owners' value and jmp-send it to each non-owner online
+    party; returns {online party: masked value}."""
     non_owners = tuple(i for i in (1, 2, 3) if i not in owners)
-    m_owner = {p: val_of(p) + lam[1] + lam[2] + lam[3] for p in owners}
+    m_owner = {}
+    for p in owners:
+        lam = lam_of(p)
+        v = val_of(p)
+        m_owner[p] = (v ^ lam[1] ^ lam[2] ^ lam[3]) if xor \
+            else v + lam[1] + lam[2] + lam[3]
     m = dict(m_owner)
     vf, hf = owners
     for dst in non_owners:
         t = tag if len(non_owners) == 1 else f"{tag}.m{dst}"
         m[dst] = _jmp(rt, vf, hf, dst, m_owner[vf], m_owner[hf],
-                      tag=t, nbits=ring.ell, phase=phase)
-    views = [PartyAView(None, dict(lam))]
-    for i in (1, 2, 3):
-        views.append(PartyAView(m[i], {j: lam[j] for j in (1, 2, 3)
-                                       if j != i}))
+                      tag=t, nbits=nbits, phase=phase)
+    return m
+
+
+def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
+         phase: str = "online") -> DistAShare:
+    ring = rt.ring
+
+    def build():
+        lam, parts = _vsh_lam_parts(rt, owners, shape)
+        if phase == "offline":
+            m = _vsh_exchange(rt, val_of, owners, lambda p: lam,
+                              tag=tag, nbits=ring.ell, phase=phase,
+                              xor=False)
+            for i in (1, 2, 3):
+                parts[i]["m"] = m[i]
+        return parts
+
+    parts = rt.prep.acquire(tag, f"vsh.{phase}", build)
+
+    def view(i: int, m) -> PartyAView:
+        return PartyAView(m, {j: parts[i]["lam"][j] for j in (1, 2, 3)
+                              if j != i})
+
+    if phase == "offline":
+        views = [view(0, None)] + [view(i, parts[i]["m"])
+                                   for i in (1, 2, 3)]
+        return DistAShare(tuple(views), tuple(shape), ring.dtype)
+    if rt.prep.skip_online:
+        views = [view(i, None) for i in PARTIES]
+        return DistAShare(tuple(views), tuple(shape), ring.dtype)
+    m = _vsh_exchange(rt, val_of, owners, lambda p: parts[p]["lam"],
+                      tag=tag, nbits=ring.ell, phase=phase, xor=False)
+    views = [view(0, None)] + [view(i, m[i]) for i in (1, 2, 3)]
     return DistAShare(tuple(views), tuple(shape), ring.dtype)
 
 
@@ -400,30 +516,37 @@ def b2a(rt: FourPartyRuntime, v: DistBShare) -> DistAShare:
     one = jnp.asarray(1, ring.dtype)
     tag = rt.next_tag("b2a")
 
-    # ---- offline: aSh of the lambda bit-planes (P0 knows every lambda) ----
-    lam_word0 = (v.views[0].lam[1] ^ v.views[0].lam[2] ^ v.views[0].lam[3])
-    lam_bits0 = jnp.stack([(lam_word0 >> i) & one for i in range(ell)])
-    pieces = _ash_pieces(rt, lam_bits0, tag=tag + ".p")
+    def build():
+        # offline: aSh of the lambda bit-planes (P0 knows every lambda)
+        lam_word0 = (v.views[0].lam[1] ^ v.views[0].lam[2]
+                     ^ v.views[0].lam[3])
+        lam_bits0 = jnp.stack([(lam_word0 >> i) & one for i in range(ell)])
+        pieces = _ash_pieces(rt, lam_bits0, tag=tag + ".p")
 
-    # ---- offline round 2: the Fig. 15/16 verification of <p> -------------
-    # P3 sends v1+v2 (ell elements); P2 sends the lambda_1 bit-planes
-    # (1 bit each); P1 completes lambda_b and checks the sum.
-    with tp.round("offline"):
-        agg = pieces[3][1] + pieces[3][2]
-        tp.send(3, 1, agg, tag=tag + ".ck", nbits=ring.ell, phase="offline")
-        l1_word = v.views[2].lam[1]
-        l1_bits = jnp.stack([(l1_word >> i) & one for i in range(ell)])
-        tp.send(2, 1, l1_bits, tag=tag + ".l1", nbits=1, phase="offline")
-        got_agg = tp.recv(1, 3, tag=tag + ".ck")
-        got_l1 = tp.recv(1, 2, tag=tag + ".l1")
-    if rt.malicious_checks:
-        s = got_agg + pieces[1][3]
-        l2 = v.views[1].lam[2]
-        l3 = v.views[1].lam[3]
-        lam_b = jnp.stack([
-            (got_l1[i] ^ ((l2 >> i) & one) ^ ((l3 >> i) & one))
-            for i in range(ell)])
-        rt.parties[1].check_equal(s, lam_b, tag + ".ck")
+        # offline round 2: the Fig. 15/16 verification of <p>.  P3 sends
+        # v1+v2 (ell elements); P2 sends the lambda_1 bit-planes (1 bit
+        # each); P1 completes lambda_b and checks the sum.
+        with tp.round("offline"):
+            agg = pieces[3][1] + pieces[3][2]
+            tp.send(3, 1, agg, tag=tag + ".ck", nbits=ring.ell,
+                    phase="offline")
+            l1_word = v.views[2].lam[1]
+            l1_bits = jnp.stack([(l1_word >> i) & one for i in range(ell)])
+            tp.send(2, 1, l1_bits, tag=tag + ".l1", nbits=1,
+                    phase="offline")
+            got_agg = tp.recv(1, 3, tag=tag + ".ck")
+            got_l1 = tp.recv(1, 2, tag=tag + ".l1")
+        if rt.malicious_checks:
+            s = got_agg + pieces[1][3]
+            l2 = v.views[1].lam[2]
+            l3 = v.views[1].lam[3]
+            lam_b = jnp.stack([
+                (got_l1[i] ^ ((l2 >> i) & one) ^ ((l3 >> i) & one))
+                for i in range(ell)])
+            rt.parties[1].check_equal(s, lam_b, tag + ".ck")
+        return [{"p": dict(pieces[i])} for i in PARTIES]
+
+    parts = rt.prep.acquire(tag, "b2a", build)
 
     # ---- online: compose x/y/z and vSh them (one parallel round) ---------
     pow2 = (one << jnp.arange(ell, dtype=ring.dtype))
@@ -436,8 +559,8 @@ def b2a(rt: FourPartyRuntime, v: DistBShare) -> DistAShare:
     with tp.round("online"):
         for k, (piece, include_q, owners) in enumerate(B2A_VALS):
             def val_of(party, piece=piece, include_q=include_q):
-                return AL.b2a_val(q_of(party), pieces[party][piece], pow2,
-                                  include_q, ring.dtype)
+                return AL.b2a_val(q_of(party), parts[party]["p"][piece],
+                                  pow2, include_q, ring.dtype)
             sh = _vsh(rt, val_of, owners, shape, tag=f"{tag}.v{k}")
             out = sh if out is None else out.add(sh)
     return out

@@ -24,15 +24,46 @@ from .party import Party, PartyKeys
 from .transport import LocalTransport, Transport
 
 
+class InlinePrep:
+    """Default preprocessing seam: offline material is built in place,
+    interleaved with the online phase (the pre-offline-subsystem behavior).
+
+    Every runtime protocol acquires its data-independent randomness --
+    lambda/gamma shares, truncation pairs, conversion masks -- through
+    ``rt.prep.acquire(tag, kind, build)``.  The three engines:
+
+      * ``InlinePrep``              -- run ``build()`` here and now;
+      * ``offline.store.DealPrep``  -- run ``build()`` (the dealer pass:
+        offline comm happens on the dealer's transport) and record the
+        per-party material in a ``PrepStore`` under `tag`;
+      * ``offline.store.OnlinePrep`` -- never call ``build()``; pop the
+        recorded material from the store (use-once, replay-protected).
+
+    ``skip_online`` tells protocols to stop after the offline half (deal
+    mode, where shares carry only lambda components); ``consuming`` marks
+    the online-only executor, where PRF sampling is forbidden because all
+    randomness must come from the store.
+    """
+
+    mode = "inline"
+    skip_online = False
+    consuming = False
+
+    def acquire(self, tag: str, kind: str, build):
+        return build()
+
+
 class FourPartyRuntime:
     def __init__(self, ring: Ring = RING64, seed: int = 0,
                  transport: Transport | None = None,
                  malicious_checks: bool = True,
-                 bitext_guard: int = 24, bitext_method: str = "mul"):
+                 bitext_guard: int = 24, bitext_method: str = "mul",
+                 prep=None):
         self.ring = ring
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.malicious_checks = malicious_checks
+        self.prep = prep if prep is not None else InlinePrep()
         # BitExt knobs, mirroring TridentContext (same defaults so the two
         # backends trace identical programs).
         self.bitext_guard = bitext_guard
@@ -52,13 +83,23 @@ class FourPartyRuntime:
     def sample(self, subset, shape) -> jax.Array:
         """Non-interactive joint sampling by `subset`; the value is derived
         from a key held by a member party (identical at every member)."""
+        self._assert_may_sample()
         key = self.parties[min(subset)].keys.subset_key(subset)
         return prf_bits(key, self.fresh_counter(), shape, self.ring)
 
     def sample_bounded(self, subset, shape, bits: int) -> jax.Array:
         """Joint sampling of values uniform over [0, 2^bits)."""
+        self._assert_may_sample()
         key = self.parties[min(subset)].keys.subset_key(subset)
         return prf_bounded(key, self.fresh_counter(), shape, self.ring, bits)
+
+    def _assert_may_sample(self) -> None:
+        # The online-only executor draws ALL randomness from the PrepStore;
+        # a PRF call here means a protocol path missed the prep seam.
+        if self.prep.consuming:
+            raise RuntimeError(
+                "PRF sampling during a PrepStore-backed online-only run: "
+                "all offline randomness must come from the store")
 
     # -- bookkeeping -------------------------------------------------------
     def next_tag(self, op: str) -> str:

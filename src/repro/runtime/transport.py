@@ -43,6 +43,11 @@ from collections import defaultdict, deque
 PHASES = ("offline", "online")
 
 
+class PhaseViolation(RuntimeError):
+    """A message was sent in a phase the transport forbids -- e.g. any
+    offline-phase traffic during a PrepStore-backed online-only run."""
+
+
 def _count(payload) -> int:
     shape = getattr(payload, "shape", ())
     return int(math.prod(shape)) if shape else 1
@@ -175,6 +180,7 @@ class MeasuredTransport(Transport):
         self._round_depth = {p: 0 for p in PHASES}
         self._round_traffic = {p: False for p in PHASES}
         self._tampers: list[TamperRule] = []
+        self._forbidden: set[str] = set()
 
     # -- measurement -------------------------------------------------------
     def bits(self, phase: str | None = None) -> int:
@@ -190,6 +196,17 @@ class MeasuredTransport(Transport):
         """Same shape as CostTally.totals() -- directly comparable."""
         return {p: {"rounds": self.rounds[p], "bits": self.phase_bits[p]}
                 for p in PHASES}
+
+    # -- phase policing ----------------------------------------------------
+    def forbid_phase(self, phase: str) -> None:
+        """Make any subsequent ``send`` in `phase` raise ``PhaseViolation``.
+        The online-only executor forbids "offline": a PrepStore-backed run
+        must move zero offline bytes on the wire -- asserted, not assumed."""
+        assert phase in PHASES, phase
+        self._forbidden.add(phase)
+
+    def allow_phase(self, phase: str) -> None:
+        self._forbidden.discard(phase)
 
     # -- fault injection ---------------------------------------------------
     def tamper(self, *, src: int | None = None, dst: int | None = None,
@@ -220,8 +237,10 @@ class MeasuredTransport(Transport):
             yield self
         finally:
             self._round_depth[phase] -= 1
-            if self._round_depth[phase] == 0 and self._round_traffic[phase]:
-                self._frames.add(phase, 1)
+            if self._round_depth[phase] == 0:
+                if self._round_traffic[phase]:
+                    self._frames.add(phase, 1)
+                self._round_flush(phase)
 
     def parallel(self, phases=PHASES):
         return self._frames.parallel(phases)
@@ -232,6 +251,10 @@ class MeasuredTransport(Transport):
     def send(self, src: int, dst: int, payload, *, tag: str, nbits: int,
              phase: str) -> None:
         assert src != dst, f"self-send {src} ({tag})"
+        if phase in self._forbidden:
+            raise PhaseViolation(
+                f"{phase} send P{src}->P{dst} ({tag}) on a transport that "
+                f"forbids {phase}-phase traffic")
         assert self._round_depth[phase] > 0, \
             f"send outside a {phase} round scope ({tag})"
         bits = nbits * _count(payload)
@@ -252,6 +275,10 @@ class MeasuredTransport(Transport):
 
     def _get(self, dst: int, src: int, tag: str):
         raise NotImplementedError
+
+    def _round_flush(self, phase: str) -> None:
+        """Called when the outermost round scope of `phase` closes; backends
+        that coalesce outgoing messages (SocketTransport) flush here."""
 
 
 class LocalTransport(MeasuredTransport):

@@ -46,10 +46,10 @@ class ServeStats:
         return threads * per_batch / lat
 
 
-def drain_in_batches(queue: list, batch_size: int, run_batch) -> list:
-    """Pop `queue` in batch_size groups, zero-padding the tail batch;
-    ``run_batch(X, n)`` returns predictions, of which the first n are kept.
-    Shared by PredictionServer and serve.party_server."""
+def form_batches(queue: list, batch_size: int) -> list:
+    """Pop `queue` into (X, n) pairs of batch_size groups, zero-padding
+    the tail batch (n = valid rows).  Shared by PredictionServer and
+    serve.party_server (both its interleaved and pipelined paths)."""
     out = []
     while queue:
         take = queue[:batch_size]
@@ -59,6 +59,15 @@ def drain_in_batches(queue: list, batch_size: int, run_batch) -> list:
         pad = batch_size - n
         if pad:
             X = np.concatenate([X, np.zeros((pad,) + X.shape[1:])])
+        out.append((X, n))
+    return out
+
+
+def drain_in_batches(queue: list, batch_size: int, run_batch) -> list:
+    """``run_batch(X, n)`` returns predictions, of which the first n are
+    kept."""
+    out = []
+    for X, n in form_batches(queue, batch_size):
         out.extend(np.asarray(run_batch(X, n))[:n])
     return out
 

@@ -15,14 +15,27 @@ Transport backends:
   * ``net_model=`` -- wraps each batch's transport in a
     ``NetModelTransport``, adding modeled per-phase wall-clock under the
     given LAN/WAN link profile to the report;
-  * ``serve_over_sockets`` -- the distributed path: four OS processes over
-    TCP serve the whole query stream, returning predictions plus measured
-    per-link wire traffic and (optionally) modeled time.
+  * ``serve_over_sockets`` -- the distributed path: four long-lived party
+    daemons over TCP serve the stream batch by batch, returning
+    predictions plus measured per-link wire traffic and (optionally)
+    modeled time.
+
+Offline/online split (repro.offline):
+
+  * ``PartyPredictionServer(prep="pipelined")`` -- a background dealer
+    streams one PrepStore per batch into a bounded queue; each batch then
+    executes **online-only** (zero offline bytes, transport-enforced), so
+    the reported online wall-clock is a true serving latency;
+  * ``serve_over_sockets(prep_ahead=True)`` -- deals one session per
+    batch up front, serializes the bank to disk, and the party daemons
+    load it ONCE at startup; every batch task runs online-only over the
+    real TCP mesh.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import tempfile
 import time
 from typing import Callable
 
@@ -31,7 +44,7 @@ import numpy as np
 from ..core.costs import LAN, WAN, NetworkModel
 from ..core.ring import RING64
 from ..runtime import FourPartyRuntime, LocalTransport
-from .engine import drain_in_batches
+from .engine import drain_in_batches, form_batches
 
 # runtime.net (sockets, cluster spawn, network model) is imported lazily
 # inside the paths that need it, keeping the in-process serving path free
@@ -46,6 +59,8 @@ class PartyServeStats:
     online_bits: int = 0
     offline_bits: int = 0
     compute_s: float = 0.0
+    online_compute_s: float = 0.0      # online-only wall (prep modes)
+    offline_deal_s: float = 0.0        # dealer wall (overlapped: pipelined)
     modeled_s: dict = dataclasses.field(
         default_factory=lambda: {"offline": 0.0, "online": 0.0})
     link_online_bits: dict = dataclasses.field(default_factory=dict)
@@ -74,83 +89,148 @@ class PartyPredictionServer:
 
     ``net_model`` (a runtime.net.NetModel) adds per-link modeled
     wall-clock to the report alongside the coarse LAN/WAN estimates.
+
+    ``prep="pipelined"`` runs the offline-online split: a background
+    dealer (repro.offline.PrepPipeline) produces one PrepStore per batch
+    while batches execute online-only from the stores -- offline work
+    leaves the serving critical path, and the report's
+    ``online_only_ms_per_batch`` is wall-clock with zero offline bytes.
     """
 
     def __init__(self, predict_fn: Callable, batch_size: int = 32,
-                 ring=RING64, seed: int = 0, net_model=None):
+                 ring=RING64, seed: int = 0, net_model=None,
+                 prep: str | None = None, prep_capacity: int = 2):
+        assert prep in (None, "pipelined"), prep
         self.predict_fn = predict_fn
         self.batch_size = batch_size
         self.ring = ring
         self.seed = seed
         self.net_model = net_model
+        self.prep = prep
+        self.prep_capacity = prep_capacity
         self.stats = PartyServeStats()
         self._queue: list[np.ndarray] = []
+        self._batches_dealt = 0
 
     def submit(self, x: np.ndarray) -> None:
         self._queue.append(np.asarray(x))
 
-    def flush(self) -> list:
+    # -- per-batch transports ---------------------------------------------
+    def _transport(self):
+        base = LocalTransport()
+        if self.net_model is not None:
+            from ..runtime.net import NetModelTransport
+            return base, NetModelTransport(base, self.net_model)
+        return base, base
+
+    def _account(self, base, tp, rt) -> None:
+        self.stats.batches += 1
+        self.stats.add_transport(base)
+        if self.net_model is not None:
+            for phase in ("offline", "online"):
+                self.stats.modeled_s[phase] += tp.seconds(phase)
+        self.stats.aborted = self.stats.aborted or bool(rt.abort_flag())
+
+    # -- interleaved path ---------------------------------------------------
+    def _flush_interleaved(self) -> list:
         def run_batch(X, n):
-            base = LocalTransport()
-            if self.net_model is not None:
-                from ..runtime.net import NetModelTransport
-                tp = NetModelTransport(base, self.net_model)
-            else:
-                tp = base
+            base, tp = self._transport()
             rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
             t0 = time.perf_counter()
             preds = np.asarray(self.predict_fn(rt, X))
             self.stats.compute_s += time.perf_counter() - t0
-            self.stats.batches += 1
             self.stats.queries += n
-            self.stats.add_transport(base)
-            if self.net_model is not None:
-                for phase in ("offline", "online"):
-                    self.stats.modeled_s[phase] += tp.seconds(phase)
-            self.stats.aborted = self.stats.aborted or bool(rt.abort_flag())
+            self._account(base, tp, rt)
             return preds
 
         return drain_in_batches(self._queue, self.batch_size, run_batch)
 
+    # -- pipelined offline/online path --------------------------------------
+    def _flush_pipelined(self) -> list:
+        from ..offline import OnlinePrep, PrepPipeline
+
+        # form the batches first: the dealer needs their shapes
+        batches = form_batches(self._queue, self.batch_size)
+
+        base_seed = self.seed + self._batches_dealt
+        self._batches_dealt += len(batches)
+        programs = [functools.partial(self._deal_program, np.zeros_like(X))
+                    for X, _ in batches]
+        out: list = []
+        with PrepPipeline(programs, ring=self.ring, base_seed=base_seed,
+                          capacity=self.prep_capacity) as pipe:
+            for X, n in batches:
+                _, store, drep = pipe.next_store()
+                self.stats.offline_deal_s += drep.wall_s
+                base, tp = self._transport()
+                tp.forbid_phase("offline")
+                rt = FourPartyRuntime(self.ring, transport=tp,
+                                      prep=OnlinePrep(store))
+                t0 = time.perf_counter()
+                preds = np.asarray(self.predict_fn(rt, X))
+                dt = time.perf_counter() - t0
+                self.stats.online_compute_s += dt
+                self.stats.compute_s += dt
+                self.stats.queries += n
+                self._account(base, tp, rt)
+                assert base.totals()["offline"]["bits"] == 0
+                out.extend(preds[:n])
+        return out
+
+    def _deal_program(self, X, rt):
+        self.predict_fn(rt, X)
+
+    def flush(self) -> list:
+        if self.prep == "pipelined":
+            return self._flush_pipelined()
+        return self._flush_interleaved()
+
     def report(self) -> dict:
         links = {f"P{a}->P{b}": bits for (a, b), bits
                  in sorted(self.stats.link_online_bits.items())}
+        nb = max(self.stats.batches, 1)
         out = {
             "queries": self.stats.queries,
             "batches": self.stats.batches,
             "aborted": self.stats.aborted,
-            "online_rounds_per_batch":
-                self.stats.online_rounds / max(self.stats.batches, 1),
-            "online_bits_per_batch":
-                self.stats.online_bits / max(self.stats.batches, 1),
-            "offline_bits_per_batch":
-                self.stats.offline_bits / max(self.stats.batches, 1),
+            "online_rounds_per_batch": self.stats.online_rounds / nb,
+            "online_bits_per_batch": self.stats.online_bits / nb,
+            "offline_bits_per_batch": self.stats.offline_bits / nb,
             "lan_latency_ms": self.stats.latency(LAN) * 1e3,
             "wan_latency_s": self.stats.latency(WAN),
             "link_online_bits": links,
         }
         if self.net_model is not None:
-            nb = max(self.stats.batches, 1)
             out[f"modeled_{self.net_model.name}_online_s_per_batch"] = \
                 self.stats.modeled_s["online"] / nb
             out[f"modeled_{self.net_model.name}_offline_s_per_batch"] = \
                 self.stats.modeled_s["offline"] / nb
+        if self.prep == "pipelined":
+            out["online_only_ms_per_batch"] = \
+                self.stats.online_compute_s / nb * 1e3
+            out["offline_deal_s_per_batch"] = \
+                self.stats.offline_deal_s / nb
         return out
 
 
 # ---------------------------------------------------------------------------
-# Distributed serving: four OS processes over TCP.
+# Distributed serving: four long-lived party daemons over TCP.
 # ---------------------------------------------------------------------------
-def _serve_batches(rt, rank, predict_fn=None, batches=None):
-    """Party-process main for socket serving: the mesh and PRF stream
-    persist across the batch loop (one offline provisioning per stream,
-    unlike the per-batch reset of the in-process server)."""
-    return [np.asarray(predict_fn(rt, X)) for X in batches]
+def _serve_batch(rt, rank, predict_fn=None, X=None):
+    """Party-daemon task: one batch through predict_fn on this runtime."""
+    return np.asarray(predict_fn(rt, X))
+
+
+def _zero_deal_program(predict_fn, X, rt):
+    """Module-level deal twin of ``_serve_batch`` (shapes only)."""
+    predict_fn(rt, np.zeros_like(X))
 
 
 def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
                        ring=RING64, seed: int = 0, net_model=None,
-                       timeout: float = 300.0):
+                       timeout: float = 300.0, cluster=None,
+                       prep_ahead: bool = False,
+                       prep_dir: str | None = None):
     """Serve a query stream across four party processes over TCP.
 
     ``predict_fn(rt, X_batch)`` has the same contract as
@@ -160,28 +240,98 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
     opened copy, as examples/secure_inference_parties.py does.  Returns
     (predictions list, report dict); the report carries the measured
     per-link wire traffic all four processes agree on.
+
+    Batches are submitted as tasks to a ``PartyCluster`` of **long-lived
+    daemons** (mesh built once, reused across batches); pass ``cluster=``
+    to reuse one you manage across multiple streams.  With
+    ``prep_ahead=True`` the offline phase for every batch is dealt up
+    front (``repro.offline``), serialized to ``prep_dir`` (default: a
+    temp dir), loaded by the daemons once at startup, and each batch task
+    runs **online-only** -- the daemons' transports forbid offline-phase
+    sends, and the report's totals show zero offline bytes.
     """
-    from ..runtime.net import run_four_parties
+    from ..runtime.net.cluster import PartyCluster
+
     queries = [np.asarray(q) for q in queries]
     batches = [np.stack(queries[i:i + batch_size])
                for i in range(0, len(queries), batch_size)]
-    program = functools.partial(_serve_batches, predict_fn=predict_fn,
-                                batches=batches)
-    results = run_four_parties(program, ring=ring, seed=seed,
-                               net_model=net_model, timeout=timeout)
-    ref = results[0]
-    assert all(r.totals == ref.totals for r in results), \
-        "party processes disagree on measured traffic"
-    preds = [p for batch in results[1].result for p in batch]
-    report = {
-        "queries": len(queries),
-        "batches": len(batches),
-        "aborted": any(r.abort for r in results),
-        "totals": ref.totals,
-        "link_online_bits": {f"P{a}->P{b}": bits["online"]
-                             for (a, b), bits in ref.per_link.items()},
-        "party_wall_s": max(r.wall_s for r in results),
-    }
-    if net_model is not None:
-        report[f"modeled_{net_model.name}_s"] = ref.modeled_s
-    return preds, report
+
+    own_cluster = cluster is None
+    if not own_cluster:
+        # the daemons execute under the CLUSTER's configuration; reject
+        # conflicting arguments instead of silently mislabeling results
+        if cluster.ring is not ring:
+            raise ValueError("cluster= was built for a different ring")
+        if net_model is not cluster.net_model:
+            raise ValueError(
+                "net_model mismatch: pass the model to PartyCluster (the "
+                "daemons integrate the clock), not to serve_over_sockets")
+    prep_path = None
+    deal_wall = 0.0
+    if prep_ahead:
+        if not own_cluster:
+            raise ValueError("prep_ahead needs to provision its own "
+                             "cluster (daemons load the bank at startup)")
+        from ..offline import deal_sessions
+        t0 = time.perf_counter()
+        bank, _ = deal_sessions(
+            [functools.partial(_zero_deal_program, predict_fn, X)
+             for X in batches],
+            ring=ring, base_seed=seed)
+        prep_path = prep_dir or tempfile.mkdtemp(prefix="prepbank-")
+        bank.save(prep_path)
+        deal_wall = time.perf_counter() - t0
+    if own_cluster:
+        cluster = PartyCluster(ring=ring, timeout=timeout,
+                               net_model=net_model, prep_path=prep_path)
+    try:
+        preds: list = []
+        totals = {p: {"rounds": 0, "bits": 0}
+                  for p in ("offline", "online")}
+        link_online: dict = {}
+        aborted = False
+        wall = 0.0
+        modeled = None
+        for k, X in enumerate(batches):
+            results = cluster.submit(
+                functools.partial(_serve_batch, predict_fn=predict_fn,
+                                  X=X),
+                seed=seed + k, prep="bank" if prep_ahead else None,
+                timeout=timeout)
+            ref = results[0]
+            assert all(r.totals == ref.totals for r in results), \
+                "party processes disagree on measured traffic"
+            aborted = aborted or any(r.abort for r in results)
+            preds.extend(np.asarray(results[1].result))
+            for p in totals:
+                for kk in totals[p]:
+                    totals[p][kk] += ref.totals[p][kk]
+            for link, bits in ref.per_link.items():
+                link_online[link] = link_online.get(link, 0) \
+                    + bits["online"]
+            wall += max(r.wall_s for r in results)
+            if ref.modeled_s is not None:
+                modeled = modeled or {p: 0.0 for p in ref.modeled_s}
+                for p, s in ref.modeled_s.items():
+                    modeled[p] += s
+        report = {
+            "queries": len(queries),
+            "batches": len(batches),
+            "aborted": aborted,
+            "totals": totals,
+            "link_online_bits": {f"P{a}->P{b}": bits for (a, b), bits
+                                 in sorted(link_online.items())},
+            "party_wall_s": wall,
+            "cluster_tasks": cluster.tasks_run,
+        }
+        if prep_ahead:
+            report["online_only"] = True
+            report["offline_deal_s"] = deal_wall
+            report["prep_path"] = prep_path
+            assert totals["offline"]["bits"] == 0, totals
+        if modeled is not None and net_model is not None:
+            report[f"modeled_{net_model.name}_s"] = modeled
+        return preds, report
+    finally:
+        if own_cluster:
+            cluster.close()

@@ -1,0 +1,304 @@
+"""Offline preprocessing subsystem: the phase-separation contract.
+
+For every ported protocol, the dealer/store/online-executor split must be
+EXACT against the analytic CostTally (which tests/test_costs.py pins to
+the paper's lemmas):
+
+  * the dealer pass moves exactly the tally's offline bytes/rounds and
+    zero online bytes;
+  * the PrepStore-backed online run moves exactly the tally's online
+    bytes/rounds and zero offline bytes (transport-enforced: an offline
+    send would raise PhaseViolation);
+  * the online-only output is bit-identical to the interleaved run;
+  * prep entries are use-once -- double-consuming raises.
+
+Plus: store serialization round-trips through disk (per-party npz files),
+the declarative Workload walks, the pipelined producer/consumer overlaps,
+and prep-ahead serving over four real socket processes moves zero offline
+bytes on the wire.
+"""
+import numpy as np
+import pytest
+
+from repro.core import activations as ACT
+from repro.core import boolean as BW
+from repro.core import conversions as CV
+from repro.core import protocols as PR
+from repro.core.context import make_context
+from repro.core.ring import RING64
+from repro.offline import (PrepKindError, PrepMissingError, PrepPipeline,
+                           PrepReplayError, PrepStore, Workload, deal,
+                           run_online)
+from repro.offline.store import OnlinePrep
+from repro.runtime import (FourPartyRuntime, LocalTransport, PhaseViolation)
+from repro.runtime import activations as RA
+from repro.runtime import boolean as RB
+from repro.runtime import conversions as RC
+from repro.runtime import protocols as RT
+
+SEED = 7
+
+
+def enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+VALS = np.asarray([2.0, -3.0, 0.5])
+VALS2 = np.asarray([0.5, 1.5, -1.0])
+BITS = np.asarray([1, 0, 1], np.uint64)
+WORDS = np.asarray([5, 2 ** 63 + 1, 7], np.uint64)
+
+
+# op -> (runtime program, joint-simulation twin).  Each program includes
+# its input sharing, so the tally deltas cover the whole trace.
+PROGRAMS = {
+    "mult": (
+        lambda rt: RT.mult(rt, RT.share(rt, enc(VALS)),
+                           RT.share(rt, enc(VALS2))),
+        lambda ctx: PR.mult(ctx, PR.share(ctx, enc(VALS)),
+                            PR.share(ctx, enc(VALS2)))),
+    "mult_tr": (
+        lambda rt: RT.mult_tr(rt, RT.share(rt, enc(VALS)),
+                              RT.share(rt, enc(VALS2))),
+        lambda ctx: PR.mult_tr(ctx, PR.share(ctx, enc(VALS)),
+                               PR.share(ctx, enc(VALS2)))),
+    "dotp": (
+        lambda rt: RT.dotp(rt, RT.share(rt, enc(VALS)),
+                           RT.share(rt, enc(VALS2))),
+        lambda ctx: PR.dotp(ctx, PR.share(ctx, enc(VALS)),
+                            PR.share(ctx, enc(VALS2)))),
+    "matmul_tr": (
+        lambda rt: RT.matmul_tr(rt, RT.share(rt, enc(np.ones((2, 3)))),
+                                RT.share(rt, enc(np.ones((3, 2))))),
+        lambda ctx: PR.matmul_tr(ctx, PR.share(ctx, enc(np.ones((2, 3)))),
+                                 PR.share(ctx, enc(np.ones((3, 2)))))),
+    "trunc": (
+        lambda rt: RT.truncate_share(rt, RT.share(rt, enc(VALS))),
+        lambda ctx: PR.truncate_share(ctx, PR.share(ctx, enc(VALS)))),
+    "and": (
+        lambda rt: RB.and_bshare(rt, RT.share_bool(rt, BITS, nbits=1),
+                                 RT.share_bool(rt, BITS, nbits=1),
+                                 active_bits=1),
+        lambda ctx: BW.and_bshare(ctx, BW.share_bool(ctx, BITS, nbits=1),
+                                  BW.share_bool(ctx, BITS, nbits=1),
+                                  active_bits=1)),
+    "a2b": (
+        lambda rt: RC.a2b(rt, RT.share(rt, enc(VALS))),
+        lambda ctx: CV.a2b(ctx, PR.share(ctx, enc(VALS)))),
+    "b2a": (
+        lambda rt: RT.b2a(rt, RT.share_bool(rt, WORDS)),
+        lambda ctx: CV.b2a(ctx, BW.share_bool(ctx, WORDS))),
+    "bit2a": (
+        lambda rt: RC.bit2a(rt, RT.share_bool(rt, BITS, nbits=1)),
+        lambda ctx: CV.bit2a(ctx, BW.share_bool(ctx, BITS, nbits=1))),
+    "bit_inject": (
+        lambda rt: RC.bit_inject(rt, RT.share_bool(rt, BITS, nbits=1),
+                                 RT.share(rt, enc(VALS))),
+        lambda ctx: CV.bit_inject(ctx, BW.share_bool(ctx, BITS, nbits=1),
+                                  PR.share(ctx, enc(VALS)))),
+    "bitext_mul": (
+        lambda rt: RC.bit_extract(rt, RT.share(rt, enc(VALS)),
+                                  method="mul"),
+        lambda ctx: CV.bit_extract(ctx, PR.share(ctx, enc(VALS)),
+                                   method="mul")),
+    "bitext_ppa": (
+        lambda rt: RC.bit_extract(rt, RT.share(rt, enc(VALS)),
+                                  method="ppa"),
+        lambda ctx: CV.bit_extract(ctx, PR.share(ctx, enc(VALS)),
+                                   method="ppa")),
+    "relu": (
+        lambda rt: RA.relu(rt, RT.share(rt, enc(VALS))),
+        lambda ctx: ACT.relu(ctx, PR.share(ctx, enc(VALS)))),
+    "sigmoid": (
+        lambda rt: RA.sigmoid(rt, RT.share(rt, enc(VALS))),
+        lambda ctx: ACT.sigmoid(ctx, PR.share(ctx, enc(VALS)))),
+}
+
+
+def _tally(ctx):
+    return {p: {"rounds": getattr(ctx.tally, p).rounds,
+                "bits": getattr(ctx.tally, p).bits}
+            for p in ("offline", "online")}
+
+
+class TestPhaseSeparation:
+    """Dealer == tally offline; online-only == tally online; bit-identical."""
+
+    @pytest.mark.parametrize("op", sorted(PROGRAMS))
+    def test_split_exact_and_bit_identical(self, op):
+        prog, joint = PROGRAMS[op]
+
+        ctx = make_context(RING64, seed=SEED)
+        joint(ctx)
+        tally = _tally(ctx)
+
+        rt0 = FourPartyRuntime(RING64, seed=SEED)
+        want = prog(rt0)
+
+        store, drep = deal(prog, ring=RING64, seed=SEED)
+        assert (drep.offline_rounds, drep.offline_bits) == \
+            (tally["offline"]["rounds"], tally["offline"]["bits"]), op
+
+        got, orep = run_online(prog, store, ring=RING64)
+        assert (orep.online_rounds, orep.online_bits) == \
+            (tally["online"]["rounds"], tally["online"]["bits"]), op
+        assert orep.offline_bits == 0
+        assert not orep.abort
+
+        assert np.array_equal(np.asarray(got.to_joint().data),
+                              np.asarray(want.to_joint().data)), \
+            f"{op}: online-only output diverged from interleaved"
+
+    def test_online_reconstruct_matches_interleaved(self):
+        prog = lambda rt: RT.reconstruct(
+            rt, RT.mult_tr(rt, RT.share(rt, enc(VALS)),
+                           RT.share(rt, enc(VALS2))))[1]
+        rt0 = FourPartyRuntime(RING64, seed=SEED)
+        want = np.asarray(prog(rt0))
+        store, _ = deal(prog, ring=RING64, seed=SEED)
+        got, orep = run_online(prog, store, ring=RING64)
+        assert np.array_equal(np.asarray(got), want)
+        assert np.allclose(RING64.decode(got), VALS * VALS2, atol=1e-3)
+
+
+class TestStoreContract:
+    def prog(self, rt):
+        return RT.mult(rt, RT.share(rt, enc(VALS)), RT.share(rt, enc(VALS)))
+
+    def test_double_consume_raises(self):
+        store, _ = deal(self.prog, ring=RING64, seed=SEED)
+        run_online(self.prog, store, ring=RING64)
+        with pytest.raises(PrepReplayError):
+            run_online(self.prog, store, ring=RING64)
+
+    def test_missing_entry_raises(self):
+        with pytest.raises(PrepMissingError):
+            run_online(self.prog, PrepStore(), ring=RING64)
+
+    def test_kind_mismatch_raises(self):
+        store = PrepStore()
+        store.put("mult#1", "other", [{"x": np.zeros(1)}] * 4)
+        with pytest.raises(PrepKindError):
+            store.pop("mult#1", "mult")
+
+    def test_workload_divergence_raises(self):
+        """Online program asking for more than was dealt -> missing."""
+        store, _ = deal(self.prog, ring=RING64, seed=SEED)
+
+        def bigger(rt):
+            self.prog(rt)
+            return RT.mult(rt, RT.share(rt, enc(VALS)),
+                           RT.share(rt, enc(VALS)))
+
+        with pytest.raises(PrepMissingError):
+            run_online(bigger, store, ring=RING64)
+
+    def test_consuming_runtime_refuses_prf_sampling(self):
+        store, _ = deal(self.prog, ring=RING64, seed=SEED)
+        rt = FourPartyRuntime(RING64, prep=OnlinePrep(store))
+        with pytest.raises(RuntimeError, match="PrepStore"):
+            rt.sample((0, 1), (2,))
+
+    def test_forbidden_offline_send_raises(self):
+        tp = LocalTransport()
+        tp.forbid_phase("offline")
+        rt = FourPartyRuntime(RING64, seed=SEED, transport=tp)
+        with pytest.raises(PhaseViolation):
+            RT.mult(rt, RT.share(rt, enc(VALS)), RT.share(rt, enc(VALS)))
+
+    def test_serialization_round_trip(self, tmp_path):
+        path = str(tmp_path / "prep")
+        store, _ = deal(self.prog, ring=RING64, seed=SEED)
+        n = len(store)
+        store.save(path)
+        assert sorted(p.name for p in (tmp_path / "prep").iterdir()) == \
+            ["manifest.json", "party0.npz", "party1.npz", "party2.npz",
+             "party3.npz"]
+        loaded = PrepStore.load(path)
+        assert len(loaded) == n
+        rt0 = FourPartyRuntime(RING64, seed=SEED)
+        want = self.prog(rt0)
+        got, _ = run_online(self.prog, loaded, ring=RING64)
+        assert np.array_equal(np.asarray(got.to_joint().data),
+                              np.asarray(want.to_joint().data))
+
+    def test_per_party_material_is_sliced(self):
+        """P1's serialized material must not contain lambda_1 etc. -- the
+        store is per-party by construction: each record only holds what
+        that party's view holds."""
+        def prog(rt):
+            return RT.mult(rt, RT.share(rt, enc(VALS)),
+                           RT.share(rt, enc(VALS)))
+        store, _ = deal(prog, ring=RING64, seed=SEED)
+        kind, parts = store._entries["sh#1"]
+        assert kind == "share"
+        assert sorted(parts[0]["lam"]) == [1, 2, 3]     # P0 holds all
+        for i in (1, 2, 3):
+            assert i not in parts[i]["lam"]             # P_i misses its own
+
+
+class TestWorkload:
+    def test_declared_workload_deals_and_runs(self):
+        wl = (Workload()
+              .matmul_tr((2, 4), (4, 3), n=2)
+              .relu((2, 3))
+              .b2a((2,)))
+        assert wl.counts() == {"matmul_tr": 2, "relu": 1, "b2a": 1}
+        store, drep = deal(wl.program(), ring=RING64, seed=3)
+        assert drep.entries == len(store)
+        _, orep = run_online(wl.program(), store, ring=RING64)
+        assert orep.offline_bits == 0 and orep.leftover_entries == 0
+
+
+class TestPipeline:
+    def test_sessions_stream_and_match_interleaved(self):
+        prog, _ = PROGRAMS["mult_tr"]
+        with PrepPipeline([prog] * 3, ring=RING64, base_seed=SEED,
+                          capacity=2) as pipe:
+            seen = 0
+            for k, store, drep in pipe.stores():
+                got, orep = run_online(prog, store, ring=RING64)
+                rt0 = FourPartyRuntime(RING64, seed=SEED + k)
+                want = prog(rt0)
+                assert np.array_equal(np.asarray(got.to_joint().data),
+                                      np.asarray(want.to_joint().data))
+                seen += 1
+            assert seen == 3
+
+    def test_exhausted_pipeline_raises(self):
+        prog, _ = PROGRAMS["mult"]
+        from repro.offline import PrepError
+        with PrepPipeline([prog], ring=RING64, base_seed=SEED) as pipe:
+            pipe.next_store(timeout=60)
+            with pytest.raises(PrepError):
+                pipe.next_store(timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# Distributed: prep-ahead serving over four real socket processes.
+# ---------------------------------------------------------------------------
+_W = np.random.RandomState(2).randn(4, 3) * 0.4
+
+
+def _sock_predict(rt, Xb):
+    """Module-level predict_fn (spawn pickling)."""
+    xs = RT.share(rt, RING64.encode(Xb))
+    w = RT.share(rt, RING64.encode(_W))
+    out = RA.relu(rt, RT.matmul_tr(rt, xs, w))
+    return RING64.decode(RT.reconstruct(rt, out)[1])
+
+
+class TestPrepAheadOverSockets:
+    def test_online_only_serving_moves_zero_offline_bytes(self):
+        from repro.serve.party_server import serve_over_sockets
+        queries = np.random.RandomState(4).randn(4, 4)
+        preds, report = serve_over_sockets(
+            _sock_predict, queries, batch_size=2, seed=5, timeout=300,
+            prep_ahead=True)
+        assert report["online_only"] and not report["aborted"]
+        assert report["totals"]["offline"] == {"rounds": 0, "bits": 0}
+        assert report["totals"]["online"]["bits"] > 0
+        assert report["cluster_tasks"] == report["batches"] == 2
+        ref = np.maximum(queries @ _W, 0.0)
+        got = np.stack([np.asarray(p) for p in preds])
+        assert np.abs(got - ref).max() < 0.02

@@ -95,6 +95,42 @@ class TestSocketEqualsLocal:
         assert LAN.seconds_for(rounds, bits) < 0.1 * res.modeled_s["online"]
 
 
+class TestBatchedFraming:
+    def test_round_coalescing_bounds_frames(self, socket_run):
+        """All messages a (link, round) carries ride one frame: a party's
+        frame count is bounded by links x rounds, far below its message
+        count (jmp payloads + hash copies + per-piece sends)."""
+        res = socket_run[0]
+        frames = sum(res.frames_sent.values())
+        rounds = res.totals["offline"]["rounds"] \
+            + res.totals["online"]["rounds"]
+        assert frames > 0
+        # <= one frame per link per round (+ slack for flush-on-recv
+        # splitting a round's sends around a blocking receive)
+        assert frames <= 3 * rounds + 3, (frames, rounds)
+
+    def test_byte_accounting_unchanged_by_coalescing(self, socket_run):
+        """Framing is transport metadata: per-tag bit accounting must be
+        identical to the unbatched LocalTransport."""
+        rt, _ = local_reference()
+        assert socket_run[0].per_link == rt.transport.per_link()
+
+
+class TestClusterReuse:
+    def test_long_lived_daemons_serve_multiple_tasks(self):
+        """One mesh, two submitted programs: per-task deltas agree with a
+        fresh one-shot run (the ROADMAP's long-lived party daemons)."""
+        from repro.runtime.net import PartyCluster
+        with PartyCluster(ring=RING64, timeout=300) as cluster:
+            a = cluster.submit(nn_program, seed=SEED)
+            b = cluster.submit(nn_program, seed=SEED)
+            assert cluster.tasks_run == 2
+        rt, local_out = local_reference()
+        for res in (a[1], b[1]):
+            assert np.array_equal(res.result, local_out)
+        assert a[0].totals == b[0].totals == rt.transport.totals()
+
+
 class TestSocketFaultInjection:
     def test_tampered_tcp_message_aborts(self):
         """Corrupt one gamma piece on P0's outgoing wire: the receiving
