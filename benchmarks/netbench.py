@@ -25,6 +25,13 @@ background dealer (bounded-queue PrepPipeline) while its online consumer
 drains the stores over the real socket mesh -- reporting measured
 ``online_only_ms`` wall-clock next to the modeled LAN/WAN times.
 
+The TRAINING blocks (on by default; ``--train-only`` for the CI train
+job) put one full secure-SGD step -- logreg and the paper's
+784-128-128-10 NN, fwd + bwd + update on the RuntimeEngine -- through the
+same three-way harness, so ``lan/wan_online_only_ms`` is the measured
+per-step online time of distributed training with prep dealt ahead, with
+the same exact-split and bit-identity assertions vs the interleaved step.
+
 One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 ``--out`` (default netbench.json) for CI artifact upload.
 
@@ -111,6 +118,40 @@ def _socket_pipelined_program(rt, rank):
         "lan_online_s": lan_tp.seconds("online"),
         "wan_online_s": wan_tp.seconds("online"),
     }
+
+
+def _train_blocks(quick: bool):
+    """Training-step blocks: one full secure-SGD step (fwd + bwd + update,
+    params revealed) per program -- logreg and the paper's 784-128-128-10
+    NN -- run through the same three-way harness as the inference blocks,
+    so the BENCH JSON carries measured per-step ``lan/wan_online_only_ms``
+    with the exact-split assertions vs the interleaved step."""
+    from repro.train import data as D
+    from repro.train import secure_sgd as SGD
+
+    b = 4 if quick else 8
+    d = 16 if quick else 64
+    logreg = SGD.logreg_task(features=d, lr=0.5)
+    logreg_params = logreg.init_params(seed=0)
+    logreg_batch = D.RegressionData(features=d, n=256, seed=1,
+                                    logistic=True).batch(0, b)
+    nn = SGD.nn_task(lr=0.5)            # 784-128-128-10
+    nn_params = nn.init_params(seed=0)
+    nn_batch = D.MNISTLike(n=256, seed=2).batch(0, b)[:2]
+
+    def step_fn(task, params, batch):
+        def fn(rt):
+            new, _loss, _ = SGD.step_program(task, params, batch)(rt)
+            return np.concatenate(
+                [np.asarray(new[k]).ravel() for k in sorted(new)])
+        return fn
+
+    return [
+        (f"train_logreg_step_d{d}_b{b}",
+         step_fn(logreg, logreg_params, logreg_batch)),
+        (f"train_nn_step_784-128-128-10_b{b}",
+         step_fn(nn, nn_params, nn_batch)),
+    ]
 
 
 def _blocks(quick: bool):
@@ -279,7 +320,8 @@ def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
 
 
 def run(quick: bool = True, socket: bool = False, out: str | None = None,
-        timeout: float = 300.0):
+        timeout: float = 300.0, train: bool = True,
+        train_only: bool = False):
     records = []
     print("netbench: measured wire traffic + modeled LAN/WAN wall-clock "
           "(end-to-end AND online-only)")
@@ -287,7 +329,10 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
           f"{LAN.default.bandwidth_bps/1e9:.0f} Gbps | "
           f"WAN preset: rtt {WAN.default.rtt_s*1e3:.1f} ms, "
           f"{WAN.default.bandwidth_bps/1e6:.0f} Mbps")
-    for name, fn in _blocks(quick):
+    blocks = [] if train_only else _blocks(quick)
+    if train or train_only:
+        blocks += _train_blocks(quick)
+    for name, fn in blocks:
         rec = run_block(name, fn)
         records.append(rec)
         print("BENCH " + json.dumps(rec))
@@ -317,11 +362,15 @@ def main():
     ap.add_argument("--socket", action="store_true",
                     help="also run the 4-process socket NN blocks "
                          "(end-to-end + pipelined online-only)")
+    ap.add_argument("--no-train", dest="train", action="store_false",
+                    help="skip the secure-SGD training-step blocks")
+    ap.add_argument("--train-only", action="store_true",
+                    help="run ONLY the training-step blocks (CI train job)")
     ap.add_argument("--out", default="netbench.json")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()
     run(quick=args.quick, socket=args.socket, out=args.out,
-        timeout=args.timeout)
+        timeout=args.timeout, train=args.train, train_only=args.train_only)
     return 0
 
 

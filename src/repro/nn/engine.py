@@ -1,14 +1,28 @@
-"""Engine abstraction: every model runs either privately (TridentEngine,
-tensors are [[.]]-shares and ops are 4PC protocols) or in the clear
-(PlainEngine, float32 -- the correctness oracle and MPC-overhead baseline).
+"""Engine abstraction: every model runs in one of three execution worlds --
+in the clear (PlainEngine, float32: the correctness oracle and MPC-overhead
+baseline), as a joint simulation of the 4PC protocols (TridentEngine,
+tensors are [[.]]-shares stacked in one process), or party-sliced on the
+runtime (nn.runtime_engine.RuntimeEngine, four Party views over a measured
+Transport -- LocalTransport or the 4-process socket mesh).
 
 Layers are written once against this interface with *manual* forward /
 backward (integer share dtypes are outside jax.grad's tangent system; the
 paper hand-codes backprop for the same reason).
 
+The base class owns the SHARED op surface: public lincomb / scale (with the
+power-of-two fast path), the component-aware shape ops (reshape, transpose,
+concat, split, take, pad, sum, mean, stack, embed), and the generic
+activation compositions (square, silu).  Engines implement only the small
+storage seam underneath -- ``_on_parts`` (map an array function over the
+aligned raw components of their share container), ``_encode_public`` /
+``_raw_const`` / ``_mul_public_raw`` / ``_truncate`` (the fixed-point
+quartet) -- plus the genuinely protocol-specific ops (matmul, mul,
+activations, io).  That seam is exactly what a new execution world plugs
+into: RuntimeEngine adds the party-sliced world without touching any layer.
+
 Activation fwd methods return (y, cache); the matching *_bwd consumes the
-cache.  Shape ops are component-aware (shares carry a leading component
-axis).
+cache.  Shape ops take LOGICAL axes (the component axis of share
+containers is handled inside the seam).
 """
 from __future__ import annotations
 
@@ -27,24 +41,166 @@ from ..core import boolean as BW
 
 
 class Engine:
-    """Interface; see TridentEngine / PlainEngine."""
+    """Shared op surface over the per-engine storage seam; see
+    PlainEngine / TridentEngine / RuntimeEngine."""
 
     name: str = "abstract"
     is_private: bool = False
+    _sum_dtype = None                # ring dtype for share engines
 
-    # --- io ---------------------------------------------------------------
+    # --- io (protocol-specific) ----------------------------------------
     def from_plain(self, x):
         raise NotImplementedError
 
     def to_plain(self, x):
         raise NotImplementedError
 
-    # --- linear algebra ------------------------------------------------
+    # --- linear algebra (protocol-specific) ----------------------------
     def matmul(self, x, w):
         raise NotImplementedError
 
     def mul(self, x, y):
         raise NotImplementedError
+
+    # --- storage seam ---------------------------------------------------
+    def _on_parts(self, fn, *xs):
+        """Apply an array function to every aligned raw component of the
+        engine's tensor container(s) and rebundle.  Components carry the
+        LOGICAL tensor shape; `fn` must be additively homomorphic (all the
+        shape ops below are)."""
+        raise NotImplementedError
+
+    def _on_parts_multi(self, fn, x, n: int):
+        """Like _on_parts, but `fn` returns a list of `n` arrays per
+        component (e.g. jnp.split); returns `n` containers."""
+        raise NotImplementedError
+
+    def _encode_public(self, c):
+        """Public constant/array in the engine's value encoding (fixed
+        point for share engines, dtype cast for plain)."""
+        raise NotImplementedError
+
+    def _raw_const(self, arr):
+        """Public array as a raw word-level constant (no fixed-point
+        scaling) -- for 0/1 masks and power-of-two integer factors."""
+        raise NotImplementedError
+
+    def _mul_public_raw(self, x, enc):
+        """Local product with an already-encoded public factor; NO
+        truncation (the caller decides when to drop fractional bits)."""
+        raise NotImplementedError
+
+    def _truncate(self, x):
+        """Drop one factor of fractional bits after a raw public product
+        (identity for plain floats)."""
+        raise NotImplementedError
+
+    # --- shared linear surface -----------------------------------------
+    def add(self, x, y):
+        return x + y
+
+    def sub(self, x, y):
+        return x - y
+
+    def neg(self, x):
+        return -x
+
+    def add_public(self, x, arr):
+        return x + self._encode_public(arr)
+
+    def scale(self, x, c: float):
+        """x * c for a public real scalar; public power-of-two scales with
+        |c| >= 1 avoid a truncation entirely (integer multiply)."""
+        frac = float(c)
+        if frac != 0 and (abs(frac) >= 1) and float(abs(frac)).is_integer() \
+                and abs(int(frac)) & (abs(int(frac)) - 1) == 0:
+            return self._mul_public_raw(x, self._raw_const(int(frac))) \
+                if frac > 0 else \
+                self._mul_public_raw(self.neg(x), self._raw_const(int(-frac)))
+        return self.lincomb_public([(x, c)])
+
+    def mul_public(self, x, arr):
+        return self._truncate(self._mul_public_raw(
+            x, self._encode_public(arr)))
+
+    def lincomb_public(self, terms):
+        """sum_i c_i * x_i for public real c_i with ONE truncation (the
+        products share their 2f fractional bits; beyond-paper fusion that
+        halves RoPE's truncation communication -- see EXPERIMENTS.md)."""
+        acc = None
+        for x, c in terms:
+            t = self._mul_public_raw(x, self._encode_public(c))
+            acc = t if acc is None else self.add(acc, t)
+        return self._truncate(acc)
+
+    def mask_public(self, x, mask01):
+        """Multiply by a public 0/1 mask: word-level multiply, no
+        truncation."""
+        return self._mul_public_raw(x, self._raw_const(mask01))
+
+    # --- shared shape ops (logical axes; component axis in the seam) ----
+    def reshape(self, x, shape):
+        shape = tuple(shape)
+        return self._on_parts(lambda a: a.reshape(shape), x)
+
+    def transpose(self, x, axes):
+        return self._on_parts(lambda a: a.transpose(axes), x)
+
+    def concat(self, xs, axis):
+        return self._on_parts(
+            lambda *arrs: jnp.concatenate(arrs, axis=axis), *xs)
+
+    def split(self, x, sizes: Sequence[int], axis):
+        idx, s = [], 0
+        for sz in sizes[:-1]:
+            s += sz
+            idx.append(s)
+        return self._on_parts_multi(
+            lambda a: jnp.split(a, idx, axis=axis), x, len(sizes))
+
+    def take(self, x, ids, axis=0):
+        return self._on_parts(lambda a: jnp.take(a, ids, axis=axis), x)
+
+    def pad_zeros(self, x, pads):
+        pads = tuple(pads)
+        return self._on_parts(lambda a: jnp.pad(a, pads), x)
+
+    def sum(self, x, axis, keepdims=False):
+        kw = {} if self._sum_dtype is None else {"dtype": self._sum_dtype}
+        return self._on_parts(
+            lambda a: jnp.sum(a, axis=axis, keepdims=keepdims, **kw), x)
+
+    def mean(self, x, axis, keepdims=False):
+        n = self.shape_of(x)[axis]
+        return self.scale(self.sum(x, axis, keepdims=keepdims), 1.0 / n)
+
+    def stack_to_new_axis(self, xs, axis=0):
+        return self._on_parts(lambda *arrs: jnp.stack(arrs, axis=axis), *xs)
+
+    # --- shared embedding (public token ids: gather is share-local) -----
+    def embed(self, table, ids):
+        return self._on_parts(lambda t: jnp.take(t, ids, axis=0), table)
+
+    def embed_bwd(self, table, ids, dy):
+        flat_ids = jnp.asarray(ids).reshape(-1)
+
+        def fn(t, d):
+            return jnp.zeros_like(t).at[flat_ids].add(
+                d.reshape((-1, d.shape[-1])))
+
+        return self._on_parts(fn, table, dy)
+
+    # --- shared activation compositions ---------------------------------
+    def square(self, x):
+        return self.mul(x, x), x
+
+    def silu(self, x):
+        s, (seg, _) = self.sigmoid(x)
+        y = self.mul(x, s)
+        return y, (x, s, seg)
+
+    def shape_of(self, x):
+        return x.shape
 
 
 # ===========================================================================
@@ -74,34 +230,28 @@ class PlainEngine(Engine):
     def mul(self, x, y):
         return x * y
 
-    def add(self, x, y):
-        return x + y
+    # storage seam: the container IS the array
+    def _on_parts(self, fn, *xs):
+        return fn(*xs)
 
-    def sub(self, x, y):
-        return x - y
+    def _on_parts_multi(self, fn, x, n):
+        return fn(x)
 
-    def neg(self, x):
-        return -x
+    def _encode_public(self, c):
+        return jnp.asarray(c, self.dtype)
 
-    def scale(self, x, c: float):
-        return x * jnp.asarray(c, self.dtype)
+    def _raw_const(self, arr):
+        return jnp.asarray(arr, self.dtype)
 
-    def mul_public(self, x, arr):
-        return x * jnp.asarray(arr, self.dtype)
+    def _mul_public_raw(self, x, enc):
+        return x * enc
 
-    def lincomb_public(self, terms):
-        """sum_i c_i * x_i for public real coefficients."""
-        acc = None
-        for x, c in terms:
-            t = x * jnp.asarray(c, self.dtype)
-            acc = t if acc is None else acc + t
-        return acc
+    def _truncate(self, x):
+        return x
 
-    def mask_public(self, x, mask01):
-        return x * jnp.asarray(mask01, self.dtype)
-
-    def add_public(self, x, arr):
-        return x + jnp.asarray(arr, self.dtype)
+    def mean(self, x, axis, keepdims=False):
+        # true float mean (the base default is the fixed-point scaled sum)
+        return jnp.mean(x, axis=axis, keepdims=keepdims)
 
     def declassify(self, x):
         return jnp.asarray(x, jnp.float32)
@@ -123,10 +273,6 @@ class PlainEngine(Engine):
     def sigmoid_bwd(self, cache, dy):
         seg, _ = cache
         return dy * seg.astype(self.dtype)
-
-    def silu(self, x):
-        s, (seg, _) = self.sigmoid(x)
-        return x * s, (x, s, seg)
 
     def silu_bwd(self, cache, dy):
         x, s, seg = cache
@@ -158,58 +304,12 @@ class PlainEngine(Engine):
     def reciprocal(self, x):
         return 1.0 / x
 
-    def square(self, x):
-        return x * x, x
-
-    # shape ops
-    def reshape(self, x, shape):
-        return x.reshape(shape)
-
-    def transpose(self, x, axes):
-        return x.transpose(axes)
-
-    def concat(self, xs, axis):
-        return jnp.concatenate(xs, axis=axis)
-
-    def split(self, x, sizes: Sequence[int], axis):
-        idx = []
-        s = 0
-        for sz in sizes[:-1]:
-            s += sz
-            idx.append(s)
-        return jnp.split(x, idx, axis=axis)
-
-    def take(self, x, ids, axis=0):
-        return jnp.take(x, ids, axis=axis)
-
-    def pad_zeros(self, x, pads):
-        return jnp.pad(x, pads)
-
-    def sum(self, x, axis, keepdims=False):
-        return jnp.sum(x, axis=axis, keepdims=keepdims)
-
-    def mean(self, x, axis, keepdims=False):
-        return jnp.mean(x, axis=axis, keepdims=keepdims)
-
-    def stack_to_new_axis(self, xs, axis=0):
-        return jnp.stack(xs, axis=axis)
-
-    # embedding
-    def embed(self, table, ids):
-        return jnp.take(table, ids, axis=0)
-
-    def embed_bwd(self, table, ids, dy):
-        return jnp.zeros_like(table).at[ids].add(dy)
-
     def reveal(self, x):
         return x
 
-    def shape_of(self, x):
-        return x.shape
-
 
 # ===========================================================================
-# Trident engine -- [[.]]-shares + 4PC protocols.
+# Trident engine -- [[.]]-shares + 4PC protocols (joint simulation).
 # ===========================================================================
 class TridentEngine(Engine):
     name = "trident"
@@ -224,11 +324,15 @@ class TridentEngine(Engine):
           "newton"   -- beyond-paper arithmetic-world Newton-Raphson with
                         boolean-world normalization; every bit stays in
                         protocols (slower to trace/compile, used by the
-                        focused unit tests and the perf study).
+                        focused unit tests, the perf study, and -- being
+                        the only route ported to the party runtime -- any
+                        program that must stay bit-identical to
+                        RuntimeEngine).
         """
         self.ctx = ctx
         self.ring = ctx.ring
         self.nonlinear = nonlinear
+        self._sum_dtype = ctx.ring.dtype
 
     # io
     def from_plain(self, x):
@@ -247,44 +351,27 @@ class TridentEngine(Engine):
     def mul(self, x: AShare, y: AShare) -> AShare:
         return PR.mult_tr(self.ctx, x, y)
 
-    def add(self, x, y):
-        return x + y
+    # storage seam: components stacked on axis 0 of .data
+    def _on_parts(self, fn, *xs):
+        return AShare(jnp.stack(
+            [fn(*[x.data[k] for x in xs]) for k in range(4)]))
 
-    def sub(self, x, y):
-        return x - y
+    def _on_parts_multi(self, fn, x, n):
+        per_comp = [fn(x.data[k]) for k in range(4)]
+        return [AShare(jnp.stack([per_comp[k][i] for k in range(4)]))
+                for i in range(n)]
 
-    def neg(self, x):
-        return -x
+    def _encode_public(self, c):
+        return self.ring.encode(c)
 
-    def scale(self, x: AShare, c: float) -> AShare:
-        # public power-of-two scales avoid a truncation entirely
-        frac = float(c)
-        if frac != 0 and (abs(frac) >= 1) and float(abs(frac)).is_integer() \
-                and abs(int(frac)) & (abs(int(frac)) - 1) == 0:
-            return x.mul_public(int(frac)) if frac > 0 else \
-                (-x).mul_public(int(-frac))
-        return PR.scale_public(self.ctx, x, c)
+    def _raw_const(self, arr):
+        return jnp.asarray(arr, self.ring.dtype)
 
-    def mul_public(self, x: AShare, arr) -> AShare:
-        enc = self.ring.encode(arr)
-        return PR.truncate_share(self.ctx, x.mul_public(enc))
+    def _mul_public_raw(self, x: AShare, enc) -> AShare:
+        return x.mul_public(enc)
 
-    def lincomb_public(self, terms) -> AShare:
-        """sum_i c_i * x_i for public real c_i with ONE truncation (the
-        products share their 2f fractional bits; beyond-paper fusion that
-        halves RoPE's truncation communication -- see EXPERIMENTS.md)."""
-        acc = None
-        for x, c in terms:
-            t = x.mul_public(self.ring.encode(c))
-            acc = t if acc is None else acc + t
-        return PR.truncate_share(self.ctx, acc)
-
-    def mask_public(self, x: AShare, mask01) -> AShare:
-        """Multiply by a public 0/1 mask: integer multiply, no truncation."""
-        return x.mul_public(jnp.asarray(mask01, self.ring.dtype))
-
-    def add_public(self, x: AShare, arr) -> AShare:
-        return x + self.ring.encode(arr)
+    def _truncate(self, x: AShare) -> AShare:
+        return PR.truncate_share(self.ctx, x)
 
     def declassify(self, x: AShare):
         """Open to all parties and decode (tallied reconstruction)."""
@@ -321,11 +408,6 @@ class TridentEngine(Engine):
     def sigmoid_bwd(self, cache, dy: AShare) -> AShare:
         seg, _ = cache
         return CV.bit_inject(self.ctx, seg, dy)
-
-    def silu(self, x: AShare):
-        s, (seg, _) = self.sigmoid(x)
-        y = self.mul(x, s)
-        return y, (x, s, seg)
 
     def silu_bwd(self, cache, dy: AShare) -> AShare:
         x, s, seg = cache
@@ -375,64 +457,6 @@ class TridentEngine(Engine):
             return GW.garbled_reciprocal(self.ctx, x)
         return ACT.reciprocal(self.ctx, x)
 
-    def square(self, x: AShare):
-        return self.mul(x, x), x
-
-    # shape ops (component axis 0 is preserved)
-    def reshape(self, x: AShare, shape):
-        return x.reshape(shape)
-
-    def transpose(self, x: AShare, axes):
-        return x.transpose(axes)
-
-    def concat(self, xs, axis):
-        ax = axis if axis < 0 else axis + 1
-        return AShare(jnp.concatenate([x.data for x in xs], axis=ax))
-
-    def split(self, x: AShare, sizes: Sequence[int], axis):
-        ax = axis if axis < 0 else axis + 1
-        idx, s = [], 0
-        for sz in sizes[:-1]:
-            s += sz
-            idx.append(s)
-        return [AShare(p) for p in jnp.split(x.data, idx, axis=ax)]
-
-    def take(self, x: AShare, ids, axis=0):
-        ax = axis if axis < 0 else axis + 1
-        return AShare(jnp.take(x.data, ids, axis=ax))
-
-    def pad_zeros(self, x: AShare, pads):
-        return AShare(jnp.pad(x.data, ((0, 0),) + tuple(pads)))
-
-    def sum(self, x: AShare, axis, keepdims=False):
-        ax = axis if axis < 0 else axis + 1
-        return AShare(jnp.sum(x.data, axis=ax, keepdims=keepdims,
-                              dtype=self.ring.dtype))
-
-    def mean(self, x: AShare, axis, keepdims=False):
-        ax = axis if axis < 0 else axis + 1
-        n = x.data.shape[ax]
-        s = AShare(jnp.sum(x.data, axis=ax, keepdims=keepdims,
-                           dtype=self.ring.dtype))
-        return PR.scale_public(self.ctx, s, 1.0 / n)
-
-    def stack_to_new_axis(self, xs, axis=0):
-        ax = axis if axis < 0 else axis + 1
-        return AShare(jnp.stack([x.data for x in xs], axis=ax))
-
-    # embedding: public token ids -> gather is local on shares
-    def embed(self, table: AShare, ids):
-        return AShare(jnp.take(table.data, ids, axis=1))
-
-    def embed_bwd(self, table: AShare, ids, dy: AShare) -> AShare:
-        flat_ids = ids.reshape(-1)
-        d = dy.data.reshape((4, -1, dy.data.shape[-1]))
-        out = jnp.zeros_like(table.data).at[:, flat_ids].add(d)
-        return AShare(out)
-
     def reveal(self, x: AShare):
         """Declassify (tallied as a reconstruction)."""
         return PR.reconstruct(self.ctx, x)
-
-    def shape_of(self, x: AShare):
-        return x.shape

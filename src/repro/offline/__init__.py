@@ -17,7 +17,12 @@ tallied:
                     alone, with the transport *forbidding* offline traffic;
   * ``workload`` -- declarative counts/shapes -> canonical program;
   * ``pipeline`` -- background dealer streaming sessions into a bounded
-                    queue while the online consumer drains them.
+                    queue while the online consumer drains them;
+  * ``continuous`` -- ``ContinuousDealer``: a background dealer that
+                    REFILLS a PrepBank across training steps (session k =
+                    step k's preprocessing, dealt just-in-time with a
+                    bounded look-ahead) instead of one up-front
+                    ``deal_sessions`` call.
 
 Quick tour:
 
@@ -42,13 +47,14 @@ _LAZY = {
     "OnlineReport": "executor",
     "Workload": "workload", "OpSpec": "workload",
     "PrepPipeline": "pipeline",
+    "ContinuousDealer": "continuous",
 }
 
 __all__ = [
-    "DealPrep", "DealReport", "OnlinePrep", "OpSpec", "OnlineReport",
-    "PrepBank", "PrepError", "PrepKindError", "PrepMissingError",
-    "PrepPipeline", "PrepReplayError", "PrepStore", "Workload", "deal",
-    "deal_sessions", "online_runtime", "run_online",
+    "ContinuousDealer", "DealPrep", "DealReport", "OnlinePrep", "OpSpec",
+    "OnlineReport", "PrepBank", "PrepError", "PrepKindError",
+    "PrepMissingError", "PrepPipeline", "PrepReplayError", "PrepStore",
+    "Workload", "deal", "deal_sessions", "online_runtime", "run_online",
 ]
 
 

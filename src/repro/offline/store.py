@@ -116,19 +116,35 @@ def _to_jnp(parts: list) -> list:
 
 
 class PrepStore:
-    """Tag-keyed, use-once offline material for one protocol program run."""
+    """Tag-keyed, use-once offline material for one protocol program run.
 
-    def __init__(self, meta: dict | None = None):
+    ``party`` attributes the store to one consumer for error messages --
+    set it to the consuming party's rank (a daemon sets its own) or leave
+    None for an all-party store.  Failure messages always name the tag,
+    the protocol kind, and the consumer, so a resumed step that
+    re-consumes material is attributable from the traceback alone.
+    """
+
+    def __init__(self, meta: dict | None = None, party: int | None = None):
         self.meta = dict(meta or {})
+        self.party = party
         self._entries: dict[str, tuple[str, list]] = {}
         self._consumed: dict[str, str] = {}
         self._order: list[str] = []
+
+    def _who(self) -> str:
+        """Attribution suffix: consumer party + dealt session/step meta."""
+        who = "all parties" if self.party is None else f"party P{self.party}"
+        for key in ("session", "step"):
+            if key in self.meta:
+                who += f", {key} {self.meta[key]}"
+        return who
 
     # -- dealer side -------------------------------------------------------
     def put(self, tag: str, kind: str, parts: list) -> None:
         assert _SEP not in tag, f"tag {tag!r} may not contain {_SEP!r}"
         if tag in self._entries or tag in self._consumed:
-            raise PrepError(f"duplicate prep entry {tag!r}")
+            raise PrepError(f"duplicate prep entry {tag!r} ({kind!r})")
         if len(parts) != len(PARTIES):
             raise PrepError(f"{tag!r}: expected 4 per-party records, "
                             f"got {len(parts)}")
@@ -139,19 +155,36 @@ class PrepStore:
     def pop(self, tag: str, kind: str) -> list:
         if tag in self._consumed:
             raise PrepReplayError(
-                f"prep entry {tag!r} ({self._consumed[tag]}) already "
-                "consumed -- offline material is use-once")
+                f"prep entry {tag!r} (kind {self._consumed[tag]!r}) "
+                f"already consumed at {self._who()} -- offline material "
+                "is use-once; a replayed/resumed step needs freshly "
+                "dealt material")
         if tag not in self._entries:
             raise PrepMissingError(
-                f"no prep entry {tag!r} (kind {kind!r}) in store; the "
-                "online program diverged from the dealt workload")
+                f"no prep entry {tag!r} (kind {kind!r}) in the store at "
+                f"{self._who()}; the online program diverged from the "
+                "dealt workload")
         got_kind, parts = self._entries.pop(tag)
         if got_kind != kind:
             raise PrepKindError(
-                f"prep entry {tag!r} was dealt as {got_kind!r}, "
-                f"consumed as {kind!r}")
+                f"prep entry {tag!r} was dealt as {got_kind!r} but "
+                f"consumed as {kind!r} at {self._who()}")
         self._consumed[tag] = got_kind
         return _to_jnp(parts)
+
+    # -- per-party slicing -------------------------------------------------
+    def for_party(self, party: int) -> "PrepStore":
+        """The slice a real deployment ships to host `party`: record i is
+        kept only for i == party (other records become empty stubs so the
+        entry structure -- tags, kinds, order -- is preserved)."""
+        assert party in PARTIES, party
+        out = PrepStore(meta=self.meta, party=party)
+        for tag in self.tags():
+            kind, parts = self._entries[tag]
+            out._entries[tag] = (kind, [parts[i] if i == party else {}
+                                        for i in PARTIES])
+            out._order.append(tag)
+        return out
 
     # -- introspection -----------------------------------------------------
     def __len__(self) -> int:
@@ -178,6 +211,8 @@ class PrepStore:
         for _, parts in self._entries.values():
             recs = parts if party is None else [parts[party]]
             for rec in recs:
+                if not rec:
+                    continue            # stubbed-out slice of another party
                 flat: dict = {}
                 _flatten(rec, "", flat)
                 total += sum(a.nbytes for a in flat.values())
@@ -193,12 +228,14 @@ class PrepStore:
             kind, parts = self._entries[tag]
             entries.append({"tag": tag, "kind": kind})
             for i in PARTIES:
+                if not parts[i]:
+                    continue            # party-sliced store: other ranks
                 flat: dict = {}
                 _flatten(parts[i], "", flat)
                 for p, arr in flat.items():
                     per_party[i][f"{tag}{_SEP}{p}"] = arr
         with open(os.path.join(path, "manifest.json"), "w") as f:
-            json.dump({"version": 1, "meta": self.meta,
+            json.dump({"version": 1, "meta": self.meta, "party": self.party,
                        "entries": entries}, f, indent=2)
         for i in PARTIES:
             np.savez_compressed(os.path.join(path, f"party{i}.npz"),
@@ -212,7 +249,7 @@ class PrepStore:
             raise PrepError(f"unknown PrepStore version in {path}")
         per_party = [dict(np.load(os.path.join(path, f"party{i}.npz")))
                      for i in PARTIES]
-        store = cls(meta=manifest.get("meta"))
+        store = cls(meta=manifest.get("meta"), party=manifest.get("party"))
         for ent in manifest["entries"]:
             tag, kind = ent["tag"], ent["kind"]
             prefix = tag + _SEP
@@ -254,6 +291,24 @@ class PrepBank:
         store = self._stores[self._next]
         self._next += 1
         return store
+
+    def seek(self, session: int) -> None:
+        """Position the cursor at `session` (step-indexed consumption: a
+        training driver passes its step so a resumed run skips the
+        sessions earlier steps already used).  Seeking backwards into
+        consumed territory is a replay -- per-step material is use-once."""
+        if session < self._next:
+            raise PrepReplayError(
+                f"prep session {session} already consumed (bank cursor at "
+                f"{self._next}) -- per-step offline material is use-once; "
+                "a retried step needs a freshly dealt session")
+        if session > len(self._stores):
+            # == len is legal: "cursor at the next session to be dealt"
+            # (a refilling bank); next() still fails until it arrives
+            raise PrepMissingError(
+                f"no prep session {session} in the bank "
+                f"({len(self._stores)} dealt)")
+        self._next = session
 
     def save(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)

@@ -25,6 +25,7 @@ _OPS = {
     "mult": 2, "dotp": 2, "matmul": 2, "mult_tr": 2, "matmul_tr": 2,
     "trunc": 1, "and": 2, "a2b": 1, "b2a": 1, "bit2a": 1, "bit_inject": 2,
     "bit_extract": 1, "relu": 1, "sigmoid": 1,
+    "reciprocal": 1, "rsqrt": 1, "smx_softmax": 1,
 }
 
 
@@ -96,6 +97,17 @@ class Workload:
     def sigmoid(self, shape, n: int = 1):
         return self._add("sigmoid", (shape,), n)
 
+    def reciprocal(self, shape, n: int = 1):
+        """NR reciprocal (a2b + prefix-OR + Bit2A normalization + MultTr
+        iterations) -- the smx softmax denominator in NN training."""
+        return self._add("reciprocal", (shape,), n)
+
+    def rsqrt(self, shape, n: int = 1):
+        return self._add("rsqrt", (shape,), n)
+
+    def smx_softmax(self, shape, n: int = 1):
+        return self._add("smx_softmax", (shape,), n)
+
     # -- introspection -----------------------------------------------------
     def counts(self) -> dict:
         out: dict = {}
@@ -162,6 +174,12 @@ class Workload:
                         RA.relu(rt, arith(s[0]))
                     elif spec.kind == "sigmoid":
                         RA.sigmoid(rt, arith(s[0]))
+                    elif spec.kind == "reciprocal":
+                        RA.reciprocal(rt, arith(s[0]))
+                    elif spec.kind == "rsqrt":
+                        RA.rsqrt(rt, arith(s[0]))
+                    elif spec.kind == "smx_softmax":
+                        RA.smx_softmax(rt, arith(s[0]))
                     else:               # pragma: no cover
                         raise ValueError(spec.kind)
 

@@ -18,11 +18,15 @@ The same programs run bit-identically on the joint simulation
 (core/protocols.py) -- tests/test_runtime.py holds the two backends equal,
 and holds the measured wire traffic equal to the analytic CostTally.
 
-Submodules: ``protocols`` (arithmetic world + B2A), ``boolean`` (XOR world
-+ PPA), ``conversions`` (A2B/Bit2A/BitInj/BitExt), ``activations``
-(ReLU/sigmoid), and ``net`` (socket transport, multi-process cluster,
-LAN/WAN network model).  ``net`` is imported lazily to keep the in-process
-path free of socket machinery.
+Submodules: ``protocols`` (arithmetic world + B2A + scale_public),
+``boolean`` (XOR world + PPA + prefix-OR), ``conversions``
+(A2B/Bit2A/BitInj/BitExt), ``activations`` (ReLU/sigmoid plus the NR
+reciprocal/rsqrt normalization and the smx softmax -- everything NN
+training needs), and ``net`` (socket transport, multi-process cluster,
+LAN/WAN network model).  ``net`` is imported lazily to keep the
+in-process path free of socket machinery.  The engine-level entry point
+is ``repro.nn.runtime_engine.RuntimeEngine``, which runs the whole
+nn/train stack on this runtime.
 """
 from . import protocols
 from .party import (DistAShare, DistBShare, Party, PartyAView, PartyBView,

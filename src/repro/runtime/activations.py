@@ -20,7 +20,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import conversions as CV
-from .party import DistAShare, DistBShare
+from . import protocols as RT
+from .party import (DistAShare, DistBShare, PartyBView, map_components)
 from .runtime import FourPartyRuntime
 
 
@@ -43,9 +44,12 @@ def mul_by_cached_bit(rt: FourPartyRuntime, nb: DistBShare,
     return CV.bit_inject(rt, nb, v)
 
 
-def sigmoid(rt: FourPartyRuntime, v: DistAShare) -> DistAShare:
+def sigmoid(rt: FourPartyRuntime, v: DistAShare, return_cache: bool = False):
     """sig(v) = (1^b1) b2 (v + 1/2) + (1^b2);
-    b1 = [v + 1/2 < 0], b2 = [v - 1/2 < 0]."""
+    b1 = [v + 1/2 < 0], b2 = [v - 1/2 < 0].
+
+    ``return_cache`` additionally returns the segment bit (the derivative
+    indicator RuntimeEngine's backward pass injects with)."""
     from .boolean import and_bshare
     ring = rt.ring
     tp = rt.transport
@@ -65,4 +69,111 @@ def sigmoid(rt: FourPartyRuntime, v: DistAShare) -> DistAShare:
             t = CV.bit_inject(rt, a, v_hi)
         with tp.branch():
             d = CV.bit2a(rt, b2.invert())
-    return t.add(d.mul_public(jnp.asarray(ring.scale, ring.dtype)))
+    y = t.add(d.mul_public(jnp.asarray(ring.scale, ring.dtype)))
+    return (y, a) if return_cache else y
+
+
+# ---------------------------------------------------------------------------
+# Newton-Raphson reciprocal / rsqrt with in-protocol normalization
+# (core/activations.py twins: same a2b / prefix-OR / Bit2A / MultTr
+# composition in the same counter order, so outputs reconstruct
+# bit-identically -- needed by the smx softmax in distributed NN training).
+# ---------------------------------------------------------------------------
+def _stack_bit_planes(v: DistBShare, lo: int, hi: int,
+                      ring) -> DistBShare:
+    """Window bit planes [lo, hi) stacked on a new leading axis as one
+    vectorized 1-bit share (the runtime twin of the joint stack over the
+    component axis)."""
+    one = jnp.asarray(1, ring.dtype)
+
+    def planes(w):
+        return jnp.stack([(w >> k) & one for k in range(lo, hi)])
+
+    views = []
+    for pv in v.views:
+        m = None if pv.m is None else planes(pv.m)
+        lam = {j: planes(pv.lam[j]) for j in pv.lam}
+        views.append(PartyBView(m, lam, 1))
+    return DistBShare(tuple(views), (hi - lo,) + tuple(v.shape),
+                      v.dtype, 1)
+
+
+def _leading_one_factors(rt: FourPartyRuntime, x: DistAShare, table
+                         ) -> DistAShare:
+    """Boolean leading-one detection + one-hot arithmetization:
+    [[F]] = sum_k onehot_k * table[k] over the rt.norm_window positions."""
+    from . import boolean as RB
+    ring = rt.ring
+    xb = CV.a2b(rt, x)
+    pf = RB.prefix_or(rt, xb)
+    onehot = pf.xor(pf.shift_right(1))       # exactly the leading-one bit
+    lo, hi = rt.norm_window
+    bits = _stack_bit_planes(onehot, lo, hi, ring)
+    arith = CV.bit2a(rt, bits)               # (W, *shape) arithmetic shares
+    coeff = jnp.stack([table(k) for k in range(lo, hi)])
+    coeff = coeff.reshape((hi - lo,) + (1,) * len(x.shape))
+    weighted = arith.mul_public(coeff)
+    return map_components(
+        lambda a: jnp.sum(a, axis=0, dtype=ring.dtype), weighted)
+
+
+def reciprocal(rt: FourPartyRuntime, x: DistAShare,
+               iters: int = 3) -> DistAShare:
+    """[[1/x]] for x > 0 (fixed point), Newton-Raphson after normalizing
+    x to [0.5, 1) via the leading-one factor F = 2^{f-k-1}."""
+    ring = rt.ring
+    F = _leading_one_factors(
+        rt, x, lambda k: ring.encode(2.0 ** (ring.frac - k - 1)))
+    xn = RT.mult_tr(rt, x, F)                # normalized to [0.5, 1)
+    # y0 = 2.9142 - 2 xn  (classic initial guess, |err| < 0.09)
+    y = xn.add(xn).neg().add_public(ring.encode(2.9142))
+    two = ring.encode(2.0)
+    for _ in range(iters):
+        t = RT.mult_tr(rt, xn, y)
+        y = RT.mult_tr(rt, y, t.neg().add_public(two))
+    return RT.mult_tr(rt, y, F)              # 1/x = y_n * F
+
+
+def rsqrt(rt: FourPartyRuntime, x: DistAShare, iters: int = 3) -> DistAShare:
+    """[[x^{-1/2}]] for x > 0: normalization factor G = 2^{-(k-f+1)/2} is a
+    public per-position table, then NR: y <- y (3 - xn y^2) / 2."""
+    ring = rt.ring
+    F = _leading_one_factors(
+        rt, x, lambda k: ring.encode(2.0 ** (ring.frac - k - 1)))
+    G = _leading_one_factors(
+        rt, x, lambda k: ring.encode(2.0 ** (-(k - ring.frac + 1) / 2.0)))
+    xn = RT.mult_tr(rt, x, F)                # in [0.5, 1)
+    y = RT.scale_public(rt, xn, 1.2).neg().add_public(ring.encode(2.213))
+    three = ring.encode(3.0)
+    for _ in range(iters):
+        y2 = RT.mult_tr(rt, y, y)
+        t = RT.mult_tr(rt, xn, y2)
+        y = RT.mult_tr(rt, y, t.neg().add_public(three))
+        y = RT.scale_public(rt, y, 0.5)
+    # rsqrt(x) = y * sqrt(F) ... folded into the G table: y * G
+    return RT.mult_tr(rt, y, G)
+
+
+def smx_softmax(rt: FourPartyRuntime, u: DistAShare, axis: int = -1,
+                mask=None, return_cache: bool = False):
+    """MPC-friendly softmax smx = relu / sum(relu); the denominator stays
+    in the arithmetic world via the NR reciprocal (the joint engine's
+    nonlinear="newton" route -- the garbled world is not ported).
+
+    ``return_cache`` additionally returns the (p, inv, relu-bit) triple
+    RuntimeEngine's backward pass consumes.  The relu bit is a byproduct:
+    the protocol trace is identical either way."""
+    ring = rt.ring
+    r, bit = relu(rt, u, return_bit=True)
+    if mask is not None:
+        r = r.mul_public(jnp.asarray(mask, ring.dtype))
+    ax = axis % len(u.shape) if axis >= 0 else axis
+    s = map_components(
+        lambda a: jnp.sum(a, axis=ax, keepdims=True, dtype=ring.dtype), r)
+    # eps keeps the denominator strictly positive (all-negative rows)
+    s = s.add_public(ring.encode(1e-2))
+    inv = reciprocal(rt, s)
+    inv_b = map_components(
+        lambda a: jnp.broadcast_to(a, r.shape), inv)
+    p = RT.mult_tr(rt, r, inv_b)
+    return (p, (p, inv, bit)) if return_cache else p

@@ -200,3 +200,19 @@ def msb_of_sum(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
     """[[msb(x + y + cin)]]^B as a 1-bit share."""
     s = ppa_add(rt, x, y, cin=cin)
     return s.bit(rt.ring.ell - 1)
+
+
+def prefix_or(rt: FourPartyRuntime, x: DistBShare) -> DistBShare:
+    """[[prefix-OR]]^B from the msb downward: out_i = OR_{j>=i} x_j.
+
+    log2(ell) levels; OR(a,b) = NOT(AND(NOT a, NOT b)).  The
+    core.boolean.prefix_or twin -- same AND count and counter order --
+    used by the runtime NR reciprocal/rsqrt normalization."""
+    ell = rt.ring.ell
+    cur = x
+    j = 1
+    while j < ell:
+        shifted = cur.shift_right(j)
+        cur = and_bshare(rt, cur.invert(), shifted.invert()).invert()
+        j <<= 1
+    return cur

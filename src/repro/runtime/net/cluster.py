@@ -100,7 +100,14 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank):
         if bank is None:
             raise RuntimeError("task wants prep='bank' but the daemon "
                                "loaded no PrepBank (prep_path unset)")
-        prep = OnlinePrep(bank.next())
+        if task.get("prep_session") is not None:
+            # step-indexed consumption (training): session == step, so a
+            # resumed run skips spent sessions and a retried step raises
+            # PrepReplayError instead of silently eating wrong material
+            bank.seek(task["prep_session"])
+        store = bank.next()
+        store.party = rank              # attribute store errors to P{rank}
+        prep = OnlinePrep(store)
         base.forbid_phase("offline")
     try:
         rt = FourPartyRuntime(ring, seed=task["seed"], transport=transport,
@@ -250,15 +257,20 @@ class PartyCluster:
         return got
 
     def submit(self, program, *, seed: int = 0, prep: str | None = None,
+               prep_session: int | None = None,
                runtime_kwargs: dict | None = None,
                timeout: float | None = None) -> list:
         """Run ``program(rt, rank)`` as one task across the four daemons;
         returns the per-rank ``PartyResult``s (measured deltas for this
         task).  ``prep="bank"`` consumes the next PrepBank session and
-        executes online-only (offline sends forbidden on the wire)."""
+        executes online-only (offline sends forbidden on the wire);
+        ``prep_session`` pins the session index (step-indexed training
+        prep: session k is step k's material, so resumed runs seek past
+        spent sessions and replays fail loudly)."""
         assert not self._closed, "cluster is closed"
         self._task_id += 1
         task = {"program": program, "seed": seed, "prep": prep,
+                "prep_session": prep_session,
                 "runtime_kwargs": dict(runtime_kwargs or {}),
                 "id": self._task_id}
         for q in self._task_qs:

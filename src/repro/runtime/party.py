@@ -191,6 +191,63 @@ class DistAShare:
         return DistAShare(tuple(v.mul_public(c) for v in self.views),
                           self.shape, self.dtype)
 
+    # operator sugar matching AShare, so engine-generic code (the shared
+    # Engine op surface) can write `x + y` against either container
+    def __add__(self, other):
+        if isinstance(other, DistAShare):
+            return self.add(other)
+        return self.add_public(other)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        if isinstance(other, DistAShare):
+            return self.sub(other)
+        return self.add_public(-jnp.asarray(other))
+
+    def __neg__(self):
+        return self.neg()
+
+
+def map_components(fn, *xs: DistAShare) -> DistAShare:
+    """Apply a share-local array function to every aligned component of the
+    given shares (m per online party, each held lambda) and rebundle.
+
+    The linearity contract is the caller's: `fn` must be additively
+    homomorphic over the ring (reshape/transpose/sum/concat/pad/take --
+    every shape op the engines expose).  A lambda-only (dealer-pass) view
+    keeps m=None.
+    """
+    views = []
+    for i in PARTIES:
+        vs = [x.views[i] for x in xs]
+        m = None if any(v.m is None for v in vs) \
+            else fn(*[v.m for v in vs])
+        lam = {j: fn(*[v.lam[j] for v in vs]) for j in vs[0].lam}
+        views.append(PartyAView(m, lam))
+    ref = views[1].m if views[1].m is not None \
+        else next(iter(views[1].lam.values()))
+    return DistAShare(tuple(views), tuple(ref.shape), ref.dtype)
+
+
+def map_components_multi(fn, x: DistAShare, n: int) -> list:
+    """`fn` returns a list of `n` arrays per component (e.g. jnp.split);
+    rebundles into `n` shares."""
+    pieces = [[None] * len(PARTIES) for _ in range(n)]
+    for i in PARTIES:
+        v = x.views[i]
+        ms = fn(v.m) if v.m is not None else [None] * n
+        lams = {j: fn(v.lam[j]) for j in v.lam}
+        for k in range(n):
+            pieces[k][i] = PartyAView(
+                ms[k], {j: lams[j][k] for j in v.lam})
+    out = []
+    for k in range(n):
+        ref = pieces[k][1].m if pieces[k][1].m is not None \
+            else next(iter(pieces[k][1].lam.values()))
+        out.append(DistAShare(tuple(pieces[k]), tuple(ref.shape),
+                              ref.dtype))
+    return out
 
 @dataclasses.dataclass
 class DistBShare:

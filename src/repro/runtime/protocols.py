@@ -420,6 +420,12 @@ def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
     return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
 
+def scale_public(rt: FourPartyRuntime, x: DistAShare, c: float) -> DistAShare:
+    """[[x]] * c for a public real constant: local mul + one truncation
+    (core.protocols.scale_public twin)."""
+    return truncate_share(rt, x.mul_public(rt.ring.encode(c)))
+
+
 # ---------------------------------------------------------------------------
 # Pi_vSh (Fig. 7): sharing of a value two parties both know.
 # `val_of(party)` returns the owner's local copy; the lambda streams mirror

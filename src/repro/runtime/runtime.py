@@ -58,16 +58,17 @@ class FourPartyRuntime:
                  transport: Transport | None = None,
                  malicious_checks: bool = True,
                  bitext_guard: int = 24, bitext_method: str = "mul",
-                 prep=None):
+                 norm_window: tuple = (4, 40), prep=None):
         self.ring = ring
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.malicious_checks = malicious_checks
         self.prep = prep if prep is not None else InlinePrep()
-        # BitExt knobs, mirroring TridentContext (same defaults so the two
-        # backends trace identical programs).
+        # BitExt / NR-normalization knobs, mirroring TridentContext (same
+        # defaults so the two backends trace identical programs).
         self.bitext_guard = bitext_guard
         self.bitext_method = bitext_method
+        self.norm_window = norm_window
         master = jax.random.key(seed)
         self.parties = tuple(
             Party(i, PartyKeys(master, i), CheckLedger()) for i in PARTIES)

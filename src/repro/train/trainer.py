@@ -39,10 +39,28 @@ class TrainerConfig:
     resume: bool = True
 
 
+def seed_for_step(base_seed: int, step: int) -> int:
+    """The step-indexed PRF seed discipline (DESIGN.md section 5): every
+    execution world -- joint sim, RuntimeEngine over LocalTransport, the
+    4-process cluster, and the per-step prep dealer -- derives step t's
+    F_setup streams from this seed, so a resumed/replayed step t is
+    bit-identical everywhere, and the ContinuousDealer's session t IS
+    step t's preprocessing (``secure_sgd`` builds on this contract)."""
+    return base_seed + step
+
+
 class Trainer:
     """Drives (params, batch) -> step_fn with checkpoint/restart and an
     offline-material queue.  step_fn must be engine-agnostic and return
-    (new_params, loss, abort_flag)."""
+    (new_params, loss, abort_flag).
+
+    Runtime-world training: ``secure_sgd.ClusterSGD`` (each step one
+    PartyCluster task over the 4-process socket mesh, optionally consuming
+    step-indexed PrepBank sessions) and ``secure_sgd.PrepAheadSGD`` (local
+    transport, ContinuousDealer-fed online-only steps) both produce
+    step_fns that plug in here unchanged -- checkpoint/restore then
+    replays a step bit-identically across the cluster because the seeds
+    above are a pure function of (base_seed, step)."""
 
     def __init__(self, cfg: TrainerConfig, step_fn: Callable,
                  params, batch_fn: Callable):
@@ -67,8 +85,12 @@ class Trainer:
         if path is None:
             return
         restored, manifest = ckpt_lib.restore(path, self.params)
+        # rewrap share containers (AShare & friends expose .data); plain
+        # numpy arrays also have a .data memoryview, so exclude them
+        # explicitly or np.ndarray(new) reinterprets the values as a shape
         self.params = jax.tree_util.tree_map(
-            lambda ref, new: type(ref)(new) if hasattr(ref, "data")
+            lambda ref, new: type(ref)(new)
+            if hasattr(ref, "data") and not isinstance(ref, np.ndarray)
             else np.asarray(new), self.params, restored)
         self.start_step = manifest["step"] + 1
         self.events.append(f"resumed@{self.start_step}")

@@ -1,0 +1,383 @@
+"""RuntimeEngine + secure SGD on the party runtime.
+
+The acceptance contract of the RuntimeEngine refactor:
+
+  * the NR reciprocal / rsqrt normalization is ported to the party
+    runtime bit-identically, with measured wire == analytic CostTally;
+  * ``paper_ml`` training steps produce bit-identical (params, loss)
+    trajectories on TridentEngine (joint sim), RuntimeEngine over
+    LocalTransport, and RuntimeEngine on the 4-process socket cluster,
+    from the same step-indexed seeds;
+  * per-step prep: training steps run online-only from dealt stores with
+    ZERO offline bytes on the wire (transport-enforced), the
+    ContinuousDealer refills a PrepBank across steps, and
+    checkpoint/restore replays a step with the same prep tags and
+    bit-identical outputs;
+  * prep errors (replay / missing / kind) name the tag, kind, and party.
+"""
+import numpy as np
+import pytest
+
+from repro.core import activations as ACT
+from repro.core import protocols as PR
+from repro.core.context import make_context
+from repro.core.ring import RING64
+from repro.nn.engine import PlainEngine, TridentEngine
+from repro.nn.runtime_engine import RuntimeEngine
+from repro.offline import (ContinuousDealer, PrepKindError,
+                           PrepMissingError, PrepReplayError, PrepStore,
+                           deal, run_online)
+from repro.runtime import FourPartyRuntime
+from repro.runtime import activations as RA
+from repro.runtime import protocols as RT
+from repro.train import data as D
+from repro.train import paper_ml as PML
+from repro.train import secure_sgd as SGD
+from repro.train.trainer import Trainer, TrainerConfig, seed_for_step
+
+SEED = 11
+
+
+def enc(x):
+    return RING64.encode(np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# The ported NR normalization: bit-identity + measured wire == tally.
+# ---------------------------------------------------------------------------
+class TestRuntimeNR:
+    VALS = np.asarray([0.7, 3.2, 11.0, 0.05])
+
+    @pytest.mark.parametrize("op", ["reciprocal", "rsqrt"])
+    def test_bit_identical_and_measured(self, op):
+        ctx = make_context(seed=SEED)
+        x = PR.share(ctx, enc(self.VALS))
+        want = getattr(ACT, op)(ctx, x)
+        rt = FourPartyRuntime(RING64, seed=SEED)
+        xs = RT.share(rt, enc(self.VALS))
+        got = getattr(RA, op)(rt, xs)
+        assert bool((got.to_joint().data == want.data).all())
+        assert rt.transport.totals() == ctx.tally.totals()
+        assert not bool(rt.abort_flag())
+        # and the value is actually a reciprocal / rsqrt
+        ref = 1.0 / self.VALS if op == "reciprocal" \
+            else 1.0 / np.sqrt(self.VALS)
+        np.testing.assert_allclose(RING64.decode(want.reveal()), ref,
+                                   rtol=0.02)
+
+    def test_smx_softmax_matches_joint(self):
+        vals = np.asarray([[0.5, -1.0, 2.0], [1.5, 0.25, -0.75]])
+        ctx = make_context(seed=3)
+        want = ACT.smx_softmax(ctx, PR.share(ctx, enc(vals)))
+        rt = FourPartyRuntime(RING64, seed=3)
+        got = RA.smx_softmax(rt, RT.share(rt, enc(vals)))
+        assert bool((got.to_joint().data == want.data).all())
+        assert rt.transport.totals() == ctx.tally.totals()
+
+
+# ---------------------------------------------------------------------------
+# The shared Engine surface on the runtime world.
+# ---------------------------------------------------------------------------
+class TestRuntimeEngineSurface:
+    def test_shape_and_public_ops_match_plain(self):
+        rng = np.random.RandomState(0)
+        x = rng.randn(4, 6)
+        pe = PlainEngine()
+        re = RuntimeEngine(FourPartyRuntime(RING64, seed=5))
+        xs = re.from_plain(x)
+
+        def close(got, want):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-3)
+
+        close(re.to_plain(re.reshape(xs, (6, 4))), x.reshape(6, 4))
+        close(re.to_plain(re.transpose(xs, (1, 0))), x.T)
+        close(re.to_plain(re.sum(xs, axis=-1, keepdims=True)),
+              x.sum(-1, keepdims=True))
+        close(re.to_plain(re.concat([xs, xs], axis=0)),
+              np.concatenate([x, x], 0))
+        a, b = re.split(xs, (2, 4), axis=-1)
+        close(re.to_plain(a), x[:, :2])
+        close(re.to_plain(b), x[:, 2:])
+        close(re.to_plain(re.take(xs, np.asarray([2, 0]), axis=0)),
+              x[[2, 0]])
+        close(re.to_plain(re.scale(xs, 2.0)), x * 2)
+        close(re.to_plain(re.scale(xs, 0.3)), x * 0.3)
+        close(re.to_plain(re.lincomb_public([(xs, 0.5), (xs, 0.25)])),
+              x * 0.75)
+        close(re.to_plain(re.mask_public(xs, (x > 0))), x * (x > 0))
+        close(re.to_plain(re.mean(xs, -1)), np.asarray(
+            pe.to_plain(pe.mean(pe.from_plain(x), -1))), )
+
+    def test_mlp_forward_bit_identical_to_joint_engine(self):
+        rng = np.random.RandomState(1)
+        net = PML.MLPNet(features=10, layers=(6, 3))
+        params_np = PML.mlp_net_init(rng, net)
+        X = rng.randn(4, 10)
+        te = TridentEngine(make_context(seed=SEED), nonlinear="newton")
+        p_joint, _ = PML.mlp_net_fwd(
+            te, {k: te.from_plain(v) for k, v in params_np.items()}, net,
+            te.from_plain(X))
+        re = RuntimeEngine(FourPartyRuntime(RING64, seed=SEED))
+        p_rt, _ = PML.mlp_net_fwd(
+            re, {k: re.from_plain(v) for k, v in params_np.items()}, net,
+            re.from_plain(X))
+        assert bool((p_rt.to_joint().data == p_joint.data).all())
+
+
+# ---------------------------------------------------------------------------
+# Tri-world training trajectories (the acceptance criterion).
+# ---------------------------------------------------------------------------
+class TestTriWorldTrajectories:
+    def test_logreg_joint_vs_runtime_bit_identical(self):
+        task = SGD.logreg_task(features=6, lr=0.5)
+        data = D.RegressionData(features=6, n=256, seed=1, logistic=True)
+        pj = task.init_params(seed=0)
+        pr = dict(pj)
+        for step in range(3):
+            batch = data.batch(step, 8)
+            pj, lj, aj = SGD.run_step(task, pj, batch, step=step,
+                                      base_seed=SEED, world="joint")
+            pr, lr_, ar = SGD.run_step(task, pr, batch, step=step,
+                                       base_seed=SEED, world="runtime")
+            assert lj == lr_ and not (aj or ar)
+            for k in pj:
+                assert np.array_equal(pj[k], pr[k]), (step, k)
+
+    def test_nn_three_paths_bit_identical_with_zero_offline_bytes(self):
+        net = PML.MLPNet(features=12, layers=(8, 4))
+        task = SGD.nn_task(net=net, lr=0.5)
+        data = D.MNISTLike(n=256, seed=3, features=12, classes=4)
+        params = task.init_params(seed=0)
+        deal_prog = SGD.deal_step_program(task, params,
+                                          data.batch(0, 8)[:2])
+        with ContinuousDealer(lambda s: deal_prog, base_seed=SEED,
+                              ahead=2, total=3) as dealer:
+            sgd = SGD.PrepAheadSGD(task, dealer)
+            pj, pr, po = dict(params), dict(params), dict(params)
+            for step in range(3):
+                b = data.batch(step, 8)[:2]
+                pj, lj, _ = SGD.run_step(task, pj, b, step=step,
+                                         base_seed=SEED, world="joint")
+                pr, lr_, _ = SGD.run_step(task, pr, b, step=step,
+                                          base_seed=SEED, world="runtime")
+                po, lo, ab = sgd.step_fn(po, step, *b)
+                assert lj == lr_ == lo and not ab
+                for k in pj:
+                    assert np.array_equal(pj[k], pr[k]), (step, k)
+                    assert np.array_equal(pj[k], po[k]), (step, k)
+                # per-step prep: the online-only run moved ZERO offline
+                # bytes (transport-enforced) yet real online traffic
+                rep = sgd.reports[-1]
+                assert rep.offline_bits == 0
+                assert rep.online_bits > 0
+
+
+# ---------------------------------------------------------------------------
+# ContinuousDealer: refill, step-indexed consumption, replay.
+# ---------------------------------------------------------------------------
+def _tiny_program(rt):
+    xs = RT.share(rt, enc(np.ones(3)))
+    RT.mult_tr(rt, xs, xs)
+
+
+class TestContinuousDealer:
+    def test_refills_bank_ahead_of_consumer(self):
+        with ContinuousDealer(lambda s: _tiny_program, base_seed=0,
+                              ahead=2, total=5) as dealer:
+            stores = [dealer.next_store() for _ in range(5)]
+            assert [s.meta["step"] for s in stores] == list(range(5))
+            assert dealer.dealt == 5
+            # session k is step k's preprocessing: identical to a direct
+            # deal from the step-indexed seed
+            ref, _ = deal(_tiny_program, seed=seed_for_step(0, 3))
+            assert stores[3].tags() == ref.tags()
+            with pytest.raises(Exception):
+                dealer.next_store(timeout=0.5)   # exhausted after total
+
+    def test_store_for_step_seeks_forward_and_replay_raises(self):
+        with ContinuousDealer(lambda s: _tiny_program, base_seed=0,
+                              ahead=3, total=4) as dealer:
+            s2 = dealer.store_for_step(2)        # skips sessions 0, 1
+            assert s2.meta["step"] == 2
+            with pytest.raises(PrepReplayError) as ei:
+                dealer.store_for_step(1)         # backwards = replay
+            assert "already consumed" in str(ei.value)
+            assert dealer.store_for_step(3).meta["step"] == 3
+
+    def test_dealer_error_surfaces_on_consumer(self):
+        def bad_program(rt):
+            raise ValueError("boom in the dealer")
+
+        with ContinuousDealer(lambda s: bad_program, base_seed=0,
+                              ahead=1, total=2) as dealer:
+            with pytest.raises(ValueError, match="boom in the dealer"):
+                dealer.next_store(timeout=30.0)
+
+
+# ---------------------------------------------------------------------------
+# Prep errors name tag, kind, and party.
+# ---------------------------------------------------------------------------
+class TestPrepErrorAttribution:
+    def _store(self, party=None):
+        store = PrepStore(meta={"step": 4}, party=party)
+        store.put("multtr#3", "multtr", [{"lam": np.zeros(2)}] * 4)
+        return store
+
+    def test_replay_names_tag_kind_party(self):
+        store = self._store(party=2)
+        store.pop("multtr#3", "multtr")
+        with pytest.raises(PrepReplayError) as ei:
+            store.pop("multtr#3", "multtr")
+        msg = str(ei.value)
+        assert "multtr#3" in msg and "'multtr'" in msg
+        assert "party P2" in msg and "step 4" in msg
+
+    def test_missing_names_tag_kind_party(self):
+        with pytest.raises(PrepMissingError) as ei:
+            self._store(party=1).pop("bext#9.r", "vsh.offline")
+        msg = str(ei.value)
+        assert "bext#9.r" in msg and "vsh.offline" in msg
+        assert "party P1" in msg
+
+    def test_kind_mismatch_names_both_kinds(self):
+        with pytest.raises(PrepKindError) as ei:
+            self._store().pop("multtr#3", "trunc")
+        msg = str(ei.value)
+        assert "'multtr'" in msg and "'trunc'" in msg
+        assert "all parties" in msg
+
+    def test_for_party_slices_material(self, tmp_path):
+        store, _ = deal(_tiny_program, seed=3)
+        sliced = store.for_party(2)
+        assert sliced.party == 2
+        assert sliced.tags() == store.tags()
+        assert sliced.nbytes() == store.nbytes(party=2)
+        assert sliced.nbytes() < store.nbytes()
+        sliced.save(str(tmp_path / "p2"))        # sliced stores serialize
+        back = PrepStore.load(str(tmp_path / "p2"))
+        assert back.party == 2 and back.tags() == store.tags()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/restore x per-step prep: the replayed step consumes the SAME
+# tags and reproduces bit-identical params.
+# ---------------------------------------------------------------------------
+class TestRestoreReplaysPrep:
+    def test_restore_replays_step_with_same_tags_bit_identical(
+            self, tmp_path):
+        task = SGD.logreg_task(features=5, lr=0.5)
+        data = D.RegressionData(features=5, n=128, seed=2, logistic=True)
+        params0 = task.init_params(seed=0)
+        deal_prog = SGD.deal_step_program(task, params0, data.batch(0, 8))
+        steps = 5
+
+        def make_trainer(ckpt_dir, dealer, tag_log):
+            def step_fn(params, step, *batch):
+                store = dealer.store_for_step(step)
+                tag_log.append((step, store.tags()))
+                program = SGD.step_program(task, params, tuple(batch))
+                (new, loss, abort), rep = run_online(program, store)
+                assert rep.offline_bits == 0
+                return new, loss, abort
+
+            return Trainer(TrainerConfig(steps=steps, ckpt_dir=ckpt_dir,
+                                         ckpt_every=2, seed=0),
+                           step_fn, dict(params0),
+                           lambda s: data.batch(s, 8))
+
+        # uninterrupted reference
+        tags_a: list = []
+        with ContinuousDealer(lambda s: deal_prog, base_seed=SEED,
+                              ahead=2, total=steps) as dealer:
+            t1 = make_trainer(str(tmp_path / "a"), dealer, tags_a)
+            p_ref = t1.run()
+
+        # crash at step 3, then resume with a FRESH dealer: the resumed
+        # step seeks past the spent sessions and replays from the same
+        # step-indexed seed
+        tags_b: list = []
+        with ContinuousDealer(lambda s: deal_prog, base_seed=SEED,
+                              ahead=2, total=steps) as dealer:
+            t2 = make_trainer(str(tmp_path / "b"), dealer, tags_b)
+            with pytest.raises(RuntimeError):
+                t2.run(crash_at=3)
+        tags_c: list = []
+        with ContinuousDealer(lambda s: deal_prog, base_seed=SEED,
+                              ahead=2, total=steps) as dealer:
+            t3 = make_trainer(str(tmp_path / "b"), dealer, tags_c)
+            p_re = t3.run()
+        assert any(e.startswith("resumed") for e in t3.events)
+
+        # bit-identical final params, and the replayed steps consumed the
+        # SAME prep tag sequences as the uninterrupted run's steps
+        for k in p_ref:
+            assert np.array_equal(np.asarray(p_ref[k]), np.asarray(p_re[k]))
+        ref_tags = dict(tags_a)
+        for step, tags in tags_c:
+            assert tags == ref_tags[step], step
+
+    def test_retrying_a_consumed_step_raises_replay(self):
+        task = SGD.logreg_task(features=4, lr=0.5)
+        data = D.RegressionData(features=4, n=64, seed=5, logistic=True)
+        params = task.init_params(seed=0)
+        deal_prog = SGD.deal_step_program(task, params, data.batch(0, 4))
+        with ContinuousDealer(lambda s: deal_prog, base_seed=0, ahead=1,
+                              total=2) as dealer:
+            sgd = SGD.PrepAheadSGD(task, dealer)
+            sgd.step_fn(params, 0, *data.batch(0, 4))
+            with pytest.raises(PrepReplayError) as ei:
+                sgd.step_fn(params, 0, *data.batch(0, 4))
+            assert "already consumed" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Distributed training on the 4-process socket cluster (slow: spawns).
+# ---------------------------------------------------------------------------
+class TestClusterSGD:
+    def test_logreg_bit_identical_on_cluster_with_prep_ahead(
+            self, tmp_path):
+        from repro.runtime.net.cluster import PartyCluster
+
+        task = SGD.logreg_task(features=6, lr=0.5)
+        data = D.RegressionData(features=6, n=256, seed=1, logistic=True)
+        params = task.init_params(seed=0)
+
+        # joint-simulation reference trajectory
+        ref, pj = [], dict(params)
+        for step in range(3):
+            pj, lj, _ = SGD.run_step(task, pj, data.batch(step, 8),
+                                     step=step, base_seed=SEED,
+                                     world="joint")
+            ref.append((dict(pj), lj))
+
+        bank_dir = str(tmp_path / "bank")
+        SGD.deal_training_bank(task, params, data.batch(0, 8), 3,
+                               base_seed=SEED, path=bank_dir)
+
+        with PartyCluster(prep_path=bank_dir) as cluster:
+            # world 3a: interleaved over the socket mesh
+            sgd = SGD.ClusterSGD(cluster, task, base_seed=SEED)
+            pc = dict(params)
+            for step in range(3):
+                pc, lc, ab = sgd.step_fn(pc, step, *data.batch(step, 8))
+                assert not ab and lc == ref[step][1]
+                for k in pc:
+                    assert np.array_equal(pc[k], ref[step][0][k])
+            assert sgd.offline_bits_on_mesh() > 0    # interleaved: real prep
+
+            # world 3b: prep-ahead -- online-only steps, step-indexed
+            # sessions, ZERO offline bytes on the mesh
+            sgd2 = SGD.ClusterSGD(cluster, task, base_seed=SEED,
+                                  prep="bank")
+            pb = dict(params)
+            for step in range(3):
+                pb, lb, ab = sgd2.step_fn(pb, step, *data.batch(step, 8))
+                assert not ab and lb == ref[step][1]
+                for k in pb:
+                    assert np.array_equal(pb[k], ref[step][0][k])
+            assert sgd2.offline_bits_on_mesh() == 0
+
+            # a retried (replayed) step fails loudly, naming the session
+            with pytest.raises(RuntimeError, match="already consumed"):
+                sgd2.step_fn(pb, 1, *data.batch(1, 8))
