@@ -25,6 +25,13 @@ background dealer (bounded-queue PrepPipeline) while its online consumer
 drains the stores over the real socket mesh -- reporting measured
 ``online_only_ms`` wall-clock next to the modeled LAN/WAN times.
 
+``--live`` adds the **live-streamed** 4-process training block: the
+cluster's PrepBank starts EMPTY and a ``DealerDaemon`` process streams
+step k's session over the per-rank control channel while step k-1 runs
+online; the block reports measured ``live_online_only_ms`` per step and
+asserts bit-identity with the interleaved trajectory plus zero offline
+bytes on the mesh.
+
 The TRAINING blocks (on by default; ``--train-only`` for the CI train
 job) put one full secure-SGD step -- logreg and the paper's
 784-128-128-10 NN, fwd + bwd + update on the RuntimeEngine -- through the
@@ -319,9 +326,78 @@ def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
     }
 
 
+def run_socket_live_block(timeout: float = 300.0, steps: int = 3) -> dict:
+    """The live-streamed 4-process training backend: the cluster's
+    PrepBank starts EMPTY and a ``DealerDaemon`` streams step k's session
+    over the per-rank control channel while step k-1 runs online.  The
+    block asserts the acceptance contract -- bit-identity with the
+    interleaved (joint-simulation) trajectory and ZERO offline bytes on
+    the TCP mesh -- and reports measured per-step online wall-clock
+    (``live_online_only_ms``: steady-state steps, where the stream has
+    overlapped the previous step; step 0 additionally pays the daemons'
+    JIT warmup and is reported separately as ``first_step_ms``.  The wait
+    for a not-yet-streamed session happens before the measured span, so
+    the per-step numbers are pure online execution)."""
+    from repro.runtime.net.cluster import PartyCluster
+    from repro.train import data as D
+    from repro.train import secure_sgd as SGD
+
+    batch, seed = 8, _SOCK_SEED
+    task = SGD.logreg_task(features=6, lr=0.5)
+    data = D.RegressionData(features=6, n=256, seed=1, logistic=True)
+    params0 = task.init_params(seed=0)
+
+    # the interleaved reference trajectory (the tri-world contract makes
+    # joint == interleaved runtime == cluster, asserted in the test suite)
+    ref_p, ref = dict(params0), []
+    for step in range(steps):
+        ref_p, loss, _ = SGD.run_step(task, ref_p, data.batch(step, batch),
+                                      step=step, base_seed=seed,
+                                      world="joint")
+        ref.append((dict(ref_p), loss))
+
+    t0 = time.perf_counter()
+    with PartyCluster(live_prep=True, timeout=timeout) as cluster:
+        with SGD.attach_live_dealer(cluster, task, params0,
+                                    data.batch(0, batch), base_seed=seed,
+                                    ahead=2, total=steps):
+            sgd = SGD.ClusterSGD(cluster, task, base_seed=seed,
+                                 prep="live")
+            p = dict(params0)
+            for step in range(steps):
+                p, loss, abort = sgd.step_fn(p, step,
+                                             *data.batch(step, batch))
+                assert not abort
+                # bit-identity vs the interleaved run, every step
+                assert loss == ref[step][1], (step, loss, ref[step][1])
+                for k in p:
+                    assert np.array_equal(p[k], ref[step][0][k]), (step, k)
+            offline_bits = sgd.offline_bits_on_mesh()
+            results = sgd.results
+    wall = time.perf_counter() - t0
+    assert offline_bits == 0, offline_bits   # transport-enforced
+    per_step_ms = [max(r.wall_s for r in res) * 1e3 for res in results]
+    steady = per_step_ms[1:] or per_step_ms
+    step1 = results[min(1, steps - 1)][0]
+    return {
+        "bench": "netbench",
+        "block": "train_logreg_live_socket_4proc",
+        "steps": steps,
+        "offline_bits_on_mesh": offline_bits,
+        "online_rounds_per_step": step1.totals["online"]["rounds"],
+        "online_bits_per_step": step1.totals["online"]["bits"],
+        "live_online_only_ms": sum(steady) / len(steady),
+        "first_step_ms": per_step_ms[0],
+        "per_step_ms": per_step_ms,
+        "launch_wall_s": wall,
+        "bit_identical": True,
+        "aborted": False,
+    }
+
+
 def run(quick: bool = True, socket: bool = False, out: str | None = None,
         timeout: float = 300.0, train: bool = True,
-        train_only: bool = False):
+        train_only: bool = False, live: bool = False):
     records = []
     print("netbench: measured wire traffic + modeled LAN/WAN wall-clock "
           "(end-to-end AND online-only)")
@@ -347,6 +423,10 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
         rec = run_socket_pipelined_block(timeout=timeout)
         records.append(rec)
         print("BENCH " + json.dumps(rec))
+    if live:
+        rec = run_socket_live_block(timeout=timeout)
+        records.append(rec)
+        print("BENCH " + json.dumps(rec))
     if out:
         with open(out, "w") as f:
             json.dump({"bench": "netbench", "quick": quick,
@@ -366,11 +446,16 @@ def main():
                     help="skip the secure-SGD training-step blocks")
     ap.add_argument("--train-only", action="store_true",
                     help="run ONLY the training-step blocks (CI train job)")
+    ap.add_argument("--live", action="store_true",
+                    help="also run the live-streamed 4-process training "
+                         "block (empty bank, DealerDaemon over the "
+                         "cluster control channel)")
     ap.add_argument("--out", default="netbench.json")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()
     run(quick=args.quick, socket=args.socket, out=args.out,
-        timeout=args.timeout, train=args.train, train_only=args.train_only)
+        timeout=args.timeout, train=args.train, train_only=args.train_only,
+        live=args.live)
     return 0
 
 

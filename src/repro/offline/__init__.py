@@ -22,7 +22,15 @@ tallied:
                     REFILLS a PrepBank across training steps (session k =
                     step k's preprocessing, dealt just-in-time with a
                     bounded look-ahead) instead of one up-front
-                    ``deal_sessions`` call.
+                    ``deal_sessions`` call;
+  * ``live``     -- ``DealerDaemon``/``LivePrepBank``: the distributed
+                    twin of ``continuous`` -- a dealer process streams
+                    per-party session slices into a RUNNING
+                    ``PartyCluster``'s daemons over the per-rank control
+                    queues, so ``submit(prep="bank")`` works for sessions
+                    dealt after daemon startup (open-ended training /
+                    long-lived serving with zero offline bytes on the
+                    mesh).
 
 Quick tour:
 
@@ -48,10 +56,12 @@ _LAZY = {
     "Workload": "workload", "OpSpec": "workload",
     "PrepPipeline": "pipeline",
     "ContinuousDealer": "continuous",
+    "DealerDaemon": "live", "LivePrepBank": "live",
 }
 
 __all__ = [
-    "ContinuousDealer", "DealPrep", "DealReport", "OnlinePrep", "OpSpec",
+    "ContinuousDealer", "DealPrep", "DealReport", "DealerDaemon",
+    "LivePrepBank", "OnlinePrep", "OpSpec",
     "OnlineReport", "PrepBank", "PrepError", "PrepKindError",
     "PrepMissingError", "PrepPipeline", "PrepReplayError", "PrepStore",
     "Workload", "deal", "deal_sessions", "online_runtime", "run_online",

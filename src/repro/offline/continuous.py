@@ -11,8 +11,10 @@ same step-indexed seeds ``train.secure_sgd.seed_for_step`` gives the
 online engines, so session k IS step k's preprocessing) and adds it to the
 bank.  The online consumer blocks in ``next_store`` until its session is
 ready, giving the same backpressure discipline as ``PrepPipeline`` but
-over a refillable ``PrepBank`` that party daemons can also snapshot to
-disk mid-run.
+over a refillable ``PrepBank``.  (Consumed sessions are tombstoned --
+freed -- as they are handed out, so long runs hold at most the look-ahead
+window in memory; for the same reason ``bank.save`` only serializes a
+fully unconsumed bank.)
 
 Use-once discipline is inherited from the bank: consuming a session twice
 (a retried step) raises ``PrepReplayError`` naming the session.

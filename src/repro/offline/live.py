@@ -1,0 +1,345 @@
+"""Live prep streaming: a dealer daemon feeding a RUNNING party cluster.
+
+PR 3/4 froze a ``PartyCluster``'s PrepBank at daemon startup
+(``prep_path=``) and ``ContinuousDealer`` only refilled an *in-process*
+bank -- open-ended training and long-lived serving on the socket runtime
+were impossible without re-spawning the mesh.  This module closes that
+gap:
+
+  * ``LivePrepBank`` -- the daemon-side bank: the party daemon's control
+    thread appends freshly streamed sessions while tasks consume them.
+    Appends are watermarked (sessions arrive strictly in order), bounded
+    (an append blocks while ``sessions_left >= ahead`` -- the same
+    look-ahead discipline as ``offline/continuous.py``, so a stalled
+    consumer backpressures the dealer instead of accumulating unbounded
+    material), and a dealer failure poisons the bank so a waiting task
+    fails with the dealer's traceback rather than a generic timeout.
+
+  * ``DealerDaemon`` -- the driver-side handle on the dealer process: it
+    wraps a ``ContinuousDealer`` (session k dealt from ``base_seed + k``,
+    exactly the step-indexed seed the online step k uses) and ships each
+    freshly dealt session to party daemon i over the cluster's per-rank
+    control queue, addressed to rank i (the daemon stamps
+    ``store.party = rank`` so prep errors attribute to the consuming
+    party).  The control channel is a multiprocessing queue, NOT the TCP
+    mesh -- the mesh still carries zero offline bytes, and the daemons'
+    transports still *forbid* offline sends during ``prep="bank"`` tasks.
+
+    Note on slicing: ``PrepStore.for_party`` remains the format a real
+    multi-host deployment ships to host i (only P_i's entitled
+    components), but this runtime executes the *replicated-program,
+    authoritative-wire* model (see runtime/net/socket_transport.py) --
+    every daemon process locally simulates all four parties' sends, so
+    each daemon needs the session's full four-record store, which is what
+    the control queue carries (serialized once, fanned out per rank).
+
+A watcher thread in the driver monitors the dealer process: if it dies
+without posting its own error (hard kill, OOM), the watcher poisons the
+party daemons' banks itself, so a blocked training step still surfaces a
+named dealer-death error.
+"""
+from __future__ import annotations
+
+import logging
+import multiprocessing as mp
+import pickle
+import queue as _queue
+import threading
+import time
+import traceback
+
+from ..core.ring import Ring
+from .store import PrepBank, PrepError, PrepMissingError, PrepStore
+
+DEFAULT_AHEAD = 2
+
+_log = logging.getLogger(__name__)
+
+
+class LivePrepBank(PrepBank):
+    """A PrepBank a daemon's control thread APPENDS into while tasks
+    consume -- the live twin of the startup-loaded bank.
+
+    All mutation goes through one condition variable: ``append`` (control
+    thread) blocks while the unconsumed window is full, ``wait_for``
+    (task thread) blocks until the dealer's watermark passes the wanted
+    session, and ``fail`` (dealer death) wakes every waiter with the
+    dealer's traceback attached.
+    """
+
+    live = True
+
+    def __init__(self, ahead: int = DEFAULT_AHEAD):
+        super().__init__()
+        assert ahead >= 1
+        self._ahead = ahead
+        self._cond = threading.Condition()
+        self._failure: str | None = None
+        self._finished: int | None = None   # dealer's clean session count
+
+    # -- control-thread side ----------------------------------------------
+    @property
+    def watermark(self) -> int:
+        """Sessions streamed so far (the next session to arrive)."""
+        with self._cond:
+            return len(self._stores)
+
+    def append(self, session: int, store: PrepStore) -> None:
+        """Add the streamed slice of `session` (strictly in order);
+        blocks while ``sessions_left >= ahead`` -- bounded look-ahead."""
+        with self._cond:
+            if session != len(self._stores):
+                raise PrepError(
+                    f"live prep stream out of order: got session {session} "
+                    f"at watermark {len(self._stores)}")
+            while self.sessions_left >= self._ahead \
+                    and self._failure is None:
+                self._cond.wait(timeout=0.2)
+            self._stores.append(store)
+            self._cond.notify_all()
+
+    def fail(self, tb: str) -> None:
+        """Poison the bank with the dealer's traceback: every current and
+        future waiter raises it instead of timing out."""
+        with self._cond:
+            self._failure = tb
+            self._cond.notify_all()
+
+    def finish(self, sessions: int) -> None:
+        """The dealer completed cleanly after `sessions` sessions."""
+        with self._cond:
+            self._finished = sessions
+            self._cond.notify_all()
+
+    # -- task-thread side ---------------------------------------------------
+    @property
+    def next_session(self) -> int:
+        with self._cond:
+            return self._next
+
+    def _raise_failure(self, session: int) -> None:
+        raise PrepError(
+            f"live prep session {session} will never arrive -- the "
+            f"dealer daemon failed (watermark at {len(self._stores)}):\n"
+            f"{self._failure}")
+
+    def wait_for(self, session: int, timeout: float | None = 60.0) -> None:
+        """Block until `session` has been streamed into the bank."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while len(self._stores) <= session:
+                if self._failure is not None:
+                    self._raise_failure(session)
+                if self._finished is not None \
+                        and session >= self._finished:
+                    raise PrepMissingError(
+                        f"live dealer finished after {self._finished} "
+                        f"session(s); session {session} will never arrive")
+                budget = None if deadline is None \
+                    else deadline - time.monotonic()
+                if budget is not None and budget <= 0:
+                    raise PrepError(
+                        f"timed out after {timeout}s waiting for live prep "
+                        f"session {session} (dealer watermark at "
+                        f"{len(self._stores)})")
+                self._cond.wait(timeout=0.2 if budget is None
+                                else min(budget, 0.2))
+
+    def seek(self, session: int) -> None:
+        with self._cond:
+            if session > len(self._stores):
+                if self._failure is not None:
+                    self._raise_failure(session)
+                raise PrepMissingError(
+                    f"prep session {session} not dealt yet "
+                    f"(dealer watermark at {len(self._stores)})")
+            super().seek(session)
+            self._cond.notify_all()     # freed skipped sessions: more room
+
+    def next(self) -> PrepStore:
+        with self._cond:
+            if self._next >= len(self._stores) and self._failure is not None:
+                self._raise_failure(self._next)
+            store = super().next()
+            self._cond.notify_all()     # consumed one: wake a full append
+            return store
+
+
+# ---------------------------------------------------------------------------
+# The dealer daemon process.
+# ---------------------------------------------------------------------------
+def _dealer_daemon_main(cfg, ctrl_qs, status_q):
+    """Deal sessions continuously and stream per-party slices to the party
+    daemons' control queues.  Runs in its own spawned process, so
+    ``cfg["program_for_step"]`` must be picklable (a module-level callable
+    or a functools.partial of one)."""
+    try:
+        from .continuous import ContinuousDealer
+
+        with ContinuousDealer(cfg["program_for_step"], ring=cfg["ring"],
+                              base_seed=cfg["base_seed"],
+                              ahead=cfg["ahead"], total=cfg["total"],
+                              runtime_kwargs=cfg["runtime_kwargs"]) as dealer:
+            session = 0
+            while cfg["total"] is None or session < cfg["total"]:
+                store = dealer.next_store(timeout=None)
+                # replicated-program model: every daemon simulates all
+                # four parties, so each gets the full store -- serialize
+                # it once and fan the blob out per rank
+                blob = pickle.dumps(store, pickle.HIGHEST_PROTOCOL)
+                for q in ctrl_qs:
+                    # bounded queue: a full window blocks the dealer here
+                    # (backpressure), not the party daemons
+                    q.put(("prep", session, blob))
+                status_q.put(("dealt", session))
+                session += 1
+        status_q.put(("done", session))
+        for q in ctrl_qs:
+            q.put(("dealer_done", session))
+    except BaseException:
+        tb = traceback.format_exc()
+        try:
+            status_q.put(("error", tb))
+        except Exception:
+            pass
+        for q in ctrl_qs:
+            try:
+                q.put(("dealer_error", tb), timeout=5.0)
+            except Exception:
+                pass
+
+
+class DealerDaemon:
+    """Driver-side handle on the dealer process feeding a live cluster.
+
+    ``cluster`` must have been built with ``live_prep=True`` (its daemons
+    run control threads appending into ``LivePrepBank``s).
+    ``program_for_step`` is the ``ContinuousDealer`` contract: a picklable
+    ``step -> program`` callable; session k is dealt from
+    ``base_seed + k`` == ``seed_for_step(base_seed, k)``, so session k IS
+    step k's preprocessing.  ``total=None`` streams until closed --
+    open-ended training.
+    """
+
+    def __init__(self, cluster, program_for_step, *, ring: Ring | None = None,
+                 base_seed: int = 0, ahead: int = DEFAULT_AHEAD,
+                 total: int | None = None,
+                 runtime_kwargs: dict | None = None):
+        ctrl_qs = getattr(cluster, "ctrl_queues", None)
+        if not ctrl_qs:
+            raise PrepError(
+                "DealerDaemon needs a live cluster: build it with "
+                "PartyCluster(live_prep=True)")
+        self.total = total
+        self._ctrl_qs = ctrl_qs
+        self._dealt = 0
+        self._done = False
+        self._error: str | None = None
+        self._closed = False
+        ctx = mp.get_context("spawn")
+        self._status_q = ctx.Queue()
+        cfg = {
+            "program_for_step": program_for_step,
+            "ring": ring if ring is not None else cluster.ring,
+            "base_seed": base_seed, "ahead": ahead, "total": total,
+            "runtime_kwargs": runtime_kwargs,
+        }
+        self._proc = ctx.Process(target=_dealer_daemon_main,
+                                 args=(cfg, list(ctrl_qs), self._status_q),
+                                 daemon=True)
+        self._proc.start()
+        self._watcher = threading.Thread(target=self._watch, daemon=True,
+                                         name="dealer-daemon-watch")
+        self._watcher.start()
+
+    # -- status -------------------------------------------------------------
+    def _on_status(self, item) -> None:
+        kind = item[0]
+        if kind == "dealt":
+            self._dealt = item[1] + 1
+        elif kind == "done":
+            self._done = True
+            self._dealt = item[1]
+        elif kind == "error":
+            self._error = item[1]
+
+    def _watch(self) -> None:
+        while True:
+            try:
+                self._on_status(self._status_q.get(timeout=0.2))
+            except _queue.Empty:
+                if not self._proc.is_alive():
+                    break
+        while True:                      # final drain after exit
+            try:
+                self._on_status(self._status_q.get_nowait())
+            except _queue.Empty:
+                break
+        if self._closed or self._done:
+            return
+        if self._error is None:
+            # hard death: the process never posted its own error
+            self._error = (
+                f"dealer daemon died hard (exitcode {self._proc.exitcode}) "
+                f"after streaming {self._dealt} session(s) -- no further "
+                "live prep will arrive")
+        # poison every party daemon's bank so blocked steps fail loudly
+        # and named.  On a soft failure this is redundant with the dealer
+        # process's own best-effort poisoning (harmless: bank.fail is
+        # idempotent and the control threads ignore trailing messages);
+        # on a hard kill it is the ONLY delivery path.
+        self._poison_banks(self._error)
+
+    def _poison_banks(self, msg: str) -> None:
+        for rank, q in enumerate(self._ctrl_qs):
+            deadline = time.monotonic() + 10.0   # per queue, not shared
+            while not self._closed:
+                try:
+                    q.put_nowait(("dealer_error", msg))
+                    break
+                except _queue.Full:
+                    if time.monotonic() >= deadline:
+                        _log.warning(
+                            "could not poison party daemon P%d's live "
+                            "bank (control queue full for 10s); a step "
+                            "blocked on streamed prep there will time "
+                            "out instead of naming the dealer failure",
+                            rank)
+                        break
+                    time.sleep(0.05)
+
+    @property
+    def dealt(self) -> int:
+        """Sessions fully streamed to all four party daemons."""
+        return self._dealt
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def failed(self) -> str | None:
+        """The dealer's traceback (or death notice), if it failed."""
+        return self._error
+
+    # -- lifecycle ----------------------------------------------------------
+    def kill(self) -> None:
+        """Hard-kill the dealer process (test hook for death mid-stream);
+        the watcher then poisons the party daemons' banks."""
+        self._proc.kill()
+        self._watcher.join(timeout=15.0)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._proc.is_alive():
+            self._proc.terminate()
+        self._proc.join(timeout=5.0)
+        self._watcher.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

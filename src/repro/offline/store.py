@@ -263,11 +263,37 @@ class PrepStore:
         return store
 
 
+class _ConsumedSession:
+    """Tombstone left where a consumed (or seek-skipped) PrepStore lived.
+
+    A long training run consumes one session per step; keeping every spent
+    ``PrepStore`` in ``_stores`` would grow memory without bound.  The
+    tombstone frees the material while preserving the session index and
+    dealt metadata, so ``PrepReplayError`` attribution (session/step in
+    the message) survives the reclamation.
+    """
+
+    __slots__ = ("session", "meta", "skipped")
+
+    def __init__(self, session: int, meta: dict, skipped: bool = False):
+        self.session = session
+        self.meta = dict(meta)
+        self.skipped = skipped
+
+    def __repr__(self):
+        how = "skipped" if self.skipped else "consumed"
+        return f"<{how} prep session {self.session} {self.meta}>"
+
+
 class PrepBank:
     """An ordered sequence of PrepStores (one per stream/batch session).
 
     Party daemons load a bank once at startup and consume one session per
     submitted batch -- the serving twin of the store's use-once contract.
+    Consumed sessions are replaced by ``_ConsumedSession`` tombstones the
+    moment they are handed out, so the bank's resident material is bounded
+    by the dealer's look-ahead, not the length of the run
+    (``resident()`` counts live stores; tests pin the bound).
     """
 
     def __init__(self, stores: list | None = None):
@@ -284,11 +310,22 @@ class PrepBank:
     def sessions_left(self) -> int:
         return len(self._stores) - self._next
 
+    def resident(self) -> int:
+        """How many sessions still hold live material (not tombstoned) --
+        bounded residency is the bank's memory contract for long runs."""
+        return sum(isinstance(s, PrepStore) for s in self._stores)
+
+    def _tombstone(self, k: int, skipped: bool) -> PrepStore:
+        store = self._stores[k]
+        assert isinstance(store, PrepStore), store
+        self._stores[k] = _ConsumedSession(k, store.meta, skipped=skipped)
+        return store
+
     def next(self) -> PrepStore:
         if self._next >= len(self._stores):
             raise PrepMissingError(
                 f"prep bank exhausted after {self._next} sessions")
-        store = self._stores[self._next]
+        store = self._tombstone(self._next, skipped=False)
         self._next += 1
         return store
 
@@ -298,19 +335,39 @@ class PrepBank:
         sessions earlier steps already used).  Seeking backwards into
         consumed territory is a replay -- per-step material is use-once."""
         if session < self._next:
+            extra = ""
+            if 0 <= session < len(self._stores):
+                tomb = self._stores[session]
+                meta = getattr(tomb, "meta", {}) or {}
+                bits = [f"{k} {meta[k]}" for k in ("step",) if k in meta]
+                if getattr(tomb, "skipped", False):
+                    bits.append("skipped by a forward seek")
+                if bits:
+                    extra = f" ({', '.join(bits)})"
             raise PrepReplayError(
-                f"prep session {session} already consumed (bank cursor at "
-                f"{self._next}) -- per-step offline material is use-once; "
-                "a retried step needs a freshly dealt session")
+                f"prep session {session}{extra} already consumed (bank "
+                f"cursor at {self._next}) -- per-step offline material is "
+                "use-once; a retried step needs a freshly dealt session")
         if session > len(self._stores):
             # == len is legal: "cursor at the next session to be dealt"
             # (a refilling bank); next() still fails until it arrives
             raise PrepMissingError(
                 f"no prep session {session} in the bank "
                 f"({len(self._stores)} dealt)")
+        # the sessions a forward seek skips can never be reached again
+        # (seeking back raises) -- free their material too
+        for k in range(self._next, session):
+            if isinstance(self._stores[k], PrepStore):
+                self._tombstone(k, skipped=True)
         self._next = session
 
     def save(self, path: str) -> None:
+        dead = [s.session for s in self._stores
+                if isinstance(s, _ConsumedSession)]
+        if dead:
+            raise PrepError(
+                f"cannot serialize a partially consumed PrepBank: "
+                f"session(s) {dead} already consumed (material freed)")
         os.makedirs(path, exist_ok=True)
         with open(os.path.join(path, "bank.json"), "w") as f:
             json.dump({"version": 1, "sessions": len(self._stores)}, f)

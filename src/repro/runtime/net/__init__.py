@@ -16,19 +16,24 @@ protocols are written against (runtime/transport.py):
                         presets from the paper's benchmarking environment).
 
 ``cluster.PartyCluster`` runs the four parties as LONG-LIVED daemons on
-one machine -- mesh built once, optional PrepBank loaded at startup, then
+one machine -- mesh built once, optional PrepBank loaded at startup (or
+streamed LIVE into the running daemons over per-rank control queues by an
+``offline.live.DealerDaemon`` when built with ``live_prep=True``), then
 protocol programs submitted as tasks (interleaved or online-only from the
-bank); ``cluster.run_four_parties`` is the one-shot wrapper.  Outgoing
-messages are coalesced into one frame per (link, round) -- batched
-framing -- so a WAN round costs one rtt regardless of message count.
+bank); ``cluster.run_four_parties`` is the one-shot wrapper.  A failed or
+timed-out task poisons the cluster (later submits raise
+``ClusterPoisoned`` instead of hanging).  Outgoing messages are coalesced
+into one frame per (link, round) -- batched framing -- so a WAN round
+costs one rtt regardless of message count.
 """
 from .framing import FramingError, recv_frame, send_frame, send_frames
 from .model import LAN, WAN, LinkSpec, NetModel, NetModelTransport
 from .socket_transport import SocketTransport, TransportTimeout
-from .cluster import PartyCluster, PartyResult, run_four_parties
+from .cluster import (ClusterPoisoned, PartyCluster, PartyResult,
+                      run_four_parties)
 
 __all__ = [
-    "FramingError", "LAN", "WAN", "LinkSpec", "NetModel",
+    "ClusterPoisoned", "FramingError", "LAN", "WAN", "LinkSpec", "NetModel",
     "NetModelTransport", "PartyCluster", "PartyResult", "SocketTransport",
     "TransportTimeout", "recv_frame", "send_frame", "send_frames",
     "run_four_parties",

@@ -18,6 +18,25 @@ online-only: the daemon's transport *forbids* offline traffic for the span
 of the task (any offline send raises), realizing the offline/online split
 on the real wire.
 
+Live prep streaming (``live_prep=True``): each daemon starts with an
+EMPTY ``LivePrepBank`` plus a control thread draining a per-rank
+**control queue** -- a multiprocessing channel separate from the TCP
+mesh.  A driver-side ``offline.live.DealerDaemon`` deals sessions
+continuously and ships each session down control queue i addressed to
+daemon i (the daemon stamps it ``party=i`` for error attribution), so
+``submit(prep="bank", prep_session=k)`` works for sessions dealt *after*
+daemon startup: a task blocks until its session's material arrives
+(bounded look-ahead backpressures the dealer), and the mesh still carries
+zero offline bytes, transport-enforced.  A dealer failure poisons the
+live banks, so a waiting task fails with the dealer's traceback instead
+of a generic timeout.
+
+A failed or timed-out task leaves the lock-step mesh undefined, so the
+cluster POISONS itself: the failing ``submit`` raises with the collected
+tracebacks, and every later ``submit`` raises ``ClusterPoisoned``
+immediately (instead of hanging until timeout against daemons that
+already exited).  Tear the cluster down and start a fresh one.
+
 ``run_four_parties(program)`` is the one-shot path (spawn, run one task,
 tear down) used by tests and benches; it is now a thin wrapper over a
 temporary cluster.
@@ -36,8 +55,11 @@ consistent with what actually crossed the network.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import multiprocessing as mp
+import queue as _queue
 import socket
+import threading
 import time
 import traceback
 
@@ -46,6 +68,16 @@ import numpy as np
 from ...core.ring import RING64, Ring
 
 DEFAULT_TIMEOUT = 120.0
+DEFAULT_LIVE_AHEAD = 2
+
+_log = logging.getLogger(__name__)
+
+
+class ClusterPoisoned(RuntimeError):
+    """A previous task failed or timed out, leaving the lock-step mesh in
+    an undefined state; the cluster refuses further submits (the daemons
+    may already have exited -- a blind retry would hang until timeout).
+    Tear the cluster down and spawn a fresh one."""
 
 
 @dataclasses.dataclass
@@ -86,7 +118,8 @@ def _totals_delta(after: dict, before: dict) -> dict:
             for p in after}
 
 
-def _run_task(task, *, ring, transport, base, bank, out_q, rank):
+def _run_task(task, *, ring, transport, base, bank, out_q, rank,
+              prep_wait: float = DEFAULT_TIMEOUT):
     from .. import FourPartyRuntime
 
     t_before = base.totals()
@@ -98,13 +131,22 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank):
     if task.get("prep") == "bank":
         from ...offline.store import OnlinePrep
         if bank is None:
-            raise RuntimeError("task wants prep='bank' but the daemon "
-                               "loaded no PrepBank (prep_path unset)")
-        if task.get("prep_session") is not None:
+            raise RuntimeError("task wants prep='bank' but the daemon has "
+                               "no PrepBank (load one at startup with "
+                               "prep_path= or stream one with "
+                               "live_prep=True)")
+        session = task.get("prep_session")
+        if getattr(bank, "live", False):
+            # live streaming: the session may not have arrived yet --
+            # block until the dealer's watermark passes it (a dead dealer
+            # raises its traceback here instead of timing out)
+            bank.wait_for(session if session is not None
+                          else bank.next_session, timeout=prep_wait)
+        if session is not None:
             # step-indexed consumption (training): session == step, so a
             # resumed run skips spent sessions and a retried step raises
             # PrepReplayError instead of silently eating wrong material
-            bank.seek(task["prep_session"])
+            bank.seek(session)
         store = bank.next()
         store.party = rank              # attribute store errors to P{rank}
         prep = OnlinePrep(store)
@@ -140,7 +182,37 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank):
     ))
 
 
-def _daemon_main(rank, endpoints, cfg, task_q, out_q):
+def _ctrl_loop(ctrl_q, bank, rank):
+    """Daemon-side control thread: drain the per-rank control queue into
+    the live bank.  Prep appends may block on the bank's bounded
+    look-ahead (that is the backpressure propagating to the dealer).  Any
+    failure here (a queue corrupted by a dealer killed mid-put, an
+    out-of-order stream) poisons the bank, so a waiting task raises the
+    cause instead of timing out."""
+    import pickle
+    try:
+        while True:
+            item = ctrl_q.get()
+            if item is None:
+                return
+            kind = item[0]
+            if kind == "prep":
+                _, session, blob = item
+                store = pickle.loads(blob)
+                store.party = rank      # attribute store errors to P{rank}
+                bank.append(session, store)
+            elif kind == "dealer_error":
+                bank.fail(item[1])
+                return
+            elif kind == "dealer_done":
+                bank.finish(item[1])
+                return
+    except BaseException:
+        bank.fail(f"P{rank} control thread died:\n"
+                  f"{traceback.format_exc()}")
+
+
+def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
     try:
         from .model import NetModelTransport
         from .socket_transport import SocketTransport
@@ -156,17 +228,28 @@ def _daemon_main(rank, endpoints, cfg, task_q, out_q):
         if cfg["prep_path"] is not None:
             from ...offline.store import PrepBank
             bank = PrepBank.load(cfg["prep_path"])
+        elif cfg["live_prep"]:
+            from ...offline.live import LivePrepBank
+            bank = LivePrepBank(ahead=cfg["live_ahead"])
+            threading.Thread(target=_ctrl_loop, args=(ctrl_q, bank, rank),
+                             daemon=True, name=f"ctrl-P{rank}").start()
         out_q.put(("ready", rank, len(bank) if bank is not None else 0))
         while True:
             task = task_q.get()
             if task is None:
                 break
             try:
+                # the prep wait must expire BEFORE the driver's _collect
+                # clock (which started at submit): otherwise a merely-slow
+                # dealer surfaces as the generic daemons-timed-out error
+                # instead of wait_for's watermark-naming one
+                budget = task.get("timeout") or cfg["timeout"]
                 _run_task(task, ring=cfg["ring"], transport=transport,
-                          base=base, bank=bank, out_q=out_q, rank=rank)
+                          base=base, bank=bank, out_q=out_q, rank=rank,
+                          prep_wait=max(1.0, 0.75 * budget))
             except BaseException:
                 # a failed task leaves the lock-step mesh undefined: report
-                # and stop serving (the driver tears the cluster down)
+                # and stop serving (the driver poisons the cluster)
                 out_q.put(("error", rank, traceback.format_exc()))
                 break
         base.close()
@@ -179,25 +262,40 @@ class PartyCluster:
 
     def __init__(self, *, ring: Ring = RING64,
                  timeout: float = DEFAULT_TIMEOUT, tampers=(),
-                 net_model=None, prep_path: str | None = None):
+                 net_model=None, prep_path: str | None = None,
+                 live_prep: bool = False,
+                 live_ahead: int = DEFAULT_LIVE_AHEAD):
+        if live_prep and prep_path is not None:
+            raise ValueError(
+                "live_prep streams into an initially empty bank; "
+                "prep_path loads a frozen one at startup -- pick one")
         ctx = mp.get_context("spawn")
         endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
         cfg = {
             "ring": ring, "timeout": timeout, "tampers": list(tampers),
             "net_model": net_model, "prep_path": prep_path,
+            "live_prep": live_prep, "live_ahead": live_ahead,
         }
         self.ring = ring
         self.timeout = timeout
         self.net_model = net_model
+        self.live_prep = live_prep
         self._task_qs = [ctx.Queue() for _ in range(4)]
+        # per-rank control queues (live prep streaming): bounded, so a
+        # dealer running ahead of consumption blocks instead of buffering
+        # unbounded sessions in flight
+        self.ctrl_queues = ([ctx.Queue(maxsize=2 * live_ahead)
+                             for _ in range(4)] if live_prep else None)
         self._out_q = ctx.Queue()
         self._procs = [
             ctx.Process(target=_daemon_main,
                         args=(rank, endpoints, cfg, self._task_qs[rank],
+                              self.ctrl_queues[rank] if live_prep else None,
                               self._out_q),
                         daemon=True)
             for rank in range(4)]
         self._closed = False
+        self._poisoned: str | None = None
         self.tasks_run = 0
         self._task_id = 0
         for p in self._procs:
@@ -266,35 +364,72 @@ class PartyCluster:
         executes online-only (offline sends forbidden on the wire);
         ``prep_session`` pins the session index (step-indexed training
         prep: session k is step k's material, so resumed runs seek past
-        spent sessions and replays fail loudly)."""
+        spent sessions and replays fail loudly).
+
+        A task failure or timeout POISONS the cluster: this submit raises
+        with the daemons' tracebacks, and every later submit raises
+        ``ClusterPoisoned`` immediately."""
         assert not self._closed, "cluster is closed"
+        if self._poisoned is not None:
+            raise ClusterPoisoned(
+                "cluster poisoned by an earlier task failure -- the "
+                "lock-step mesh is undefined and the daemons have stopped "
+                "serving; tear this cluster down and spawn a fresh one. "
+                f"Original failure:\n{self._poisoned}")
         self._task_id += 1
         task = {"program": program, "seed": seed, "prep": prep,
                 "prep_session": prep_session,
                 "runtime_kwargs": dict(runtime_kwargs or {}),
+                "timeout": timeout or self.timeout,
                 "id": self._task_id}
         for q in self._task_qs:
             q.put(task)
-        results = self._collect(lambda item: False,
-                                timeout or self.timeout)
+        try:
+            results = self._collect(lambda item: False,
+                                    timeout or self.timeout)
+        except BaseException as e:
+            self._poisoned = f"{type(e).__name__}: {e}"
+            raise
         self.tasks_run += 1
         return sorted(results, key=lambda r: r.rank)
 
     # -- lifecycle ---------------------------------------------------------
+    @property
+    def poisoned(self) -> str | None:
+        """The first-failure summary if a task poisoned the cluster."""
+        return self._poisoned
+
     def close(self) -> None:
         if self._closed:
             return
         self._closed = True
         for q in self._task_qs:
             try:
-                q.put(None)
-            except Exception:
-                pass
+                q.put_nowait(None)
+            except (OSError, ValueError, _queue.Full) as e:
+                # a daemon that cannot take its stop sentinel will be
+                # terminated below -- say so instead of masking it
+                _log.warning("cluster close: could not signal a daemon to "
+                             "stop (%s: %s); it will be terminated",
+                             type(e).__name__, e)
+        for q in self.ctrl_queues or ():
+            try:
+                q.put_nowait(None)
+            except _queue.Full:
+                pass        # backpressured control stream; daemons exit via
+                            # their task queues and the threads die with them
+            except (OSError, ValueError) as e:
+                _log.warning("cluster close: control queue teardown failed "
+                             "(%s: %s)", type(e).__name__, e)
         for p in self._procs:
             p.join(timeout=5.0)
-        for p in self._procs:
+        for rank, p in enumerate(self._procs):
             if p.is_alive():
+                _log.warning("party daemon P%d did not exit within 5s "
+                             "(hung task or blocked join); terminating it",
+                             rank)
                 p.terminate()
+                p.join(timeout=2.0)
 
     def __enter__(self):
         return self

@@ -41,6 +41,8 @@ higher ranks.  A one-byte hello carries the dialer's rank.
 """
 from __future__ import annotations
 
+import errno
+import logging
 import queue
 import socket
 import threading
@@ -53,6 +55,13 @@ from ..transport import MeasuredTransport
 from .framing import FramingError, recv_frame, send_frames
 
 PARTIES = (0, 1, 2, 3)
+
+_log = logging.getLogger(__name__)
+
+# teardown errnos that just mean "the peer hung up first" -- expected in
+# any shutdown race and safe to stay quiet about; anything else is logged
+_QUIET_SHUTDOWN_ERRNOS = (errno.ENOTCONN, errno.EBADF, errno.EPIPE,
+                          errno.ECONNRESET)
 
 
 class TransportTimeout(RuntimeError):
@@ -200,13 +209,20 @@ class SocketTransport(MeasuredTransport):
         self._closed = True
         try:
             self._flush_out()
-        except OSError:
-            pass
-        for sock in self._socks.values():
+        except OSError as e:
+            # unflushed frames are real data loss for a peer still mid-
+            # round -- surface it instead of masking a hung/odd teardown
+            _log.warning("P%d close: could not flush buffered frames "
+                         "(%s: %s); peers may see a truncated stream",
+                         self.rank, type(e).__name__, e)
+        for peer, sock in self._socks.items():
             try:
                 sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
+            except OSError as e:
+                if e.errno not in _QUIET_SHUTDOWN_ERRNOS:
+                    _log.warning("P%d close: shutdown of link to P%d "
+                                 "failed (%s: %s)", self.rank, peer,
+                                 type(e).__name__, e)
             sock.close()
 
     def __enter__(self):

@@ -26,10 +26,15 @@ Offline/online split (repro.offline):
     streams one PrepStore per batch into a bounded queue; each batch then
     executes **online-only** (zero offline bytes, transport-enforced), so
     the reported online wall-clock is a true serving latency;
-  * ``serve_over_sockets(prep_ahead=True)`` -- deals one session per
-    batch up front, serializes the bank to disk, and the party daemons
-    load it ONCE at startup; every batch task runs online-only over the
-    real TCP mesh.
+  * ``serve_over_sockets(prep="ahead")`` (legacy ``prep_ahead=True``) --
+    deals one session per batch up front, serializes the bank to disk,
+    and the party daemons load it ONCE at startup; every batch task runs
+    online-only over the real TCP mesh;
+  * ``serve_over_sockets(prep="live")`` -- no whole-stream dealing: a
+    ``DealerDaemon`` streams batch k's session into the RUNNING daemons
+    over the cluster control channel while batch k-1 is served, so
+    serving starts immediately, the stream could be open-ended, and the
+    mesh still carries zero offline bytes (transport-enforced).
 """
 from __future__ import annotations
 
@@ -226,11 +231,19 @@ def _zero_deal_program(predict_fn, X, rt):
     predict_fn(rt, np.zeros_like(X))
 
 
+def _serve_program_for_step(step, *, predict_fn, batches):
+    """Picklable ``step -> deal program`` for the live dealer daemon:
+    session k is batch k's offline material (shapes only)."""
+    return functools.partial(_zero_deal_program, predict_fn, batches[step])
+
+
 def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
                        ring=RING64, seed: int = 0, net_model=None,
                        timeout: float = 300.0, cluster=None,
+                       prep: str | None = None,
                        prep_ahead: bool = False,
-                       prep_dir: str | None = None):
+                       prep_dir: str | None = None,
+                       live_ahead: int = 2):
     """Serve a query stream across four party processes over TCP.
 
     ``predict_fn(rt, X_batch)`` has the same contract as
@@ -243,14 +256,32 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
 
     Batches are submitted as tasks to a ``PartyCluster`` of **long-lived
     daemons** (mesh built once, reused across batches); pass ``cluster=``
-    to reuse one you manage across multiple streams.  With
-    ``prep_ahead=True`` the offline phase for every batch is dealt up
-    front (``repro.offline``), serialized to ``prep_dir`` (default: a
-    temp dir), loaded by the daemons once at startup, and each batch task
-    runs **online-only** -- the daemons' transports forbid offline-phase
-    sends, and the report's totals show zero offline bytes.
+    to reuse one you manage across multiple streams.
+
+    Prep modes (``prep=``):
+
+      * ``"ahead"`` (legacy spelling ``prep_ahead=True``) -- the offline
+        phase for EVERY batch is dealt up front (``repro.offline``),
+        serialized to ``prep_dir`` (default: a temp dir), loaded by the
+        daemons once at startup, and each batch task runs **online-only**
+        -- the daemons' transports forbid offline-phase sends, and the
+        report's totals show zero offline bytes;
+      * ``"live"`` -- no whole-stream dealing: the daemons start with an
+        EMPTY live bank and a ``DealerDaemon`` streams batch k's session
+        over the control channel while batch k-1 is served, bounded by
+        ``live_ahead`` look-ahead.  Same online-only/zero-offline-bytes
+        contract on the mesh, but serving starts immediately and the
+        stream could be open-ended.
     """
     from ..runtime.net.cluster import PartyCluster
+
+    if prep_ahead:
+        if prep not in (None, "ahead"):
+            raise ValueError(
+                f"prep_ahead=True (legacy spelling of prep='ahead') "
+                f"conflicts with prep={prep!r}")
+        prep = "ahead"
+    assert prep in (None, "ahead", "live"), prep
 
     queries = [np.asarray(q) for q in queries]
     batches = [np.stack(queries[i:i + batch_size])
@@ -266,12 +297,12 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
             raise ValueError(
                 "net_model mismatch: pass the model to PartyCluster (the "
                 "daemons integrate the clock), not to serve_over_sockets")
+    if prep is not None and not own_cluster:
+        raise ValueError(f"prep={prep!r} needs to provision its own "
+                         "cluster (daemons load or stream the bank)")
     prep_path = None
     deal_wall = 0.0
-    if prep_ahead:
-        if not own_cluster:
-            raise ValueError("prep_ahead needs to provision its own "
-                             "cluster (daemons load the bank at startup)")
+    if prep == "ahead":
         from ..offline import deal_sessions
         t0 = time.perf_counter()
         bank, _ = deal_sessions(
@@ -283,8 +314,23 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
         deal_wall = time.perf_counter() - t0
     if own_cluster:
         cluster = PartyCluster(ring=ring, timeout=timeout,
-                               net_model=net_model, prep_path=prep_path)
+                               net_model=net_model, prep_path=prep_path,
+                               live_prep=(prep == "live"),
+                               live_ahead=live_ahead)
+    dealer = None
     try:
+        if prep == "live":
+            from ..offline.live import DealerDaemon
+            # the dealer is data-independent: ship SHAPES (zeros), not the
+            # query stream, into the dealer process
+            dealer = DealerDaemon(
+                cluster,
+                functools.partial(_serve_program_for_step,
+                                  predict_fn=predict_fn,
+                                  batches=[np.zeros_like(X)
+                                           for X in batches]),
+                ring=ring, base_seed=seed, ahead=live_ahead,
+                total=len(batches))
         preds: list = []
         totals = {p: {"rounds": 0, "bits": 0}
                   for p in ("offline", "online")}
@@ -296,7 +342,8 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
             results = cluster.submit(
                 functools.partial(_serve_batch, predict_fn=predict_fn,
                                   X=X),
-                seed=seed + k, prep="bank" if prep_ahead else None,
+                seed=seed + k, prep="bank" if prep is not None else None,
+                prep_session=k if prep is not None else None,
                 timeout=timeout)
             ref = results[0]
             assert all(r.totals == ref.totals for r in results), \
@@ -324,14 +371,20 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
             "party_wall_s": wall,
             "cluster_tasks": cluster.tasks_run,
         }
-        if prep_ahead:
+        if prep is not None:
             report["online_only"] = True
+            report["prep"] = prep
+            assert totals["offline"]["bits"] == 0, totals
+        if prep == "ahead":
             report["offline_deal_s"] = deal_wall
             report["prep_path"] = prep_path
-            assert totals["offline"]["bits"] == 0, totals
+        if prep == "live":
+            report["live_sessions_streamed"] = dealer.dealt
         if modeled is not None and net_model is not None:
             report[f"modeled_{net_model.name}_s"] = modeled
         return preds, report
     finally:
+        if dealer is not None:
+            dealer.close()
         if own_cluster:
             cluster.close()

@@ -12,7 +12,12 @@ One engine-agnostic training step (the paper's Section VI workloads via
   * ``ClusterSGD``      -- each step one ``PartyCluster`` task across the
                            four socket daemons, optionally consuming
                            step-indexed PrepBank sessions (prep-ahead:
-                           zero offline bytes on the mesh, enforced).
+                           zero offline bytes on the mesh, enforced) --
+                           or, with ``prep="live"`` +
+                           ``attach_live_dealer``, sessions STREAMED into
+                           the running daemons over the control channel,
+                           so training is unbounded and the bank starts
+                           empty.
 
 Determinism contract: step t always runs from
 ``trainer.seed_for_step(base_seed, t)``; the dealer's session t uses the
@@ -216,6 +221,37 @@ def _cluster_step_program(rt, rank, task=None, params=None, batch=None):
     return {"params": new, "loss": loss, "abort": bool(abort)}
 
 
+def _live_deal_program(rt, task=None, params=None, batch=None):
+    """The dealer-daemon twin of ``_cluster_step_program``: same protocol
+    trace from zeroed inputs (the offline half is data-independent)."""
+    task.run(RuntimeEngine(rt), params, batch)
+
+
+def _live_program_for_step(step, *, task, params, batch):
+    """Picklable ``step -> program`` for the ContinuousDealer inside the
+    dealer daemon (every step traces the same shapes)."""
+    return functools.partial(_live_deal_program, task=task, params=params,
+                             batch=batch)
+
+
+def attach_live_dealer(cluster, task: SGDTask, params: dict, batch: tuple,
+                       *, base_seed: int = 0, ahead: int = 2,
+                       total: int | None = None):
+    """Start a ``DealerDaemon`` streaming step-indexed prep sessions into
+    a LIVE cluster (built with ``live_prep=True``): session t is dealt
+    from ``seed_for_step(base_seed, t)`` -- the same seed ``ClusterSGD``
+    gives the online step t -- sliced per party, and shipped to daemon i
+    over control queue i while earlier steps run online.  ``total=None``
+    streams for as long as the training runs (open-ended).  Returns the
+    daemon handle (a context manager; close it when training ends)."""
+    from ..offline.live import DealerDaemon
+    zp, zb = zero_inputs(task, params, batch)
+    factory = functools.partial(_live_program_for_step, task=task,
+                                params=zp, batch=zb)
+    return DealerDaemon(cluster, factory, ring=cluster.ring,
+                        base_seed=base_seed, ahead=ahead, total=total)
+
+
 class ClusterSGD:
     """Trainer step_fn that drives a ``PartyCluster``: step t is one task
     across the four daemons, seeded ``seed_for_step(base_seed, t)`` so a
@@ -226,10 +262,24 @@ class ClusterSGD:
     session (the daemons seek to session t, so resumed runs skip spent
     sessions and a retried step raises PrepReplayError naming it) and run
     online-only on the mesh -- zero offline bytes, transport-enforced.
+
+    ``prep="live"`` is the same online-only consumption against a LIVE
+    bank: the cluster was built with ``live_prep=True`` and an
+    ``attach_live_dealer`` daemon streams session t's material over the
+    control channel while step t-1 runs online, so the bank may start
+    EMPTY and training is unbounded (no up-front ``deal_training_bank``).
+    A step whose session has not arrived yet blocks in the daemons until
+    the dealer catches up (or fails with the dealer's traceback).
     """
+
+    PREPPED = ("bank", "live")
 
     def __init__(self, cluster, task: SGDTask, *, base_seed: int = 0,
                  prep: str | None = None):
+        assert prep in (None, "bank", "live"), prep
+        if prep == "live" and not getattr(cluster, "live_prep", False):
+            raise ValueError("prep='live' needs a cluster built with "
+                             "PartyCluster(live_prep=True)")
         self.cluster = cluster
         self.task = task
         self.base_seed = base_seed
@@ -243,8 +293,8 @@ class ClusterSGD:
             batch=tuple(np.asarray(b) for b in batch))
         results = self.cluster.submit(
             program, seed=seed_for_step(self.base_seed, step),
-            prep=self.prep,
-            prep_session=step if self.prep == "bank" else None)
+            prep="bank" if self.prep in self.PREPPED else None,
+            prep_session=step if self.prep in self.PREPPED else None)
         ref = results[0].result
         for r in results[1:]:
             for k in ref["params"]:

@@ -1,0 +1,321 @@
+"""Live prep streaming into running party daemons.
+
+The acceptance contract of the live subsystem:
+
+  * a 4-process ``ClusterSGD`` run whose PrepBank starts EMPTY trains N
+    steps bit-identically to the joint simulation, with ZERO offline
+    bytes on the party mesh (transport-enforced) and all prep arriving
+    via the control channel while earlier steps run online;
+  * dealer death mid-stream fails the blocked training step loudly with
+    the dealer's traceback (not a generic timeout), and replaying a
+    streamed session raises ``PrepReplayError`` with session/step
+    attribution;
+  * a failed task POISONS the cluster: later submits raise
+    ``ClusterPoisoned`` immediately instead of hanging until timeout;
+  * ``PrepBank`` frees consumed sessions (tombstones) so long runs have
+    bounded residency, and seeking a live bank past the dealer's
+    watermark names the watermark.
+
+Cluster spawns are expensive (a JAX import per process), so the live
+training run is module-scoped and shared across assertions.
+"""
+import functools
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.offline import (ContinuousDealer, DealerDaemon, LivePrepBank,
+                           PrepBank, PrepError, PrepMissingError,
+                           PrepReplayError, PrepStore)
+from repro.runtime.net.cluster import ClusterPoisoned, PartyCluster
+from repro.train import data as D
+from repro.train import secure_sgd as SGD
+
+SEED = 17
+STEPS = 3
+BATCH = 8
+
+_task = SGD.logreg_task(features=6, lr=0.5)
+_data = D.RegressionData(features=6, n=256, seed=1, logistic=True)
+_params0 = _task.init_params(seed=0)
+
+
+def _joint_reference():
+    p, out = dict(_params0), []
+    for step in range(STEPS):
+        p, loss, _ = SGD.run_step(_task, p, _data.batch(step, BATCH),
+                                  step=step, base_seed=SEED, world="joint")
+        out.append((dict(p), loss))
+    return out
+
+
+@pytest.fixture(scope="module")
+def live_run():
+    """One live cluster end to end: empty bank -> streamed training ->
+    replay attempt -> poisoned submit.  Returns everything the tests
+    assert on."""
+    out = {"steps": []}
+    with PartyCluster(live_prep=True, timeout=120) as cluster:
+        with SGD.attach_live_dealer(cluster, _task, _params0,
+                                    _data.batch(0, BATCH), base_seed=SEED,
+                                    ahead=2, total=STEPS) as dealer:
+            sgd = SGD.ClusterSGD(cluster, _task, base_seed=SEED,
+                                 prep="live")
+            p = dict(_params0)
+            for step in range(STEPS):
+                p, loss, abort = sgd.step_fn(p, step,
+                                             *_data.batch(step, BATCH))
+                out["steps"].append((dict(p), loss, abort))
+            out["offline_bits_on_mesh"] = sgd.offline_bits_on_mesh()
+            out["results"] = sgd.results
+            out["dealer_dealt"] = dealer.dealt
+
+            # a retried (replayed) streamed step must fail loudly with
+            # session/step attribution...
+            with pytest.raises(RuntimeError) as replay:
+                sgd.step_fn(p, 1, *_data.batch(1, BATCH))
+            out["replay_msg"] = str(replay.value)
+
+            # ...which poisons the cluster: the NEXT submit raises a
+            # named error immediately, not after the full timeout
+            t0 = time.monotonic()
+            with pytest.raises(ClusterPoisoned) as poisoned:
+                sgd.step_fn(p, 2, *_data.batch(2, BATCH))
+            out["poisoned_s"] = time.monotonic() - t0
+            out["poisoned_msg"] = str(poisoned.value)
+    return out
+
+
+class TestLiveStreamedTraining:
+    def test_empty_bank_trains_bit_identical_to_joint(self, live_run):
+        """The acceptance criterion: the bank starts empty, every step's
+        material arrives over the control channel, and the (params, loss)
+        trajectory is bit-identical to the joint simulation."""
+        ref = _joint_reference()
+        for step, (p, loss, abort) in enumerate(live_run["steps"]):
+            assert not abort
+            assert loss == ref[step][1], step
+            for k in p:
+                assert np.array_equal(p[k], ref[step][0][k]), (step, k)
+        assert live_run["dealer_dealt"] == STEPS
+
+    def test_zero_offline_bytes_on_mesh(self, live_run):
+        """All prep crossed the control channel; the TCP mesh carried
+        ZERO offline bits (transport-enforced during each task)."""
+        assert live_run["offline_bits_on_mesh"] == 0
+        for results in live_run["results"]:
+            for r in results:
+                assert r.totals["offline"]["bits"] == 0, f"P{r.rank}"
+                assert r.totals["online"]["bits"] > 0, f"P{r.rank}"
+
+    def test_replay_of_streamed_session_names_session_and_party(
+            self, live_run):
+        msg = live_run["replay_msg"]
+        assert "already consumed" in msg
+        assert "session 1" in msg          # which session was replayed
+        assert "step 1" in msg             # streamed stores carry step meta
+
+    def test_failed_task_poisons_cluster(self, live_run):
+        """The satellite bugfix: after a task failure the next submit
+        raises ClusterPoisoned immediately (the daemons already exited),
+        instead of hanging until the full timeout."""
+        assert live_run["poisoned_s"] < 5.0, live_run["poisoned_s"]
+        assert "already consumed" in live_run["poisoned_msg"]
+
+
+# ---------------------------------------------------------------------------
+# Dealer death mid-stream: loud, attributed failure (its own cluster).
+# ---------------------------------------------------------------------------
+def _boom_program(rt):
+    raise ValueError("boom: dealer died mid-stream")
+
+
+def _flaky_factory(step, *, task, params, batch):
+    """Deals step 0 fine, explodes on step 1 -- the dealer's death
+    happens while the cluster is mid-training."""
+    if step >= 1:
+        return _boom_program
+    return functools.partial(SGD._live_deal_program, task=task,
+                             params=params, batch=batch)
+
+
+class TestDealerDeathMidStream:
+    def test_blocked_step_fails_with_dealer_traceback(self):
+        zp, zb = SGD.zero_inputs(_task, _params0, _data.batch(0, BATCH))
+        with PartyCluster(live_prep=True, timeout=60) as cluster:
+            with DealerDaemon(
+                    cluster,
+                    functools.partial(_flaky_factory, task=_task,
+                                      params=zp, batch=zb),
+                    ring=cluster.ring, base_seed=SEED, ahead=2,
+                    total=STEPS) as dealer:
+                sgd = SGD.ClusterSGD(cluster, _task, base_seed=SEED,
+                                     prep="live")
+                p, loss, abort = sgd.step_fn(dict(_params0), 0,
+                                             *_data.batch(0, BATCH))
+                assert not abort           # step 0's session streamed fine
+
+                t0 = time.monotonic()
+                with pytest.raises(RuntimeError) as ei:
+                    sgd.step_fn(p, 1, *_data.batch(1, BATCH))
+                took = time.monotonic() - t0
+                msg = str(ei.value)
+                # the DEALER's traceback, not a generic transport timeout
+                assert "boom: dealer died mid-stream" in msg
+                assert "will never arrive" in msg
+                assert took < 30.0, f"{took}s -- smells like a timeout"
+                assert dealer.failed is not None
+                # and the cluster is poisoned for good measure
+                with pytest.raises(ClusterPoisoned):
+                    sgd.step_fn(p, 2, *_data.batch(2, BATCH))
+
+
+# ---------------------------------------------------------------------------
+# Live serving: batch k's session streams while batch k-1 is served.
+# ---------------------------------------------------------------------------
+_W = np.random.RandomState(0).randn(4, 3) * 0.4
+
+
+def _serve_predict(rt, Xb):
+    from repro.core.ring import RING64
+    from repro.runtime import activations as RA
+    from repro.runtime import protocols as RT
+    xs = RT.share(rt, RING64.encode(Xb))
+    w = RT.share(rt, RING64.encode(_W))
+    out = RA.relu(rt, RT.matmul_tr(rt, xs, w))
+    return RING64.decode(RT.reconstruct(rt, out)[1])
+
+
+class TestServeLive:
+    def test_query_stream_served_with_streamed_prep(self):
+        from repro.serve.party_server import serve_over_sockets
+        queries = np.random.RandomState(1).randn(6, 4)
+        preds, report = serve_over_sockets(_serve_predict, queries,
+                                           batch_size=4, seed=3,
+                                           timeout=120, prep="live")
+        assert len(preds) == len(queries)
+        assert report["batches"] == 2 and not report["aborted"]
+        assert report["online_only"] and report["prep"] == "live"
+        assert report["totals"]["offline"]["bits"] == 0  # streamed, not sent
+        assert report["live_sessions_streamed"] == 2
+        ref = np.maximum(queries @ _W, 0.0)
+        got = np.stack([np.asarray(p) for p in preds])
+        assert np.abs(got - ref).max() < 0.02
+
+
+# ---------------------------------------------------------------------------
+# LivePrepBank semantics (no process spawns).
+# ---------------------------------------------------------------------------
+class TestLivePrepBank:
+    def _store(self, step):
+        s = PrepStore(meta={"step": step})
+        s.put("mult#0", "mult", [{"lam": np.zeros(2)}] * 4)
+        return s
+
+    def test_seek_past_watermark_names_watermark(self):
+        bank = LivePrepBank(ahead=2)
+        bank.append(0, self._store(0))
+        with pytest.raises(PrepMissingError) as ei:
+            bank.seek(2)
+        msg = str(ei.value)
+        assert "not dealt yet" in msg
+        assert "dealer watermark at 1" in msg
+
+    def test_append_blocks_at_bounded_lookahead(self):
+        bank = LivePrepBank(ahead=2)
+        bank.append(0, self._store(0))
+        bank.append(1, self._store(1))
+        done = threading.Event()
+
+        def feeder():
+            bank.append(2, self._store(2))   # window full: must block
+            done.set()
+
+        t = threading.Thread(target=feeder, daemon=True)
+        t.start()
+        assert not done.wait(timeout=0.5), "append ignored the look-ahead"
+        bank.next()                          # consume one -> room opens
+        assert done.wait(timeout=10.0)
+        t.join(timeout=10.0)
+        assert bank.watermark == 3
+
+    def test_out_of_order_append_rejected(self):
+        bank = LivePrepBank(ahead=4)
+        with pytest.raises(PrepError, match="out of order"):
+            bank.append(3, self._store(3))
+
+    def test_wait_for_raises_dealer_failure_not_timeout(self):
+        bank = LivePrepBank(ahead=2)
+        bank.fail("TracebackFromTheDealer: kaboom")
+        t0 = time.monotonic()
+        with pytest.raises(PrepError, match="kaboom"):
+            bank.wait_for(0, timeout=60.0)
+        assert time.monotonic() - t0 < 5.0
+
+    def test_wait_for_after_clean_finish_is_named(self):
+        bank = LivePrepBank(ahead=2)
+        bank.append(0, self._store(0))
+        bank.finish(1)
+        with pytest.raises(PrepMissingError, match="finished after 1"):
+            bank.wait_for(1, timeout=60.0)
+
+
+# ---------------------------------------------------------------------------
+# PrepBank bounded residency (the memory-leak satellite).
+# ---------------------------------------------------------------------------
+def _tiny_program(rt):
+    from repro.core.ring import RING64
+    from repro.runtime import protocols as RT
+    xs = RT.share(rt, RING64.encode(np.ones(3)))
+    RT.mult_tr(rt, xs, xs)
+
+
+class TestBoundedResidency:
+    def test_consumed_sessions_are_tombstoned(self):
+        bank = PrepBank()
+        for k in range(8):
+            s = PrepStore(meta={"session": k})
+            s.put("t#0", "mult", [{"lam": np.zeros(4)}] * 4)
+            bank.add(s)
+        for _ in range(6):
+            bank.next()
+        assert len(bank) == 8 and bank.sessions_left == 2
+        assert bank.resident() == 2        # consumed stores were freed
+        with pytest.raises(PrepReplayError, match="already consumed"):
+            bank.seek(3)                   # attribution survives freeing
+
+    def test_forward_seek_frees_skipped_sessions(self):
+        bank = PrepBank()
+        for k in range(5):
+            s = PrepStore(meta={"session": k})
+            s.put("t#0", "mult", [{"lam": np.zeros(4)}] * 4)
+            bank.add(s)
+        bank.seek(4)                       # skip 0..3: never reachable again
+        assert bank.resident() == 1
+
+    def test_long_continuous_run_has_bounded_residency(self):
+        """A ContinuousDealer-driven run of many steps keeps at most
+        ~ahead live stores in the bank at any point -- the long-training
+        memory contract."""
+        ahead, steps = 2, 12
+        peak = 0
+        with ContinuousDealer(lambda s: _tiny_program, base_seed=0,
+                              ahead=ahead, total=steps) as dealer:
+            for _ in range(steps):
+                dealer.next_store(timeout=60.0)
+                peak = max(peak, dealer.bank.resident())
+        assert len(dealer.bank) == steps
+        # resident never exceeds the look-ahead window (+1 for the store
+        # dealt between consumption and the residency probe)
+        assert peak <= ahead + 1, peak
+
+    def test_partially_consumed_bank_refuses_save(self, tmp_path):
+        bank = PrepBank()
+        s = PrepStore(meta={"session": 0})
+        s.put("t#0", "mult", [{"lam": np.zeros(4)}] * 4)
+        bank.add(s)
+        bank.next()
+        with pytest.raises(PrepError, match="consumed"):
+            bank.save(str(tmp_path / "bank"))
