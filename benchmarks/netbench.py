@@ -39,6 +39,16 @@ same three-way harness, so ``lan/wan_online_only_ms`` is the measured
 per-step online time of distributed training with prep dealt ahead, with
 the same exact-split and bit-identity assertions vs the interleaved step.
 
+Every record carries a **compute-vs-wire breakdown**: measured
+``local_compute_offline_ms`` / ``local_compute_online_ms`` (the wall-clock
+of the party-local math in the phase-isolated dealer / online-only runs)
+printed next to the modeled LAN/WAN wire times, plus the
+``kernel_backend`` that produced it.  The MLP-inference and both
+training-step blocks run TWICE -- kernel_backend="jnp" and "pallas"
+(docs/KERNELS.md) -- with outputs and wire costs asserted bit-identical,
+so the two breakdowns isolate what the fused kernels change: local
+compute only, never bytes or rounds.
+
 One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 ``--out`` (default netbench.json) for CI artifact upload.
 
@@ -200,10 +210,17 @@ def _stacked():
     return lan_tp, wan_tp
 
 
-def run_block(name, fn, seed=0) -> dict:
+def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
+    """Returns (rec, interleaved_out).  ``kernel_backend`` routes every
+    party's local compute ("jnp" or "pallas" -- bit-identical, so all the
+    exact-split/wire assertions hold unchanged in both modes); the rec's
+    ``local_compute_{offline,online}_ms`` are the measured per-phase local
+    compute wall-clock of the split runs, printed next to the modeled
+    LAN/WAN wire times -- the compute-vs-wire breakdown."""
     # ---- interleaved end-to-end ------------------------------------------
     lan_tp, wan_tp = _stacked()
-    rt = FourPartyRuntime(RING64, seed=seed, transport=wan_tp)
+    rt = FourPartyRuntime(RING64, seed=seed, transport=wan_tp,
+                          kernel_backend=kernel_backend)
     t0 = time.perf_counter()
     interleaved_out = fn(rt)
     compute_s = time.perf_counter() - t0
@@ -212,6 +229,7 @@ def run_block(name, fn, seed=0) -> dict:
     rec = {
         "bench": "netbench",
         "block": name,
+        "kernel_backend": kernel_backend,
         "offline_rounds": totals["offline"]["rounds"],
         "offline_bits": totals["offline"]["bits"],
         "online_rounds": on_r,
@@ -229,10 +247,13 @@ def run_block(name, fn, seed=0) -> dict:
     assert not rec["aborted"], f"{name}: honest run aborted"
 
     # ---- offline/online split: dealer, then the online-only executor -----
+    rt_kw = {"kernel_backend": kernel_backend}
     lan_d, wan_d = _stacked()
-    store, drep = deal(fn, ring=RING64, seed=seed, transport=wan_d)
+    store, drep = deal(fn, ring=RING64, seed=seed, transport=wan_d,
+                       runtime_kwargs=rt_kw)
     lan_o, wan_o = _stacked()
-    online_out, orep = run_online(fn, store, ring=RING64, transport=wan_o)
+    online_out, orep = run_online(fn, store, ring=RING64, transport=wan_o,
+                                  runtime_kwargs=rt_kw)
 
     # the split must be exact: same online wire cost, zero offline bytes,
     # and the same modeled online clock the interleaved run integrated
@@ -256,8 +277,12 @@ def run_block(name, fn, seed=0) -> dict:
         "lan_online_only_ms": lan_o.seconds("online") * 1e3,
         "wan_online_only_ms": wan_o.seconds("online") * 1e3,
         "online_only_wall_s": orep.wall_s,
+        # compute-vs-wire: measured local compute per phase (the split
+        # runs isolate each phase), next to the modeled wire times above
+        "local_compute_offline_ms": drep.wall_s * 1e3,
+        "local_compute_online_ms": orep.wall_s * 1e3,
     })
-    return rec
+    return rec, interleaved_out
 
 
 def run_socket_block(timeout: float = 300.0) -> dict:
@@ -408,10 +433,26 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
     blocks = [] if train_only else _blocks(quick)
     if train or train_only:
         blocks += _train_blocks(quick)
+    # blocks that also run on the pallas kernel backend (ISSUE 6 contract:
+    # at least the logreg and NN blocks carry the compute-vs-wire
+    # breakdown for BOTH backends, with bit-identity asserted)
+    both = ("mlp_inference", "train_logreg", "train_nn")
     for name, fn in blocks:
-        rec = run_block(name, fn)
+        rec, jout = run_block(name, fn)
         records.append(rec)
         print("BENCH " + json.dumps(rec))
+        if not any(name.startswith(p) for p in both):
+            continue
+        prec, pout = run_block(name, fn, kernel_backend="pallas")
+        # the backends are bit-identical: same outputs, same wire costs
+        if jout is not None:
+            assert np.array_equal(np.asarray(jout), np.asarray(pout)), \
+                f"{name}: pallas backend output diverged from jnp"
+        for k in ("offline_rounds", "offline_bits", "online_rounds",
+                  "online_bits", "wan_online_s", "prep_entries"):
+            assert prec[k] == rec[k], (name, k, prec[k], rec[k])
+        records.append(prec)
+        print("BENCH " + json.dumps(prec))
     # the paper's WAN observation, asserted: activations round-dominated
     for rec in records:
         if "relu" in rec["block"] or "sigmoid" in rec["block"]:

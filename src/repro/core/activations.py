@@ -119,7 +119,7 @@ def _leading_one_factors(ctx: TridentContext, x: AShare, table):
 
     Returns [[F]] = sum_k onehot_k * table[k] for bit positions in the
     window; positions outside the window contribute 0 (configure the window
-    to cover the operating range -- see DESIGN.md).
+    to cover the operating range -- see docs/DESIGN_NOTES.md).
     """
     ring = ctx.ring
     xb = CV.a2b(ctx, x)
@@ -180,7 +180,7 @@ def smx_softmax(ctx: TridentContext, u: AShare, axis: int = -1,
                 division: str = "newton") -> AShare:
     """MPC-friendly softmax.  division = "garbled" follows the paper's NN
     benchmarks (division circuit in the garbled world); "newton" stays in
-    the arithmetic world (beyond-paper, DESIGN.md section 3)."""
+    the arithmetic world (beyond-paper, docs/DESIGN_NOTES.md)."""
     ring = ctx.ring
     r = relu(ctx, u)
     axis = axis % (len(u.shape)) if axis >= 0 else axis

@@ -11,7 +11,7 @@ masks and local "smear" broadcasts (shift-XOR doubling of disjoint bits is
 linear over GF(2), hence share-local): exactly log2(ell) levels with ell/2
 active positions * 2 ANDs each => ell ANDs per level, ell*(log ell + 1)
 total including the initial g = x AND y  (the paper's idealized PPA counts
-ell*log ell; the one-level delta is recorded in DESIGN.md).
+ell*log ell; the one-level delta is recorded in docs/DESIGN_NOTES.md).
 """
 from __future__ import annotations
 

@@ -39,13 +39,13 @@ class TridentContext:
     tally: CostTally
     mode: str = "fused"                 # fused | offline | online
     malicious_checks: bool = True
-    # Beyond-paper "component-collapsed" evaluation (DESIGN.md section 6):
+    # Beyond-paper "component-collapsed" evaluation (docs/DESIGN_NOTES.md):
     # the joint simulation computes reconstructed wire values from collapsed
     # lambda sums (4 matmuls per secure matmul instead of 16).  Identical
     # outputs and identical communication tallies; HLO-flop optimization only.
     collapse: bool = False
     # BitExt (Fig. 19) guard bits: |r| < 2^{ell-1-guard}; correctness holds
-    # for |v| < 2^guard.  See DESIGN.md section 3 (paper precondition).
+    # for |v| < 2^guard.  See docs/DESIGN_NOTES.md (paper precondition).
     bitext_guard: int = 24
     # "mul" = paper-faithful Fig. 19 (constant rounds, guarded r);
     # "ppa" = robust boolean-PPA msb (log ell rounds, no precondition).

@@ -3,8 +3,8 @@
 Implemented: A2B, B2A, Bit2A, BitInj, BitExt (both the faithful Fig. 19
 variant with its wraparound precondition, and the robust PPA variant used as
 the default by the ML layers).  The garbled-world endpoints (G2A/G2B/A2G/B2G)
-live in garbled.py since they are cost-modeled + value-emulated (DESIGN.md
-section 3).
+live in garbled.py since they are cost-modeled + value-emulated
+(docs/DESIGN_NOTES.md).
 
 Cost targets (validated in tests/test_costs.py):
     A2B    offline 1 rnd,  3l log l + 2l   online 1+log l rnd, 3l log l + l
@@ -233,7 +233,7 @@ def bit_extract(ctx: TridentContext, v: AShare,
 
     method "mul" (Fig. 19, paper-faithful): needs |r*v| < 2^{ell-1}; we bound
     |r| < 2^{ell-1-guard} so it is correct whenever |v| < 2^{guard}
-    (ctx.bitext_guard, DESIGN.md section 3).  3 online rounds, 5l+2 bits.
+    (ctx.bitext_guard, docs/DESIGN_NOTES.md).  3 online rounds, 5l+2 bits.
     method "ppa" (robust default): msb via boolean PPA on the two addends.
     """
     method = method or ctx.bitext_method

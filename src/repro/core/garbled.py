@@ -2,7 +2,7 @@
 
 The paper uses the 4PC-adapted MRZ garbling scheme (P1,P2,P3 garble, P0
 evaluates; free-XOR, half-gates, fixed-key AES).  Bit-level garbling has no
-TPU/MXU analogue (DESIGN.md section 3), and the paper itself only enters the
+TPU/MXU analogue (docs/DESIGN_NOTES.md), and the paper itself only enters the
 garbled world for division (softmax) and as conversion endpoints.  We
 therefore model the garbled world at two levels:
 

@@ -43,7 +43,7 @@ TRIDENT = {
 }
 
 # Implementation-exact formulas where our honest accounting differs from the
-# paper's idealized tables by a documented delta (DESIGN.md section 3):
+# paper's idealized tables by a documented delta (docs/DESIGN_NOTES.md):
 #  * A2B: the paper counts the PPA at l*log(l) ANDs / log(l) depth (ABY3's
 #    idealized convention).  A real Sklansky adder needs the initial
 #    generate level g = x AND y too: +l gates (= +3l bits offline & online,

@@ -109,7 +109,7 @@ def _gamma_offline(ctx: TridentContext, lx: jax.Array, ly: jax.Array,
     """
     op = (lambda a, b: a * b) if contract is None else contract
     if ctx.collapse:
-        # Beyond-paper "component-collapsed" evaluation (DESIGN.md 3/6): the
+        # Beyond-paper "component-collapsed" evaluation (docs/DESIGN_NOTES.md): the
         # joint simulation only needs gamma_total = lam_x_sum . lam_y_sum.
         lxs = lx[0] + lx[1] + lx[2]
         lys = ly[0] + ly[1] + ly[2]
@@ -287,7 +287,7 @@ def mult_tr(ctx: TridentContext, x: AShare, y: AShare,
     # Output lambda: [[r^t]] has m = 0 and <lam> = -<r^t> so that the share
     # evaluates to (z-r)^t + r^t.  (Fig. 18 prints <lam_{r^t}> = <r^t>; the
     # sign must be negative, as in the analogous Pi_Bit2A conversion --
-    # recorded as a paper typo in DESIGN.md.)
+    # recorded as a paper typo in docs/DESIGN_NOTES.md.)
     lam_out = -rt_shares
     if ctx.mode == "offline":
         m = jnp.zeros(out_shape, ring.dtype)

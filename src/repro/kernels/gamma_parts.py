@@ -1,0 +1,89 @@
+"""Fused elementwise gamma-piece / online-part kernels (both worlds).
+
+``mpc_matmul_fused.py`` fuses the *matmul*-shaped local work of a secure
+multiplication; this module is its elementwise twin for Pi_Mult / Pi_DotP
+and the XOR-world AND (the local math of one boolean AND / PPA level, the
+party-sliced form of ``ppa_msb.and_level``).
+
+A party's local work in one round of Pi_Mult (Fig. 4) is a handful of
+grouped bilinear monomials:
+
+  * offline, gamma piece j:   sum_t  lam_x[a_t] * lam_y[b_t]  + mask_j
+  * online,  part j:          -lam_x[j] m_y - m_x lam_y[j]    + (gamma_j
+                              + lam_z_j), plus m_x m_y for the m_z combine
+
+i.e. per piece/part: T in {2, 3} products, one grouped reduction, one
+constant.  XLA would dispatch each monomial as its own elementwise kernel
+(an HBM round-trip per term); these kernels read every operand once and
+write one output per group:
+
+    mult_terms(a, b, c, signs):  out[j] = sum_t signs[t] a[j,t] b[j,t] + c[j]
+    and_terms(a, b, c):          out[j] = XOR_t (a[j,t] & b[j,t]) ^ c[j]
+
+Layouts: a, b are (J, T, n) stacked operand groups (J = pieces/parts this
+party computes this round, batched into ONE launch), c is (J, n).  Ring
+arithmetic mod 2^ell is exact in the integer dtype, and XOR/AND are
+bitwise, so both kernels are bit-exact against the per-term jnp evaluation
+order -- the property the runtime's cross-backend identity contract rests
+on (docs/KERNELS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mult_terms_kernel(a_ref, b_ref, c_ref, out_ref, *, signs):
+    a = a_ref[...]                       # (J, T, bn) ring ints
+    b = b_ref[...]
+    acc = c_ref[...]                     # (J, bn)
+    for t, s in enumerate(signs):
+        term = a[:, t, :] * b[:, t, :]
+        acc = acc - term if s < 0 else acc + term
+    out_ref[...] = acc
+
+
+def _and_terms_kernel(a_ref, b_ref, c_ref, out_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = c_ref[...]
+    for t in range(a.shape[1]):
+        acc = acc ^ (a[:, t, :] & b[:, t, :])
+    out_ref[...] = acc
+
+
+def _grouped_call(kernel, a, b, c, bn: int, interpret: bool):
+    J, T, n = a.shape
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((J, T, bn), lambda i: (0, 0, i)),
+            pl.BlockSpec((J, T, bn), lambda i: (0, 0, i)),
+            pl.BlockSpec((J, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((J, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((J, n), a.dtype),
+        interpret=interpret,
+    )(a, b, c)
+
+
+@functools.partial(jax.jit, static_argnames=("signs", "bn", "interpret"))
+def mult_terms(a: jax.Array, b: jax.Array, c: jax.Array,
+               signs: tuple, bn: int = 512, interpret: bool = True):
+    """out[j] = sum_t signs[t] * a[j,t] * b[j,t] + c[j]  (mod 2^ell).
+    a, b: (J, T, n); c: (J, n); signs: static length-T tuple of +-1."""
+    kernel = functools.partial(_mult_terms_kernel, signs=signs)
+    return _grouped_call(kernel, a, b, c, bn, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def and_terms(a: jax.Array, b: jax.Array, c: jax.Array,
+              bn: int = 512, interpret: bool = True):
+    """out[j] = XOR_t (a[j,t] & b[j,t]) ^ c[j]  (bit-packed words)."""
+    return _grouped_call(_and_terms_kernel, a, b, c, bn, interpret)

@@ -3,7 +3,7 @@
 TPU MXUs multiply bf16/f32/int8, not u32/u64 -- XLA emulates wide-integer
 dot products on the VPU, orders of magnitude under the matmul roofline.
 This kernel adapts the CryptGPU/Piranha float-limb idea to the MXU
-(DESIGN.md section 3):
+(docs/KERNELS.md):
 
   * split each ring element into L 4-bit limbs (L = 8 for u32, 16 for u64)
     embedded exactly in f32;

@@ -1,7 +1,8 @@
 """Fused online-phase MPC matmul: all Pi_MatMulTr local products in one
 kernel pass over the operand tiles.
 
-The online phase of a secure matmul needs (collapse layout, DESIGN.md):
+The online phase of a secure matmul needs (collapsed layout,
+docs/KERNELS.md):
     mm    = m_x @ m_y
     cross = lam_x_sum @ m_y + m_x @ lam_y_sum
 i.e. 3 matmuls sharing 4 operands.  Done naively that is 6 operand-tile
@@ -28,6 +29,45 @@ import jax.numpy as jnp
 from .limb_matmul import limb_matmul
 
 
+def _ceil_to(d: int, blk: int) -> int:
+    """Smallest limb_matmul-legal extent >= d: d itself when a single block
+    covers it, else the next multiple of blk."""
+    return d if d <= blk else -(-d // blk) * blk
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    if x.shape == (rows, cols):
+        return x
+    return jnp.zeros((rows, cols), x.dtype).at[:x.shape[0],
+                                               :x.shape[1]].set(x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mpc_matmul_grid(xs: tuple, ys: tuple, interpret: bool = True):
+    """All-pairs ring matmuls in ONE limb pass: stack P left operands
+    (M, K) by rows and Q right operands (K, N) by columns,
+
+        [x_0 ; ... ; x_{P-1}] (P*M, K)  @  [y_0 | ... | y_{Q-1}] (K, Q*N)
+
+    and return the P x Q quadrant blocks [i][j] = x_i @ y_j mod 2^ell.
+    Each operand's limbs are expanded once and every pairing runs at MXU
+    rate -- this is how a party's whole same-round matmul workload (mm +
+    its two online parts, or a gamma piece's term sum) becomes a single
+    kernel launch.  Zero-padding to block-legal extents is exact for
+    matmul, so arbitrary shapes are accepted."""
+    P, Q = len(xs), len(ys)
+    M, K = xs[0].shape
+    N = ys[0].shape[1]
+    a = jnp.concatenate(xs, axis=0)                       # (P*M, K)
+    b = jnp.concatenate(ys, axis=1)                       # (K, Q*N)
+    rows, cols = _ceil_to(P * M, 64), _ceil_to(Q * N, 64)
+    kk = _ceil_to(K, 256)
+    p = limb_matmul(_pad2(a, rows, kk), _pad2(b, kk, cols),
+                    interpret=interpret)
+    return [[p[i * M:(i + 1) * M, j * N:(j + 1) * N] for j in range(Q)]
+            for i in range(P)]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def mpc_matmul_fused(mx: jax.Array, lx: jax.Array, my: jax.Array,
                      ly: jax.Array, interpret: bool = True):
@@ -36,16 +76,12 @@ def mpc_matmul_fused(mx: jax.Array, lx: jax.Array, my: jax.Array,
         mm         = mx @ my
         cross      = lam_x_sum @ my + mx @ lam_y_sum
         gamma_term = lam_x_sum @ lam_y_sum   (offline gamma, free here)
-    all mod 2^ell."""
+    all mod 2^ell.  The 2x2 special case of ``mpc_matmul_grid``."""
     dt = mx.dtype
     lxs = (lx[0] + lx[1] + lx[2]).astype(dt)
     lys = (ly[0] + ly[1] + ly[2]).astype(dt)
-    M, K = mx.shape
-    N = my.shape[1]
-    a = jnp.concatenate([mx, lxs], axis=0)          # (2M, K)
-    b = jnp.concatenate([my, lys], axis=1)          # (K, 2N)
-    p = limb_matmul(a, b, interpret=interpret)      # (2M, 2N)
-    mm = p[:M, :N]
-    cross = p[M:, :N] + p[:M, N:]
-    gamma = p[M:, N:]
+    p = mpc_matmul_grid((mx, lxs), (my, lys), interpret=interpret)
+    mm = p[0][0]
+    cross = p[1][0] + p[0][1]
+    gamma = p[1][1]
     return mm, cross.astype(dt), gamma

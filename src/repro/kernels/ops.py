@@ -3,6 +3,14 @@
 On this CPU container every kernel runs with interpret=True (the body
 executes as Python/XLA ops -- correctness-exact).  On TPU, pass
 interpret=False (or set TRIDENT_KERNELS_COMPILED=1).
+
+These wrappers also make the kernels total over arbitrary shapes: the raw
+kernels assert block-legal extents (docs/KERNELS.md), so the wrappers
+zero-pad up to the next legal extent and slice the result -- exact for
+ring matmul (padded rows/columns contribute zero products) and trivially
+exact for the elementwise / counter-indexed kernels (the pad region is
+discarded).  The runtime's pallas kernel backend
+(repro.runtime.kernel_backend) calls exclusively through here.
 """
 from __future__ import annotations
 
@@ -11,22 +19,64 @@ import os
 import jax
 import jax.numpy as jnp
 
+from .gamma_parts import and_terms as _and_terms, mult_terms as _mult_terms
 from .limb_matmul import limb_matmul as _limb_matmul
-from .mpc_matmul_fused import mpc_matmul_fused as _mpc_matmul_fused
+from .mpc_matmul_fused import (_ceil_to, _pad2,
+                               mpc_matmul_fused as _mpc_matmul_fused,
+                               mpc_matmul_grid as _mpc_matmul_grid)
 from .ppa_msb import and_level as _and_level, ppa_msb as _ppa_msb
 from .prf_mask import prf_mask as _prf_mask
 
 INTERPRET = os.environ.get("TRIDENT_KERNELS_COMPILED", "") != "1"
 
 
-def ring_matmul(a, b, **kw):
-    """A @ B mod 2^ell on the MXU (4-bit limb decomposition)."""
-    return _limb_matmul(a, b, interpret=INTERPRET, **kw)
+def ring_matmul(a, b, bm: int = 64, bn: int = 64, bk: int = 256, **kw):
+    """A @ B mod 2^ell on the MXU (4-bit limb decomposition).  Accepts
+    arbitrary 2-D shapes: operands are zero-padded to block-legal extents
+    (exact for matmul) and the result sliced back."""
+    M, K = a.shape
+    N = b.shape[1]
+    mp, kp, np_ = _ceil_to(M, bm), _ceil_to(K, bk), _ceil_to(N, bn)
+    out = _limb_matmul(_pad2(a, mp, kp), _pad2(b, kp, np_),
+                       bm=bm, bn=bn, bk=bk, interpret=INTERPRET, **kw)
+    return out[:M, :N]
 
 
 def mpc_matmul_online(mx, lx, my, ly):
     """Fused online-phase products (mm, cross, gamma)."""
     return _mpc_matmul_fused(mx, lx, my, ly, interpret=INTERPRET)
+
+
+def mpc_matmul_grid(xs, ys):
+    """All-pairs x_i @ y_j quadrants in one limb pass (see
+    mpc_matmul_fused.mpc_matmul_grid); xs/ys are sequences of equally
+    shaped (M, K) / (K, N) operands."""
+    return _mpc_matmul_grid(tuple(xs), tuple(ys), interpret=INTERPRET)
+
+
+def _pad_groups(a, b, c, bn: int = 512):
+    n = a.shape[-1]
+    np_ = _ceil_to(n, bn)
+    if np_ == n:
+        return a, b, c, n
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, np_ - n)]
+    return (jnp.pad(a, pad), jnp.pad(b, pad),
+            jnp.pad(c, pad[1:]), n)
+
+
+def mult_terms(a, b, c, signs):
+    """Grouped fused-FMA ring kernel: out[j] = sum_t signs[t] * a[j,t,:] *
+    b[j,t,:] + c[j,:] mod 2^ell.  a, b: (J, T, n); c: (J, n); arbitrary n
+    (zero-padded to the kernel's block size and sliced)."""
+    a, b, c, n = _pad_groups(a, b, c)
+    return _mult_terms(a, b, c, tuple(signs), interpret=INTERPRET)[..., :n]
+
+
+def and_terms(a, b, c):
+    """XOR-world twin of ``mult_terms``: out[j] = XOR_t (a[j,t,:] &
+    b[j,t,:]) ^ c[j,:] on bit-packed words."""
+    a, b, c, n = _pad_groups(a, b, c)
+    return _and_terms(a, b, c, interpret=INTERPRET)[..., :n]
 
 
 def bool_and_level(x, y, lamz, zero, **kw):
@@ -40,5 +90,9 @@ def msb_of_sum_words(x, y, lamz_levels, zero_levels):
 
 
 def lambda_masks(key, n, counter0=0):
-    """Keyed-lambda mask regeneration (squares counter PRF)."""
-    return _prf_mask(key, n, counter0=counter0, interpret=INTERPRET)
+    """Keyed-lambda mask regeneration (squares counter PRF).  Arbitrary n:
+    the stream is counter-indexed, so generating to the next block-legal
+    length and slicing is bit-exact."""
+    np_ = _ceil_to(n, 512)
+    out = _prf_mask(key, np_, counter0=counter0, interpret=INTERPRET)
+    return out[:n] if np_ != n else out

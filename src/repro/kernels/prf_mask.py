@@ -1,6 +1,6 @@
 """Counter-mode PRF lambda-mask generation in-kernel ("keyed-lambda").
 
-The keyed-lambda representation (DESIGN.md section 5) stores only m_W for
+The keyed-lambda representation (docs/KERNELS.md) stores only m_W for
 serving weights and regenerates lambda from (key, counter) at the point of
 use, trading HBM bytes for VPU flops.  This kernel generates a tile of
 ring-uniform masks from a 64-bit key and a counter base using the

@@ -78,18 +78,12 @@ def vsh_bool(rt: FourPartyRuntime, val_of, owners: tuple, shape,
 
 
 # ---------------------------------------------------------------------------
-# Secure AND (Pi_Mult over Z_2, Fig. 4 with XOR/AND).
+# Secure AND (Pi_Mult over Z_2, Fig. 4 with XOR/AND).  Local math goes
+# through ``rt.kernels`` (the kernel-backend seam): the XOR-world gamma
+# pieces use the same GAMMA_TERMS/GAMMA_MASK_F tables as the arithmetic
+# world with (XOR, AND) replacing (+, *), and on the pallas backend each
+# party's same-round workload is one fused ``and_terms`` launch.
 # ---------------------------------------------------------------------------
-def _bool_gamma_piece(j: int, lam_x: dict, lam_y: dict, mask):
-    """XOR-world gamma piece j: same GAMMA_TERMS/GAMMA_MASK_F tables as the
-    arithmetic world with (XOR, AND) replacing (+, *)."""
-    acc = None
-    for a, b in AL.GAMMA_TERMS[j]:
-        t = lam_x[a] & lam_y[b]
-        acc = t if acc is None else acc ^ t
-    return acc ^ mask
-
-
 def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
                active_bits: int | None = None) -> DistBShare:
     """[[x AND y]]^B.  Offline: 3 gamma-piece jmps; online: 3 part jmps --
@@ -105,18 +99,19 @@ def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
         # ---- offline: counter order matches core.boolean.and_bshare ------
         lam_z = {j: rt.sample(lam_holders(j), out_shape) for j in (1, 2, 3)}
         fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
+        masks = {j: fs[a] ^ fs[b] for j, (a, b) in AL.GAMMA_MASK_F.items()}
 
-        def piece(party: int, j: int):
-            a, b = AL.GAMMA_MASK_F[j]
-            return _bool_gamma_piece(j, x.views[party].lam,
-                                     y.views[party].lam, fs[a] ^ fs[b])
+        def pieces(party: int, js: tuple) -> dict:
+            return rt.kernels.bool_gamma_pieces(
+                x.views[party].lam, y.views[party].lam, masks, js)
 
         gamma = [dict() for _ in PARTIES]
-        gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
+        gamma[0] = pieces(0, (1, 2, 3))
+        for j in (1, 2, 3):
+            gamma[GAMMA_LOCAL[j]].update(pieces(GAMMA_LOCAL[j], (j,)))
         with tp.round("offline"):
             for j in (1, 2, 3):
                 local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
-                gamma[local][j] = piece(local, j)
                 gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
                                       gamma[local][j], tag=f"{tag}.g{j}",
                                       nbits=active, phase="offline")
@@ -130,17 +125,21 @@ def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
                  for i in PARTIES]
         return DistBShare(tuple(views), out_shape, ring.dtype, nbits)
 
-    # ---- online ----------------------------------------------------------
-    def parts_of(party: int, j: int):
+    # ---- online: each party's mm + two parts in one backend call ---------
+    def party_local(party: int) -> tuple:
         vx, vy = x.views[party], y.views[party]
-        return (vx.lam[j] & vy.m) ^ (vx.m & vy.lam[j]) \
-            ^ parts[party]["gamma"][j] ^ parts[party]["lam_z"][j]
+        js = tuple(j for j in (1, 2, 3) if party in AL.PART_HOLDERS[j])
+        return rt.kernels.bool_online_parts(
+            vx.m, vy.m, vx.lam, vy.lam, parts[party]["gamma"],
+            {j: parts[party]["lam_z"][j] for j in js}, js)
 
-    have = _open_parts(rt, parts_of, tag=tag, nbits=active)
+    local = {i: party_local(i) for i in (1, 2, 3)}
+
+    have = _open_parts(rt, lambda party, j: local[party][1][j], tag=tag,
+                       nbits=active)
     views = [PartyBView(None, dict(parts[0]["lam_z"]), nbits)]
     for i in (1, 2, 3):
-        m_z = (x.views[i].m & y.views[i].m) \
-            ^ have[i][1] ^ have[i][2] ^ have[i][3]
+        m_z = local[i][0] ^ have[i][1] ^ have[i][2] ^ have[i][3]
         views.append(PartyBView(m_z, dict(parts[i]["lam_z"]), nbits))
     return DistBShare(tuple(views), out_shape, ring.dtype, nbits)
 

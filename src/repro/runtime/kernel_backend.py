@@ -1,0 +1,226 @@
+"""Pluggable local-compute backends for the party runtime (the kernel seam).
+
+Every bilinear local computation a party performs in the Trident protocols
+-- gamma pieces offline, online m_z' parts, the PRF mask streams feeding
+both -- goes through a ``KernelBackend`` held by ``FourPartyRuntime``:
+
+  * ``JnpKernels``    ("jnp", the default): per-component jax.numpy
+    evaluation through the shared algebra (core/algebra.py), exactly the
+    pre-seam code path;
+  * ``PallasKernels`` ("pallas", opt-in via kernel_backend="pallas" or
+    ``TRIDENT_RUNTIME_KERNELS=1``): the same math routed through the fused
+    Pallas kernels (repro.kernels.ops) -- all of one party's same-round
+    pieces/parts batched into a single kernel launch (grouped fused-FMA
+    for Pi_Mult/Pi_DotP, a stacked limb-matmul grid for Pi_MatMul, the
+    XOR/AND twin for boolean AND levels, and the squares counter PRF
+    in-kernel for mask generation).
+
+The regression contract (tests/test_kernel_backend.py) is that the two
+backends are BIT-IDENTICAL: ring arithmetic mod 2^ell and XOR/AND are
+exactly associative and commutative, the limb decomposition is exact, and
+the in-kernel squares PRF is the same function core/prf.py evaluates in
+jnp -- so protocol transcripts, wire bytes (== CostTally), and
+reconstructed outputs do not depend on the backend, in any of the three
+execution worlds (docs/ARCHITECTURE.md).
+
+Batching layout per protocol round (docs/KERNELS.md has the mapping):
+
+  * arithmetic gamma (offline): P0's three pieces = one launch (J=3);
+    each online gamma-local party's piece = one launch (J=1).  Piece j =
+    sum over GAMMA_TERMS[j] of lam_x[a] op lam_y[b], plus the zero-share
+    mask -- fully fused for Pi_Mult; for Pi_MatMul the three terms become
+    ONE ring matmul via K-axis concatenation (sum_t A_t @ B_t =
+    [A_1|A_2|A_3] @ [B_1;B_2;B_3]).
+  * arithmetic online: each online party computes m_x op m_y plus its two
+    m_z' parts in one launch -- J=3 groups for Pi_Mult/Pi_DotP, a 3x3
+    stacked limb-matmul grid for Pi_MatMul (operands m_x, lam_x[ja],
+    lam_x[jb] x m_y, lam_y[ja], lam_y[jb]; 5 of the 9 quadrants used).
+  * boolean AND (each PPA level): same shapes with (XOR, AND) replacing
+    (+, *) via the ``and_terms`` twin kernel.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from ..core import algebra as AL
+from ..core import prf
+from ..kernels import ops
+
+
+class JnpKernels:
+    """Per-component jax.numpy local compute (the shared-algebra path)."""
+
+    name = "jnp"
+
+    # -- PRF streams -------------------------------------------------------
+    def prf_bits(self, key, counter, shape, ring):
+        return prf.prf_bits(key, counter, shape, ring)
+
+    def prf_bounded(self, key, counter, shape, ring, bits):
+        return prf.prf_bounded(key, counter, shape, ring, bits)
+
+    # -- arithmetic world (Pi_Mult / Pi_DotP / Pi_MatMul) ------------------
+    def gamma_pieces(self, kind, op, lam_x, lam_y, masks, js):
+        """{j: gamma piece j} for the pieces in `js`, from this party's
+        lambda component dicts.  `masks[j]` is the zero-share mask."""
+        return {j: AL.gamma_piece(op, j, lam_x, lam_y, mask=masks[j])
+                for j in js}
+
+    def online_parts(self, kind, op, m_x, m_y, lam_x, lam_y, gammas,
+                     lam_zs, js):
+        """(m_x op m_y, {j: online part j}) for this party's parts `js`.
+        `lam_zs[j]` is the additive output mask (-r_j for Pi_MultTr)."""
+        parts = {j: AL.mult_online_part(op, lam_x[j], lam_y[j], m_x, m_y,
+                                        gammas[j], lam_zs[j]) for j in js}
+        return op(m_x, m_y), parts
+
+    # -- boolean world (secure AND / PPA levels) ---------------------------
+    def bool_gamma_pieces(self, lam_x, lam_y, masks, js):
+        out = {}
+        for j in js:
+            acc = None
+            for a, b in AL.GAMMA_TERMS[j]:
+                t = lam_x[a] & lam_y[b]
+                acc = t if acc is None else acc ^ t
+            out[j] = acc ^ masks[j]
+        return out
+
+    def bool_online_parts(self, m_x, m_y, lam_x, lam_y, gammas, lam_zs, js):
+        parts = {j: (lam_x[j] & m_y) ^ (m_x & lam_y[j])
+                 ^ gammas[j] ^ lam_zs[j] for j in js}
+        return m_x & m_y, parts
+
+
+def _flat(shape, *arrs):
+    """Broadcast each operand to `shape` and flatten: one (len(arrs), n)
+    stack -- the kernels' group layout."""
+    return jnp.stack([jnp.broadcast_to(a, shape).reshape(-1) for a in arrs])
+
+
+class PallasKernels(JnpKernels):
+    """Fused Pallas-kernel local compute (repro.kernels.ops), bit-identical
+    to ``JnpKernels`` -- one launch per party per protocol round."""
+
+    name = "pallas"
+
+    # -- PRF streams: the squares PRF evaluated in-kernel ------------------
+    def prf_bits(self, key, counter, shape, ring):
+        n = AL.numel(shape)
+        out = ops.lambda_masks(prf.squares_key(key, counter), n)
+        return out.reshape(shape).astype(ring.dtype)
+
+    def prf_bounded(self, key, counter, shape, ring, bits):
+        return self.prf_bits(key, counter, shape, ring) >> (ring.ell - bits)
+
+    # -- arithmetic world --------------------------------------------------
+    def gamma_pieces(self, kind, op, lam_x, lam_y, masks, js):
+        terms = {j: AL.GAMMA_TERMS[j] for j in js}
+        p0, q0 = terms[js[0]][0]                     # indices this party holds
+        if kind == "matmul":
+            if lam_x[p0].ndim != 2:                  # batched: jnp fallback
+                return super().gamma_pieces(kind, op, lam_x, lam_y, masks,
+                                            js)
+            # sum_t A_t @ B_t == [A_1|A_2|A_3] @ [B_1;B_2;B_3]: one ring
+            # matmul per piece, the three terms fused on the K axis.
+            out = {}
+            for j in js:
+                a = jnp.concatenate([lam_x[p] for p, _ in terms[j]], axis=1)
+                b = jnp.concatenate([lam_y[q] for _, q in terms[j]], axis=0)
+                out[j] = ops.ring_matmul(a, b) + masks[j]
+            return out
+        full = jnp.broadcast_shapes(lam_x[p0].shape, lam_y[q0].shape)
+        a = jnp.stack([_flat(full, *(lam_x[p] for p, _ in terms[j]))
+                       for j in js])                  # (J, 3, n)
+        b = jnp.stack([_flat(full, *(lam_y[q] for _, q in terms[j]))
+                       for j in js])
+        if kind == "mul":
+            c = jnp.stack([masks[j].reshape(-1) for j in js])
+            s = ops.mult_terms(a, b, c, (1, 1, 1))   # fully fused
+            return {j: s[k].reshape(masks[j].shape)
+                    for k, j in enumerate(js)}
+        # dotp: fuse the term products, contract in jnp (exact: ring
+        # addition is fully associative), add the mask after.
+        zero = jnp.zeros(a.shape[::2], a.dtype)      # (J, n)
+        s = ops.mult_terms(a, b, zero, (1, 1, 1))
+        s = s.reshape((len(js),) + full).sum(axis=-1, dtype=a.dtype)
+        return {j: s[k].reshape(masks[j].shape) + masks[j]
+                for k, j in enumerate(js)}
+
+    def online_parts(self, kind, op, m_x, m_y, lam_x, lam_y, gammas,
+                     lam_zs, js):
+        if kind == "matmul":
+            if m_x.ndim != 2:
+                return super().online_parts(kind, op, m_x, m_y, lam_x,
+                                            lam_y, gammas, lam_zs, js)
+            # one 3x3 stacked limb-matmul grid launch: row 0 / col 0 give
+            # mm and the four cross products the two parts need.
+            p = ops.mpc_matmul_grid([m_x] + [lam_x[j] for j in js],
+                                    [m_y] + [lam_y[j] for j in js])
+            parts = {j: gammas[j] + lam_zs[j] - p[k + 1][0] - p[0][k + 1]
+                     for k, j in enumerate(js)}
+            return p[0][0], parts
+        full = jnp.broadcast_shapes(m_x.shape, m_y.shape)
+        zero = jnp.zeros((), m_x.dtype)
+        a = jnp.stack([_flat(full, lam_x[j], m_x) for j in js]
+                      + [_flat(full, m_x, zero)])    # (J+1, 2, n)
+        b = jnp.stack([_flat(full, m_y, lam_y[j]) for j in js]
+                      + [_flat(full, m_y, zero)])
+        s = ops.mult_terms(a, b, jnp.zeros(a.shape[::2], a.dtype), (1, 1))
+        if kind == "dotp":
+            s = s.reshape((len(js) + 1,) + full).sum(axis=-1, dtype=a.dtype)
+            out_shape = full[:-1]
+        else:
+            out_shape = full
+        parts = {j: gammas[j] + lam_zs[j] - s[k].reshape(out_shape)
+                 for k, j in enumerate(js)}
+        return s[len(js)].reshape(out_shape), parts
+
+    # -- boolean world -----------------------------------------------------
+    def bool_gamma_pieces(self, lam_x, lam_y, masks, js):
+        terms = {j: AL.GAMMA_TERMS[j] for j in js}
+        p0, q0 = terms[js[0]][0]
+        full = jnp.broadcast_shapes(lam_x[p0].shape, lam_y[q0].shape)
+        a = jnp.stack([_flat(full, *(lam_x[p] for p, _ in terms[j]))
+                       for j in js])
+        b = jnp.stack([_flat(full, *(lam_y[q] for _, q in terms[j]))
+                       for j in js])
+        c = jnp.stack([jnp.broadcast_to(masks[j], full).reshape(-1)
+                       for j in js])
+        s = ops.and_terms(a, b, c)
+        return {j: s[k].reshape(full) for k, j in enumerate(js)}
+
+    def bool_online_parts(self, m_x, m_y, lam_x, lam_y, gammas, lam_zs, js):
+        full = jnp.broadcast_shapes(m_x.shape, m_y.shape)
+        zero = jnp.zeros((), m_x.dtype)
+        a = jnp.stack([_flat(full, lam_x[j], m_x) for j in js]
+                      + [_flat(full, m_x, zero)])
+        b = jnp.stack([_flat(full, m_y, lam_y[j]) for j in js]
+                      + [_flat(full, m_y, zero)])
+        c = jnp.stack([jnp.broadcast_to(gammas[j] ^ lam_zs[j],
+                                        full).reshape(-1) for j in js]
+                      + [jnp.zeros(full, m_x.dtype).reshape(-1)])
+        s = ops.and_terms(a, b, c)
+        parts = {j: s[k].reshape(full) for k, j in enumerate(js)}
+        return s[len(js)].reshape(full), parts
+
+
+_BACKENDS = {"jnp": JnpKernels, "pallas": PallasKernels}
+
+
+def make_kernel_backend(spec=None):
+    """Resolve a backend: None/"env" reads ``TRIDENT_RUNTIME_KERNELS``
+    (=1 -> pallas, else jnp); a string picks by name; a backend instance
+    passes through."""
+    if spec is None or spec == "env":
+        spec = "pallas" if os.environ.get("TRIDENT_RUNTIME_KERNELS",
+                                          "") == "1" else "jnp"
+    if isinstance(spec, str):
+        try:
+            return _BACKENDS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown kernel backend {spec!r}: expected one of "
+                f"{sorted(_BACKENDS)}") from None
+    return spec

@@ -225,24 +225,29 @@ def ash_by_p0(rt: FourPartyRuntime, v0) -> list:
 # Pi_Mult / Pi_DotP / Pi_MatMul (+ fused truncation, Figs. 4/9/18).
 # ---------------------------------------------------------------------------
 def _gamma_exchange(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
-                    op, out_shape, *, tag: str) -> list:
+                    op, out_shape, *, tag: str, kind: str = "mul") -> list:
     """Offline gamma distribution: P0 and GAMMA_LOCAL[j] compute piece j
     locally; P0 jmp-sends it to GAMMA_RECV[j].  Returns per-party
     {j: gamma_j} for the pieces each party holds.  3 elements, 1 round
-    (inside the caller's offline round scope)."""
+    (inside the caller's offline round scope).
+
+    Local compute goes through ``rt.kernels`` (the kernel-backend seam):
+    each party's same-round pieces are one batched call -- P0's three in a
+    single launch on the pallas backend."""
     ring = rt.ring
     fs = [rt.sample(s, out_shape) for s in ZERO_SUBSETS]
+    masks = {j: fs[a] - fs[b] for j, (a, b) in AL.GAMMA_MASK_F.items()}
 
-    def piece(party: int, j: int):
-        a, b = AL.GAMMA_MASK_F[j]
-        return AL.gamma_piece(op, j, x.views[party].lam, y.views[party].lam,
-                              mask=fs[a] - fs[b])
+    def pieces(party: int, js: tuple) -> dict:
+        return rt.kernels.gamma_pieces(kind, op, x.views[party].lam,
+                                       y.views[party].lam, masks, js)
 
     gamma = [dict() for _ in PARTIES]
-    gamma[0] = {j: piece(0, j) for j in (1, 2, 3)}
+    gamma[0] = pieces(0, (1, 2, 3))
+    for j in (1, 2, 3):
+        gamma[GAMMA_LOCAL[j]].update(pieces(GAMMA_LOCAL[j], (j,)))
     for j in (1, 2, 3):
         local, recv = GAMMA_LOCAL[j], GAMMA_RECV[j]
-        gamma[local][j] = piece(local, j)
         gamma[recv][j] = _jmp(rt, 0, local, recv, gamma[0][j],
                               gamma[local][j], tag=f"{tag}.g{j}",
                               nbits=ring.ell, phase="offline")
@@ -266,9 +271,14 @@ def _open_parts(rt: FourPartyRuntime, parts_of, *, tag: str,
     return have
 
 
+def _party_parts_js(party: int) -> tuple:
+    """The online part indices party computes: j iff it is a holder."""
+    return tuple(j for j in (1, 2, 3) if party in PART_HOLDERS[j])
+
+
 def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
                contract=None, out_shape=None, truncate: bool = False,
-               name: str = "mult") -> DistAShare:
+               name: str = "mult", kind: str = "mul") -> DistAShare:
     ring = rt.ring
     tp = rt.transport
     op = as_op(contract)
@@ -283,7 +293,8 @@ def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
             lam_z = {j: rt.sample(lam_holders(j), out_shape)
                      for j in (1, 2, 3)}
             with tp.round("offline"):
-                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag,
+                                        kind=kind)
             return [{"gamma": dict(gamma[i]), "lam_z": _held_lam(lam_z, i)}
                     for i in PARTIES]
     else:
@@ -292,7 +303,8 @@ def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
             # aSh(r^t).  Guarded r sampling (core.protocols.TRUNC_GUARD):
             # keeps the opened z - r from wrapping for |z| < 2^{ell-2}.
             with tp.round("offline"):
-                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag)
+                gamma = _gamma_exchange(rt, x, y, op, out_shape, tag=tag,
+                                        kind=kind)
                 r = {j: rt.sample_bounded(lam_holders(j), out_shape,
                                           ring.ell - PR.TRUNC_GUARD)
                      for j in (1, 2, 3)}
@@ -315,18 +327,25 @@ def _mult_like(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
         return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
     # ---- online -----------------------------------------------------------
-    def parts_of(party: int, j: int):
+    # Each online party's whole local workload -- m_x op m_y plus its two
+    # m_z' parts -- is ONE batched kernel-backend call (a single fused
+    # launch on the pallas backend).
+    def party_local(party: int) -> tuple:
         vx, vy = x.views[party], y.views[party]
-        mask = -parts[party]["r"][j] if truncate \
-            else parts[party]["lam_z"][j]
-        return AL.mult_online_part(op, vx.lam[j], vy.lam[j], vx.m, vy.m,
-                                   parts[party]["gamma"][j], mask)
+        js = _party_parts_js(party)
+        lam_zs = {j: (-parts[party]["r"][j] if truncate
+                      else parts[party]["lam_z"][j]) for j in js}
+        return rt.kernels.online_parts(kind, op, vx.m, vy.m, vx.lam,
+                                       vy.lam, parts[party]["gamma"],
+                                       lam_zs, js)
 
-    have = _open_parts(rt, parts_of, tag=tag, nbits=ring.ell)
+    local = {i: party_local(i) for i in (1, 2, 3)}    # i -> (mm, {j: part})
+
+    have = _open_parts(rt, lambda party, j: local[party][1][j], tag=tag,
+                       nbits=ring.ell)
     views = [PartyAView(None, out_lam(0))]
     for i in (1, 2, 3):
-        mm = op(x.views[i].m, y.views[i].m)
-        m_z = mm + have[i][1] + have[i][2] + have[i][3]
+        m_z = local[i][0] + have[i][1] + have[i][2] + have[i][3]
         if truncate:
             m_z = ring.truncate(m_z)                      # (z - r)^t, public
         views.append(PartyAView(m_z, out_lam(i)))
@@ -359,13 +378,14 @@ def dotp(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     contract = lambda a, b: jnp.sum(a * b, axis=-1)
     out_shape = tuple(jnp.broadcast_shapes(x.shape, y.shape))[:-1]
     return _mult_like(rt, x, y, contract=contract, out_shape=out_shape,
-                      name="dotp")
+                      name="dotp", kind="dotp")
 
 
 def matmul(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     contract = lambda a, b: jnp.matmul(a, b)
     return _mult_like(rt, x, y, contract=contract,
-                      out_shape=matmul_shape(x.shape, y.shape), name="matmul")
+                      out_shape=matmul_shape(x.shape, y.shape), name="matmul",
+                      kind="matmul")
 
 
 def mult_tr(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
@@ -379,7 +399,7 @@ def matmul_tr(rt: FourPartyRuntime, x: DistAShare,
     contract = lambda a, b: jnp.matmul(a, b)
     return _mult_like(rt, x, y, contract=contract,
                       out_shape=matmul_shape(x.shape, y.shape), truncate=True,
-                      name="matmultr")
+                      name="matmultr", kind="matmul")
 
 
 def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:

@@ -18,8 +18,8 @@ from __future__ import annotations
 import jax
 
 from ..core.algebra import CheckLedger, PARTIES
-from ..core.prf import prf_bits, prf_bounded
 from ..core.ring import Ring, RING64
+from .kernel_backend import make_kernel_backend
 from .party import Party, PartyKeys
 from .transport import LocalTransport, Transport
 
@@ -58,12 +58,18 @@ class FourPartyRuntime:
                  transport: Transport | None = None,
                  malicious_checks: bool = True,
                  bitext_guard: int = 24, bitext_method: str = "mul",
-                 norm_window: tuple = (4, 40), prep=None):
+                 norm_window: tuple = (4, 40), prep=None,
+                 kernel_backend=None):
         self.ring = ring
         self.transport = transport if transport is not None \
             else LocalTransport()
         self.malicious_checks = malicious_checks
         self.prep = prep if prep is not None else InlinePrep()
+        # Local-compute plug point (kernel_backend.py): "jnp" (default) or
+        # "pallas" (fused Pallas kernels); None reads
+        # TRIDENT_RUNTIME_KERNELS.  Backends are bit-identical, so this
+        # never changes transcripts, wire bytes, or outputs.
+        self.kernels = make_kernel_backend(kernel_backend)
         # BitExt / NR-normalization knobs, mirroring TridentContext (same
         # defaults so the two backends trace identical programs).
         self.bitext_guard = bitext_guard
@@ -86,13 +92,15 @@ class FourPartyRuntime:
         from a key held by a member party (identical at every member)."""
         self._assert_may_sample()
         key = self.parties[min(subset)].keys.subset_key(subset)
-        return prf_bits(key, self.fresh_counter(), shape, self.ring)
+        return self.kernels.prf_bits(key, self.fresh_counter(), shape,
+                                     self.ring)
 
     def sample_bounded(self, subset, shape, bits: int) -> jax.Array:
         """Joint sampling of values uniform over [0, 2^bits)."""
         self._assert_may_sample()
         key = self.parties[min(subset)].keys.subset_key(subset)
-        return prf_bounded(key, self.fresh_counter(), shape, self.ring, bits)
+        return self.kernels.prf_bounded(key, self.fresh_counter(), shape,
+                                        self.ring, bits)
 
     def _assert_may_sample(self) -> None:
         # The online-only executor draws ALL randomness from the PrepStore;

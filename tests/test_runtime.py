@@ -19,9 +19,14 @@ from repro.core.ring import RING64
 from repro.runtime import FourPartyRuntime, protocols as RT
 
 
-def pair(seed=7):
+# both local-compute backends must satisfy every contract here: the
+# kernel seam (runtime/kernel_backend.py) is bit-identical by design
+BACKENDS = ("jnp", "pallas")
+
+
+def pair(seed=7, backend="jnp"):
     ctx = make_context(RING64, seed=seed)
-    rt = FourPartyRuntime(RING64, seed=seed)
+    rt = FourPartyRuntime(RING64, seed=seed, kernel_backend=backend)
     return ctx, rt
 
 
@@ -74,9 +79,10 @@ def setup_inputs(ctx, rt, n=3):
 class TestTransportEqualsTally:
     """Measured LocalTransport traffic == analytic CostTally, per protocol."""
 
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("op", sorted(OPS))
-    def test_bytes_and_rounds(self, op):
-        ctx, rt = pair()
+    def test_bytes_and_rounds(self, op, backend):
+        ctx, rt = pair(backend=backend)
         joint_in, dist_in = setup_inputs(ctx, rt)
         jf, rf = OPS[op]
         _, want = tally_delta(ctx, lambda: jf(ctx, joint_in))
@@ -106,8 +112,9 @@ class TestTransportEqualsTally:
         ell = 64
         assert got == PC.TRIDENT["dotp"](ell)
 
-    def test_matmul_3l_per_output_element(self):
-        ctx, rt = pair()
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_matmul_3l_per_output_element(self, backend):
+        ctx, rt = pair(backend=backend)
         a, b = enc(np.ones((4, 8))), enc(np.ones((8, 5)))
         aj, bj = PR.share(ctx, a), PR.share(ctx, b)
         ar, br = RT.share(rt, a), RT.share(rt, b)
@@ -141,9 +148,10 @@ class TestBitIdentity:
     """Party-sliced outputs reconstruct bit-for-bit equal to the joint
     simulation (same seed => same F_setup streams => identical shares)."""
 
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("op", ["mult", "mult_tr", "dotp", "trunc"])
-    def test_share_stacks_identical(self, op):
-        ctx, rt = pair(seed=13)
+    def test_share_stacks_identical(self, op, backend):
+        ctx, rt = pair(seed=13, backend=backend)
         joint_in, dist_in = setup_inputs(ctx, rt)
         jf, rf = OPS[op]
         jout = jf(ctx, joint_in)

@@ -27,9 +27,14 @@ from repro.runtime import conversions as RC
 from repro.runtime import protocols as RT
 
 
-def pair(seed=7):
+# every contract must hold on both kernel backends (the runtime's
+# local-compute seam, runtime/kernel_backend.py -- bit-identical)
+BACKENDS = ("jnp", "pallas")
+
+
+def pair(seed=7, backend="jnp"):
     ctx = make_context(RING64, seed=seed)
-    rt = FourPartyRuntime(RING64, seed=seed)
+    rt = FourPartyRuntime(RING64, seed=seed, kernel_backend=backend)
     return ctx, rt
 
 
@@ -88,8 +93,8 @@ OPS = {
 }
 
 
-def run_both(op, seed=7):
-    ctx, rt = pair(seed)
+def run_both(op, seed=7, backend="jnp"):
+    ctx, rt = pair(seed, backend=backend)
     jf, rf, build = OPS[op]
     joint_in, dist_in = build(ctx, rt)
     jout, want = tally_delta(ctx, lambda: jf(ctx, joint_in))
@@ -98,9 +103,10 @@ def run_both(op, seed=7):
 
 
 class TestTransportEqualsTally:
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("op", sorted(OPS))
-    def test_bytes_and_rounds(self, op):
-        *_, want, got = run_both(op)
+    def test_bytes_and_rounds(self, op, backend):
+        *_, want, got = run_both(op, backend=backend)
         assert got == want, f"{op}: measured {got} != tally {want}"
 
     def test_bit_inject(self):
@@ -114,8 +120,9 @@ class TestTransportEqualsTally:
         r = PC.TRIDENT["bitinj"](64)
         assert got == (r[0], r[1] * 3, r[2], r[3] * 3)
 
-    def test_and_bshare(self):
-        ctx, rt = pair()
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_and_bshare(self, backend):
+        ctx, rt = pair(backend=backend)
         bj, br = setup_bit(ctx, rt)
         cj, cr = setup_bit(ctx, rt)
         _, want = tally_delta(
@@ -142,9 +149,10 @@ class TestTransportEqualsTally:
 
 
 class TestBitIdentity:
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("op", sorted(OPS))
-    def test_share_stacks_identical(self, op):
-        _, _, jout, rout, *_ = run_both(op, seed=13)
+    def test_share_stacks_identical(self, op, backend):
+        _, _, jout, rout, *_ = run_both(op, seed=13, backend=backend)
         assert np.array_equal(np.asarray(rout.to_joint().data),
                               np.asarray(jout.data))
 
