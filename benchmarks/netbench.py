@@ -49,25 +49,38 @@ training-step blocks run TWICE -- kernel_backend="jnp" and "pallas"
 so the two breakdowns isolate what the fused kernels change: local
 compute only, never bytes or rounds.
 
+``--trace`` turns on the observability plane (docs/OBSERVABILITY.md) for
+the socket/live blocks: every party daemon and the dealer record span
+traces, the bench asserts trace consistency (traced per-link bytes ==
+``per_link()`` exactly), adds **measured-vs-modeled attribution** to each
+socket record (``measured_online_ms`` from the wire-round spans,
+``model_residual_ms`` = measured - modeled), and writes the merged
+Chrome trace-event timeline to ``--trace-out`` (open in ui.perfetto.dev;
+smoke-checked in CI by scripts/check_trace.py).
+
 One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 ``--out`` (default netbench.json) for CI artifact upload.
 
     PYTHONPATH=src python -m benchmarks.netbench [--quick] [--socket]
+        [--live] [--trace [--trace-out trace.json]]
 """
 import argparse
 import json
 import math
 import sys
 import time
+from collections import defaultdict
 
 import numpy as np
 
+from repro import obs
 from repro.core.ring import RING64
 from repro.offline import OnlinePrep, PrepPipeline, deal, run_online
 from repro.runtime import FourPartyRuntime, LocalTransport
 from repro.runtime import activations as RA
 from repro.runtime import protocols as RT
 from repro.runtime.net import LAN, WAN, NetModelTransport, run_four_parties
+from repro.runtime.net.cluster import PartyCluster
 
 _rng = np.random.RandomState(0)
 _SOCK_W1 = _rng.randn(8, 6) * 0.4
@@ -285,16 +298,78 @@ def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
     return rec, interleaved_out
 
 
-def run_socket_block(timeout: float = 300.0) -> dict:
+def _measured_phase_ms(chunks) -> dict:
+    """Per-rank traced wall-clock inside wire-round scopes: {rank: {phase:
+    ms}}.  The max over ranks is the measured cost of the synchronized
+    round structure -- the number the NetModel predicts."""
+    per = defaultdict(lambda: defaultdict(float))
+    for c in chunks:
+        for ev in c["events"]:
+            if ev["ph"] == "X" and ev["cat"] == "wire.round":
+                per[c["rank"]][ev["args"]["phase"]] += ev["dur"] * 1e3
+    return {rank: dict(ms) for rank, ms in per.items()}
+
+
+def _assert_trace_consistent(results, strict: bool = True) -> None:
+    """Every rank's traced per-link bytes must equal its transport's
+    ``per_link()`` accounting EXACTLY -- the end-to-end cross-check that
+    the trace saw every byte the transport measured.  ``strict=False``
+    confines the totals check to the online phase, for programs that also
+    run process-local transports (the pipelined block's in-daemon dealer
+    traces its local deals into the same buffer, off the mesh)."""
+    for r in results:
+        traced = r.trace["link_bits"]
+        for (s, d), per in r.per_link.items():
+            for phase, bits in per.items():
+                if bits:
+                    assert traced[f"{s}->{d}"][phase] == bits, \
+                        (r.rank, (s, d), phase, bits, traced)
+        phases = ("offline", "online") if strict else ("online",)
+        for phase in phases:
+            traced_total = sum(per.get(phase, 0)
+                               for per in traced.values())
+            measured_total = sum(per.get(phase, 0)
+                                 for per in r.per_link.values())
+            assert traced_total == measured_total, \
+                (r.rank, phase, traced_total, measured_total)
+
+
+def _attribution(rec, results, modeled_online_s, sessions=1,
+                 strict: bool = True) -> list:
+    """The measured-vs-modeled pass: fold the ranks' traced round wall
+    time into the record next to the NetModel prediction.  Returns the
+    trace chunks for the caller's merged timeline."""
+    chunks = [r.trace for r in results]
+    _assert_trace_consistent(results, strict=strict)
+    per = _measured_phase_ms(chunks)
+    measured = max(p.get("online", 0.0) for p in per.values()) / sessions
+    modeled = modeled_online_s / sessions * 1e3
+    rec.update({
+        "measured_online_ms": measured,
+        "measured_offline_ms":
+            max(p.get("offline", 0.0) for p in per.values()) / sessions,
+        # measured minus modeled: >0 means real socket rounds cost more
+        # than the model's rtt+bits/bandwidth account (scheduling, copies,
+        # GIL); <0 means the model over-prices this deployment
+        "model_residual_ms": measured - modeled,
+        "trace_events": sum(len(c["events"]) for c in chunks),
+    })
+    return chunks
+
+
+def run_socket_block(timeout: float = 300.0, trace: bool = False) -> tuple:
     t0 = time.perf_counter()
-    results = run_four_parties(_socket_nn_program, seed=_SOCK_SEED,
-                               timeout=timeout, net_model=WAN)
+    with PartyCluster(timeout=timeout, net_model=WAN,
+                      trace=trace) as cluster:
+        results = cluster.submit(_socket_nn_program, seed=_SOCK_SEED,
+                                 timeout=timeout)
+        trace = cluster.trace           # may have come from TRIDENT_TRACE
     wall = time.perf_counter() - t0
     ref = results[0]
     assert all(r.totals == ref.totals for r in results)
     assert not any(r.abort for r in results)
     totals = ref.totals
-    return {
+    rec = {
         "bench": "netbench",
         "block": "mlp_inference_socket_4proc",
         "offline_rounds": totals["offline"]["rounds"],
@@ -308,15 +383,21 @@ def run_socket_block(timeout: float = 300.0) -> dict:
         "launch_wall_s": wall,
         "aborted": False,
     }
+    chunks = _attribution(rec, results, ref.modeled_s["online"]) \
+        if trace else []
+    return rec, chunks
 
 
-def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
+def run_socket_pipelined_block(timeout: float = 300.0,
+                               trace: bool = False) -> tuple:
     """The pipelined 4-process backend: background dealers + online-only
     consumers over the real TCP mesh; ``online_only_ms`` is measured
     per-batch online wall-clock (max over parties)."""
     t0 = time.perf_counter()
-    results = run_four_parties(_socket_pipelined_program, seed=_SOCK_SEED,
-                               timeout=timeout)
+    with PartyCluster(timeout=timeout, trace=trace) as cluster:
+        results = cluster.submit(_socket_pipelined_program,
+                                 seed=_SOCK_SEED, timeout=timeout)
+        trace = cluster.trace
     wall = time.perf_counter() - t0
     ref = results[0]
     assert all(r.totals == ref.totals for r in results)
@@ -332,7 +413,7 @@ def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
             assert np.array_equal(res.result["out"][k], want), \
                 f"pipelined online diverged (session {k}, P{res.rank})"
     n = _SOCK_SESSIONS
-    return {
+    rec = {
         "bench": "netbench",
         "block": "mlp_inference_socket_4proc_pipelined",
         "sessions": n,
@@ -349,9 +430,14 @@ def run_socket_pipelined_block(timeout: float = 300.0) -> dict:
         "launch_wall_s": wall,
         "aborted": False,
     }
+    chunks = _attribution(rec, results,
+                          float(ref.result["wan_online_s"]),
+                          sessions=n, strict=False) if trace else []
+    return rec, chunks
 
 
-def run_socket_live_block(timeout: float = 300.0, steps: int = 3) -> dict:
+def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
+                          trace: bool = False) -> tuple:
     """The live-streamed 4-process training backend: the cluster's
     PrepBank starts EMPTY and a ``DealerDaemon`` streams step k's session
     over the per-rank control channel while step k-1 runs online.  The
@@ -382,10 +468,11 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3) -> dict:
         ref.append((dict(ref_p), loss))
 
     t0 = time.perf_counter()
-    with PartyCluster(live_prep=True, timeout=timeout) as cluster:
+    with PartyCluster(live_prep=True, timeout=timeout,
+                      trace=trace) as cluster:
         with SGD.attach_live_dealer(cluster, task, params0,
                                     data.batch(0, batch), base_seed=seed,
-                                    ahead=2, total=steps):
+                                    ahead=2, total=steps) as dealer:
             sgd = SGD.ClusterSGD(cluster, task, base_seed=seed,
                                  prep="live")
             p = dict(params0)
@@ -399,12 +486,16 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3) -> dict:
                     assert np.array_equal(p[k], ref[step][0][k]), (step, k)
             offline_bits = sgd.offline_bits_on_mesh()
             results = sgd.results
+        # party chunks per step + the dealer's per-session chunks: the
+        # merged timeline shows deal(k) overlapping online step k-1
+        chunks = ([*cluster.trace_chunks, *dealer.trace_chunks]
+                  if cluster.trace else [])
     wall = time.perf_counter() - t0
     assert offline_bits == 0, offline_bits   # transport-enforced
     per_step_ms = [max(r.wall_s for r in res) * 1e3 for res in results]
     steady = per_step_ms[1:] or per_step_ms
     step1 = results[min(1, steps - 1)][0]
-    return {
+    rec = {
         "bench": "netbench",
         "block": "train_logreg_live_socket_4proc",
         "steps": steps,
@@ -418,12 +509,29 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3) -> dict:
         "bit_identical": True,
         "aborted": False,
     }
+    if chunks:
+        labels = {c["label"] for c in chunks}
+        assert "dealer" in labels, labels     # the dealer made the timeline
+        per = _measured_phase_ms([c for c in chunks
+                                  if c.get("rank") is not None])
+        rec.update({
+            "measured_online_ms":
+                max(p.get("online", 0.0) for p in per.values()) / steps,
+            "prep_wait_ms_total": max(
+                sum(r.prep_wait_s for r in res) for res in zip(*results))
+                * 1e3,
+            "trace_events": sum(len(c["events"]) for c in chunks),
+        })
+    return rec, chunks
 
 
 def run(quick: bool = True, socket: bool = False, out: str | None = None,
         timeout: float = 300.0, train: bool = True,
-        train_only: bool = False, live: bool = False):
+        train_only: bool = False, live: bool = False,
+        trace: bool = False, trace_out: str | None = None):
     records = []
+    trace = trace or obs.tracing_enabled()
+    trace_chunks: list = []
     print("netbench: measured wire traffic + modeled LAN/WAN wall-clock "
           "(end-to-end AND online-only)")
     print(f"  LAN preset: rtt {LAN.default.rtt_s*1e3:.2f} ms, "
@@ -458,16 +566,29 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
         if "relu" in rec["block"] or "sigmoid" in rec["block"]:
             assert rec["wan_online_round_frac"] > 0.9, rec
     if socket:
-        rec = run_socket_block(timeout=timeout)
+        rec, chunks = run_socket_block(timeout=timeout, trace=trace)
         records.append(rec)
+        trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
-        rec = run_socket_pipelined_block(timeout=timeout)
+        rec, chunks = run_socket_pipelined_block(timeout=timeout,
+                                                 trace=trace)
         records.append(rec)
+        trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
     if live:
-        rec = run_socket_live_block(timeout=timeout)
+        rec, chunks = run_socket_live_block(timeout=timeout, trace=trace)
         records.append(rec)
+        trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
+    if trace and trace_chunks:
+        path = trace_out or "netbench_trace.json"
+        doc = obs.write_chrome_trace(path, trace_chunks)
+        snap = obs.metrics_snapshot(doc)
+        print(f"[netbench] wrote merged trace ({len(doc['traceEvents'])} "
+              f"events, processes {sorted(doc['metadata']['processes'])}) "
+              f"to {path} -- open in https://ui.perfetto.dev")
+        print("TRACE " + json.dumps({"rounds": snap["rounds"],
+                                     "sends": snap["sends"]}))
     if out:
         with open(out, "w") as f:
             json.dump({"bench": "netbench", "quick": quick,
@@ -491,12 +612,20 @@ def main():
                     help="also run the live-streamed 4-process training "
                          "block (empty bank, DealerDaemon over the "
                          "cluster control channel)")
+    ap.add_argument("--trace", action="store_true",
+                    help="trace the socket/live blocks (TRIDENT_TRACE=1 "
+                         "equivalent): measured_online_ms + "
+                         "model_residual_ms in the BENCH records, merged "
+                         "Chrome trace JSON to --trace-out")
+    ap.add_argument("--trace-out", default="netbench_trace.json",
+                    help="merged Perfetto-viewable trace path (with "
+                         "--trace; default netbench_trace.json)")
     ap.add_argument("--out", default="netbench.json")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()
     run(quick=args.quick, socket=args.socket, out=args.out,
         timeout=args.timeout, train=args.train, train_only=args.train_only,
-        live=args.live)
+        live=args.live, trace=args.trace, trace_out=args.trace_out)
     return 0
 
 

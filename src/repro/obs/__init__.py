@@ -1,0 +1,45 @@
+"""repro.obs -- the observability plane (tracing + metrics).
+
+Off by default; ``TRIDENT_TRACE=1`` (or ``PartyCluster(trace=True)`` /
+``netbench --trace``) turns every instrumented seam into span/instant
+events that merge into one Perfetto-viewable cluster timeline.  See
+docs/OBSERVABILITY.md for the span taxonomy and capture workflow.
+"""
+from repro.obs.merge import merge_chunks, merged_link_bits, write_chrome_trace
+from repro.obs.metrics import metrics_snapshot, round_wall_ms
+from repro.obs.tracer import (
+    NULL_TRACER,
+    RECV_SPAN_MIN_S,
+    NullTracer,
+    Stopwatch,
+    TRACE_ENV,
+    Tracer,
+    ensure_tracer,
+    get_tracer,
+    install_tracer,
+    stopwatch,
+    timed,
+    traced_protocol,
+    tracing_enabled,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "NullTracer",
+    "RECV_SPAN_MIN_S",
+    "Stopwatch",
+    "TRACE_ENV",
+    "Tracer",
+    "ensure_tracer",
+    "get_tracer",
+    "install_tracer",
+    "merge_chunks",
+    "merged_link_bits",
+    "metrics_snapshot",
+    "round_wall_ms",
+    "stopwatch",
+    "timed",
+    "traced_protocol",
+    "tracing_enabled",
+    "write_chrome_trace",
+]

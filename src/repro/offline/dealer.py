@@ -23,10 +23,14 @@ which party daemons load once at startup.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 
 from ..core.ring import RING64, Ring
+from ..obs import get_tracer
 from .store import DealPrep, PrepBank, PrepError, PrepStore
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -74,6 +78,18 @@ def deal(program, *, ring: Ring = RING64, seed: int = 0, transport=None,
     if bool(rt.abort_flag()):
         raise PrepError("dealer pass aborted: offline-phase consistency "
                         "checks failed")
+    offline_bits = totals["offline"]["bits"] - before["offline"]["bits"]
+    _log.debug("deal pass: %d entries, %d offline rounds, %d offline bits, "
+               "%.3fs (seed %d, session %s)",
+               len(store) - entries_before,
+               totals["offline"]["rounds"] - before["offline"]["rounds"],
+               offline_bits, wall, seed, store.meta.get("session"))
+    tracer = get_tracer()
+    if tracer.enabled:
+        tracer.raw_span("deal", "prep", t0, wall, seed=seed,
+                        session=store.meta.get("session"),
+                        entries=len(store) - entries_before,
+                        offline_bits=offline_bits)
     return store, DealReport(
         entries=len(store) - entries_before,
         offline_rounds=totals["offline"]["rounds"]

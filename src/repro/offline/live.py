@@ -49,9 +49,14 @@ import time
 import traceback
 
 from ..core.ring import Ring
+from ..obs import Tracer, get_tracer, install_tracer, tracing_enabled
 from .store import PrepBank, PrepError, PrepMissingError, PrepStore
 
 DEFAULT_AHEAD = 2
+
+# a wait_for block longer than this is a watermark stall worth logging
+# (the consumer outran the dealer) even with tracing off
+STALL_LOG_S = 0.25
 
 _log = logging.getLogger(__name__)
 
@@ -124,7 +129,27 @@ class LivePrepBank(PrepBank):
             f"{self._failure}")
 
     def wait_for(self, session: int, timeout: float | None = 60.0) -> None:
-        """Block until `session` has been streamed into the bank."""
+        """Block until `session` has been streamed into the bank.  A block
+        longer than ``STALL_LOG_S`` is a watermark stall -- the consumer
+        outran the dealer -- and is logged (and traced as a span) so
+        stream underruns are visible even without a timeline."""
+        t0 = time.perf_counter()
+        try:
+            self._wait_for(session, timeout)
+        finally:
+            stalled = time.perf_counter() - t0
+            if stalled >= STALL_LOG_S:
+                _log.warning(
+                    "live prep watermark stall: waited %.3fs for session "
+                    "%d (watermark %d) -- the dealer is behind the "
+                    "consumer", stalled, session, len(self._stores))
+                tracer = get_tracer()
+                if tracer.enabled:
+                    tracer.raw_span("prep.stall", "prep", t0, stalled,
+                                    session=session,
+                                    watermark=len(self._stores))
+
+    def _wait_for(self, session: int, timeout: float | None) -> None:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
             while len(self._stores) <= session:
@@ -174,6 +199,10 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
     ``cfg["program_for_step"]`` must be picklable (a module-level callable
     or a functools.partial of one)."""
     try:
+        if cfg.get("trace") or tracing_enabled():
+            install_tracer(Tracer("dealer"))
+        tracer = get_tracer()
+
         from .continuous import ContinuousDealer
 
         with ContinuousDealer(cfg["program_for_step"], ring=cfg["ring"],
@@ -182,7 +211,9 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                               runtime_kwargs=cfg["runtime_kwargs"]) as dealer:
             session = 0
             while cfg["total"] is None or session < cfg["total"]:
+                t0 = time.perf_counter()
                 store = dealer.next_store(timeout=None)
+                t1 = time.perf_counter()
                 # replicated-program model: every daemon simulates all
                 # four parties, so each gets the full store -- serialize
                 # it once and fan the blob out per rank
@@ -192,6 +223,15 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                     # (backpressure), not the party daemons
                     q.put(("prep", session, blob))
                 status_q.put(("dealt", session))
+                if tracer.enabled:
+                    now = time.perf_counter()
+                    tracer.raw_span("session.deal", "prep", t0, t1 - t0,
+                                    session=session)
+                    tracer.raw_span("session.ship", "prep", t1, now - t1,
+                                    session=session, bytes=len(blob))
+                    # ship the chunk per session so a killed dealer still
+                    # leaves its dealt sessions on the merged timeline
+                    status_q.put(("trace", tracer.drain()))
                 session += 1
         status_q.put(("done", session))
         for q in ctrl_qs:
@@ -224,7 +264,8 @@ class DealerDaemon:
     def __init__(self, cluster, program_for_step, *, ring: Ring | None = None,
                  base_seed: int = 0, ahead: int = DEFAULT_AHEAD,
                  total: int | None = None,
-                 runtime_kwargs: dict | None = None):
+                 runtime_kwargs: dict | None = None,
+                 trace: bool | None = None):
         ctrl_qs = getattr(cluster, "ctrl_queues", None)
         if not ctrl_qs:
             raise PrepError(
@@ -236,6 +277,11 @@ class DealerDaemon:
         self._done = False
         self._error: str | None = None
         self._closed = False
+        # trace defaults to the cluster's setting so one flag captures the
+        # whole deployment; chunks stream back per dealt session
+        self.trace = (bool(getattr(cluster, "trace", False))
+                      if trace is None else trace) or tracing_enabled()
+        self.trace_chunks: list = []
         ctx = mp.get_context("spawn")
         self._status_q = ctx.Queue()
         cfg = {
@@ -243,6 +289,7 @@ class DealerDaemon:
             "ring": ring if ring is not None else cluster.ring,
             "base_seed": base_seed, "ahead": ahead, "total": total,
             "runtime_kwargs": runtime_kwargs,
+            "trace": self.trace,
         }
         self._proc = ctx.Process(target=_dealer_daemon_main,
                                  args=(cfg, list(ctrl_qs), self._status_q),
@@ -262,6 +309,8 @@ class DealerDaemon:
             self._dealt = item[1]
         elif kind == "error":
             self._error = item[1]
+        elif kind == "trace":
+            self.trace_chunks.append(item[1])
 
     def _watch(self) -> None:
         while True:
@@ -283,6 +332,9 @@ class DealerDaemon:
                 f"dealer daemon died hard (exitcode {self._proc.exitcode}) "
                 f"after streaming {self._dealt} session(s) -- no further "
                 "live prep will arrive")
+        _log.error("dealer daemon failed after %d session(s); poisoning "
+                   "the party daemons' live banks:\n%s",
+                   self._dealt, self._error)
         # poison every party daemon's bank so blocked steps fail loudly
         # and named.  On a soft failure this is redundant with the dealer
         # process's own best-effort poisoning (harmless: bank.fail is

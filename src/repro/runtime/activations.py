@@ -19,12 +19,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..obs import traced_protocol
 from . import conversions as CV
 from . import protocols as RT
 from .party import (DistAShare, DistBShare, PartyBView, map_components)
 from .runtime import FourPartyRuntime
 
 
+@traced_protocol("relu")
 def relu(rt: FourPartyRuntime, v: DistAShare, return_bit: bool = False):
     """relu(v) = (1 xor b) * v with b = msb(v)."""
     b = CV.bit_extract(rt, v)
@@ -44,6 +46,7 @@ def mul_by_cached_bit(rt: FourPartyRuntime, nb: DistBShare,
     return CV.bit_inject(rt, nb, v)
 
 
+@traced_protocol("sigmoid")
 def sigmoid(rt: FourPartyRuntime, v: DistAShare, return_cache: bool = False):
     """sig(v) = (1^b1) b2 (v + 1/2) + (1^b2);
     b1 = [v + 1/2 < 0], b2 = [v - 1/2 < 0].
@@ -117,6 +120,7 @@ def _leading_one_factors(rt: FourPartyRuntime, x: DistAShare, table
         lambda a: jnp.sum(a, axis=0, dtype=ring.dtype), weighted)
 
 
+@traced_protocol("reciprocal")
 def reciprocal(rt: FourPartyRuntime, x: DistAShare,
                iters: int = 3) -> DistAShare:
     """[[1/x]] for x > 0 (fixed point), Newton-Raphson after normalizing
@@ -134,6 +138,7 @@ def reciprocal(rt: FourPartyRuntime, x: DistAShare,
     return RT.mult_tr(rt, y, F)              # 1/x = y_n * F
 
 
+@traced_protocol("rsqrt")
 def rsqrt(rt: FourPartyRuntime, x: DistAShare, iters: int = 3) -> DistAShare:
     """[[x^{-1/2}]] for x > 0: normalization factor G = 2^{-(k-f+1)/2} is a
     public per-position table, then NR: y <- y (3 - xn y^2) / 2."""
@@ -154,6 +159,7 @@ def rsqrt(rt: FourPartyRuntime, x: DistAShare, iters: int = 3) -> DistAShare:
     return RT.mult_tr(rt, y, G)
 
 
+@traced_protocol("softmax")
 def smx_softmax(rt: FourPartyRuntime, u: DistAShare, axis: int = -1,
                 mask=None, return_cache: bool = False):
     """MPC-friendly softmax smx = relu / sum(relu); the denominator stays

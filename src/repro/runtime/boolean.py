@@ -22,6 +22,7 @@ from ..core import algebra as AL
 from ..core.algebra import (GAMMA_LOCAL, GAMMA_RECV, PARTIES, ZERO_SUBSETS,
                             lam_holders)
 from ..core.boolean import _bit_masks
+from ..obs import traced_protocol
 from .party import DistBShare, PartyBView
 from .protocols import _jmp, _open_parts, _vsh_lam_parts, _vsh_exchange
 from .runtime import FourPartyRuntime
@@ -30,6 +31,7 @@ from .runtime import FourPartyRuntime
 # ---------------------------------------------------------------------------
 # Pi_vSh^B (Fig. 7): verifiable boolean sharing by two owners.
 # ---------------------------------------------------------------------------
+@traced_protocol("vsh_bool")
 def vsh_bool(rt: FourPartyRuntime, val_of, owners: tuple, shape,
              nbits: int | None = None, *, tag: str,
              phase: str = "online") -> DistBShare:
@@ -84,6 +86,7 @@ def vsh_bool(rt: FourPartyRuntime, val_of, owners: tuple, shape,
 # world with (XOR, AND) replacing (+, *), and on the pallas backend each
 # party's same-round workload is one fused ``and_terms`` launch.
 # ---------------------------------------------------------------------------
+@traced_protocol("and")
 def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
                active_bits: int | None = None) -> DistBShare:
     """[[x AND y]]^B.  Offline: 3 gamma-piece jmps; online: 3 part jmps --
@@ -158,6 +161,7 @@ def _smear_left(x: DistBShare, width: int) -> DistBShare:
     return cur
 
 
+@traced_protocol("ppa_add")
 def ppa_add(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
             cin: int = 0) -> DistBShare:
     """[[x + y + cin]]^B over Z_{2^ell}: log2(ell) AND-levels, each level's
@@ -201,6 +205,7 @@ def msb_of_sum(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
     return s.bit(rt.ring.ell - 1)
 
 
+@traced_protocol("prefix_or")
 def prefix_or(rt: FourPartyRuntime, x: DistBShare) -> DistBShare:
     """[[prefix-OR]]^B from the msb downward: out_i = OR_{j>=i} x_j.
 

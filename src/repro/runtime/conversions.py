@@ -26,6 +26,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..core.algebra import PARTIES, lam_holders
+from ..obs import traced_protocol
 from . import boolean as RB
 from .party import DistAShare, DistBShare, PartyAView
 from .protocols import _ash_pieces, _held_lam, _open_parts, _vsh, reconstruct
@@ -62,6 +63,7 @@ def _parts_to_neg_lam(rt: FourPartyRuntime, parts: list, shape,
 # ---------------------------------------------------------------------------
 # A2B (Fig. 14): v = x - y, boolean subtractor circuit.
 # ---------------------------------------------------------------------------
+@traced_protocol("a2b")
 def a2b(rt: FourPartyRuntime, v: DistAShare) -> DistBShare:
     tp = rt.transport
     tag = rt.next_tag("a2b")
@@ -133,6 +135,7 @@ def _mult_lam0(rt: FourPartyRuntime, u: DistAShare, m_pub, out_shape, *,
     return DistAShare(tuple(views), tuple(out_shape), ring.dtype)
 
 
+@traced_protocol("bit2a")
 def bit2a(rt: FourPartyRuntime, b: DistBShare) -> DistAShare:
     """b = v + u - 2uv over the ring with u = lam_b, v = m_b (public)."""
     ring = rt.ring
@@ -164,6 +167,7 @@ def bit2a(rt: FourPartyRuntime, b: DistBShare) -> DistAShare:
 # ---------------------------------------------------------------------------
 # BitInj (Fig. 17): [[b]]^B * [[v]]^A -> [[b v]]^A.
 # ---------------------------------------------------------------------------
+@traced_protocol("bit_inject")
 def bit_inject(rt: FourPartyRuntime, b: DistBShare,
                v: DistAShare) -> DistAShare:
     ring = rt.ring
@@ -240,6 +244,7 @@ def bit_inject(rt: FourPartyRuntime, b: DistBShare,
 # ---------------------------------------------------------------------------
 # BitExt / secure comparison (Fig. 19 + robust PPA variant).
 # ---------------------------------------------------------------------------
+@traced_protocol("bit_extract")
 def bit_extract(rt: FourPartyRuntime, v: DistAShare,
                 method: str | None = None) -> DistBShare:
     """[[msb(v)]]^B -- method "mul" (Fig. 19, guarded r) or "ppa"."""

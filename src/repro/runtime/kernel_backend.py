@@ -206,6 +206,54 @@ class PallasKernels(JnpKernels):
         return s[len(js)].reshape(full), parts
 
 
+class TracedKernels:
+    """Tracing proxy over a ``KernelBackend``: every launch becomes a
+    "kernel" span (backend, kind, flat shape) on the process tracer.
+    Installed by ``FourPartyRuntime`` only when tracing is enabled, so the
+    disabled path never even holds the proxy."""
+
+    def __init__(self, inner, tracer):
+        self._inner = inner
+        self._tracer = tracer
+        self.name = inner.name
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+    def _span(self, kind, shape):
+        return self._tracer.span(f"kernel.{kind}", "kernel",
+                                 backend=self.name, kind=kind,
+                                 shape=list(shape))
+
+    def prf_bits(self, key, counter, shape, ring):
+        with self._span("prf_bits", shape):
+            return self._inner.prf_bits(key, counter, shape, ring)
+
+    def prf_bounded(self, key, counter, shape, ring, bits):
+        with self._span("prf_bounded", shape):
+            return self._inner.prf_bounded(key, counter, shape, ring, bits)
+
+    def gamma_pieces(self, kind, op, lam_x, lam_y, masks, js):
+        with self._span(f"gamma.{kind}", masks[js[0]].shape):
+            return self._inner.gamma_pieces(kind, op, lam_x, lam_y, masks,
+                                            js)
+
+    def online_parts(self, kind, op, m_x, m_y, lam_x, lam_y, gammas,
+                     lam_zs, js):
+        with self._span(f"online.{kind}", m_x.shape):
+            return self._inner.online_parts(kind, op, m_x, m_y, lam_x,
+                                            lam_y, gammas, lam_zs, js)
+
+    def bool_gamma_pieces(self, lam_x, lam_y, masks, js):
+        with self._span("gamma.bool", masks[js[0]].shape):
+            return self._inner.bool_gamma_pieces(lam_x, lam_y, masks, js)
+
+    def bool_online_parts(self, m_x, m_y, lam_x, lam_y, gammas, lam_zs, js):
+        with self._span("online.bool", m_x.shape):
+            return self._inner.bool_online_parts(m_x, m_y, lam_x, lam_y,
+                                                 gammas, lam_zs, js)
+
+
 _BACKENDS = {"jnp": JnpKernels, "pallas": PallasKernels}
 
 

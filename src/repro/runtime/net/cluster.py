@@ -66,6 +66,7 @@ import traceback
 import numpy as np
 
 from ...core.ring import RING64, Ring
+from ...obs import Tracer, get_tracer, install_tracer, tracing_enabled
 
 DEFAULT_TIMEOUT = 120.0
 DEFAULT_LIVE_AHEAD = 2
@@ -93,6 +94,8 @@ class PartyResult:
     modeled_s: dict | None = None     # phase -> seconds (when net_model set)
     frames_sent: dict | None = None   # (src, dst) -> wire frames (this task)
     task_id: int | None = None        # correlates results with submissions
+    prep_wait_s: float = 0.0          # blocked on prep material (live banks)
+    trace: dict | None = None         # this task's trace chunk (trace=True)
 
 
 def _free_ports(n: int) -> list:
@@ -127,7 +130,10 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
     f_before = dict(base.frames_sent)
     m_before = dict(transport._sec.total) if transport is not base else None
 
+    tracer = get_tracer()
+    t_task0 = time.perf_counter()
     prep = None
+    prep_wait_s = 0.0
     if task.get("prep") == "bank":
         from ...offline.store import OnlinePrep
         if bank is None:
@@ -136,6 +142,7 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
                                "prep_path= or stream one with "
                                "live_prep=True)")
         session = task.get("prep_session")
+        t_prep0 = time.perf_counter()
         if getattr(bank, "live", False):
             # live streaming: the session may not have arrived yet --
             # block until the dealer's watermark passes it (a dead dealer
@@ -148,6 +155,11 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
             # PrepReplayError instead of silently eating wrong material
             bank.seek(session)
         store = bank.next()
+        prep_wait_s = time.perf_counter() - t_prep0
+        if tracer.enabled:
+            tracer.raw_span("prep.acquire", "prep", t_prep0, prep_wait_s,
+                            session=getattr(store, "meta",
+                                            {}).get("session"))
         store.party = rank              # attribute store errors to P{rank}
         prep = OnlinePrep(store)
         base.forbid_phase("offline")
@@ -160,6 +172,11 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
     finally:
         if prep is not None:
             base.allow_phase("offline")
+    if tracer.enabled:
+        tracer.raw_span(f"task#{task['id']}", "cluster.task", t_task0,
+                        time.perf_counter() - t_task0, task_id=task["id"],
+                        seed=task["seed"], prep=task.get("prep"),
+                        session=task.get("prep_session"))
 
     t_after = base.totals()
     per_link = {}
@@ -179,6 +196,10 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
                     for p in m_before} if m_before is not None else None),
         frames_sent={k: v for k, v in frames.items() if v},
         task_id=task["id"],
+        prep_wait_s=prep_wait_s,
+        # per-task trace delta: drain() resets the buffer, so each task's
+        # chunk stands alone and the driver concatenates them
+        trace=tracer.drain() if tracer.enabled else None,
     ))
 
 
@@ -190,6 +211,7 @@ def _ctrl_loop(ctrl_q, bank, rank):
     out-of-order stream) poisons the bank, so a waiting task raises the
     cause instead of timing out."""
     import pickle
+    tracer = get_tracer()
     try:
         while True:
             item = ctrl_q.get()
@@ -200,7 +222,15 @@ def _ctrl_loop(ctrl_q, bank, rank):
                 _, session, blob = item
                 store = pickle.loads(blob)
                 store.party = rank      # attribute store errors to P{rank}
-                bank.append(session, store)
+                if tracer.enabled:
+                    # the append may block on the bounded look-ahead: the
+                    # span IS the backpressure wait, the counter the depth
+                    with tracer.span("prep.append", "prep",
+                                     session=session):
+                        bank.append(session, store)
+                    tracer.counter("live_bank_depth", len(bank), "prep")
+                else:
+                    bank.append(session, store)
             elif kind == "dealer_error":
                 bank.fail(item[1])
                 return
@@ -214,6 +244,12 @@ def _ctrl_loop(ctrl_q, bank, rank):
 
 def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
     try:
+        # install the labeled tracer BEFORE the transport exists so the
+        # mesh's MeasuredTransport captures it (env TRIDENT_TRACE=1 also
+        # lands here: spawned children inherit the environment)
+        if cfg.get("trace") or tracing_enabled():
+            install_tracer(Tracer(f"party-P{rank}", rank=rank))
+
         from .model import NetModelTransport
         from .socket_transport import SocketTransport
 
@@ -264,22 +300,32 @@ class PartyCluster:
                  timeout: float = DEFAULT_TIMEOUT, tampers=(),
                  net_model=None, prep_path: str | None = None,
                  live_prep: bool = False,
-                 live_ahead: int = DEFAULT_LIVE_AHEAD):
+                 live_ahead: int = DEFAULT_LIVE_AHEAD,
+                 trace: bool = False):
         if live_prep and prep_path is not None:
             raise ValueError(
                 "live_prep streams into an initially empty bank; "
                 "prep_path loads a frozen one at startup -- pick one")
         ctx = mp.get_context("spawn")
         endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
+        trace = trace or tracing_enabled()
         cfg = {
             "ring": ring, "timeout": timeout, "tampers": list(tampers),
             "net_model": net_model, "prep_path": prep_path,
             "live_prep": live_prep, "live_ahead": live_ahead,
+            "trace": trace,
         }
         self.ring = ring
         self.timeout = timeout
         self.net_model = net_model
         self.live_prep = live_prep
+        self.trace = trace
+        # per-task trace chunks from every rank (plus whatever the caller
+        # extends with, e.g. the DealerDaemon's chunks)
+        self.trace_chunks: list = []
+        # driver-side wall clock of every submit (uniform across prep /
+        # live / plain paths -- PartyResult.wall_s is the program only)
+        self.task_walls: list = []
         self._task_qs = [ctx.Queue() for _ in range(4)]
         # per-rank control queues (live prep streaming): bounded, so a
         # dealer running ahead of consumption blocks instead of buffering
@@ -382,6 +428,7 @@ class PartyCluster:
                 "runtime_kwargs": dict(runtime_kwargs or {}),
                 "timeout": timeout or self.timeout,
                 "id": self._task_id}
+        t0 = time.perf_counter()
         for q in self._task_qs:
             q.put(task)
         try:
@@ -390,8 +437,26 @@ class PartyCluster:
         except BaseException as e:
             self._poisoned = f"{type(e).__name__}: {e}"
             raise
+        self.task_walls.append(time.perf_counter() - t0)
         self.tasks_run += 1
-        return sorted(results, key=lambda r: r.rank)
+        results = sorted(results, key=lambda r: r.rank)
+        self.trace_chunks.extend(r.trace for r in results if r.trace)
+        return results
+
+    # -- observability -----------------------------------------------------
+    def merged_trace(self, extra_chunks=()) -> dict:
+        """One Chrome trace-event document over every chunk collected so
+        far (all tasks, all four ranks) plus ``extra_chunks`` (e.g. the
+        DealerDaemon's)."""
+        from ...obs import merge_chunks
+        return merge_chunks([*self.trace_chunks, *extra_chunks])
+
+    def save_trace(self, path, extra_chunks=()) -> dict:
+        """Merge and write the cluster timeline to ``path`` (Perfetto /
+        chrome://tracing); returns the merged document."""
+        from ...obs import write_chrome_trace
+        return write_chrome_trace(path,
+                                  [*self.trace_chunks, *extra_chunks])
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -442,16 +507,19 @@ def run_four_parties(program, *, ring: Ring = RING64, seed: int = 0,
                      timeout: float = DEFAULT_TIMEOUT, tampers=(),
                      net_model=None, runtime_kwargs=None,
                      prep_path: str | None = None,
-                     prep: str | None = None) -> list:
+                     prep: str | None = None, trace: bool = False) -> list:
     """One-shot: spawn a cluster, run ``program(rt, rank)``, tear down.
 
     Returns the four ``PartyResult``s ordered by rank.  ``tampers`` is a
     sequence of keyword dicts forwarded to ``Transport.tamper`` in every
     process.  ``net_model`` (a ``NetModel``) wraps each party's transport
     in a ``NetModelTransport`` and fills ``PartyResult.modeled_s``.
+    ``trace=True`` (or ``TRIDENT_TRACE=1``) fills ``PartyResult.trace``
+    with each rank's trace chunk (merge with ``repro.obs.merge_chunks``).
     """
     with PartyCluster(ring=ring, timeout=timeout, tampers=tampers,
-                      net_model=net_model, prep_path=prep_path) as cluster:
+                      net_model=net_model, prep_path=prep_path,
+                      trace=trace) as cluster:
         return cluster.submit(program, seed=seed, prep=prep,
                               runtime_kwargs=runtime_kwargs,
                               timeout=timeout)

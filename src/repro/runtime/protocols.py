@@ -46,6 +46,7 @@ from ..core import protocols as PR
 from ..core.algebra import (ASH_SUBSETS, B2A_VALS, GAMMA_LOCAL, GAMMA_RECV,
                             PART_HOLDERS, PARTIES, REC_ROUTE, ZERO_SUBSETS,
                             as_op, lam_holders, matmul_shape)
+from ..obs import traced_protocol
 from .party import DistAShare, DistBShare, PartyAView, PartyBView
 from .runtime import FourPartyRuntime
 
@@ -96,6 +97,7 @@ def _broadcast_by_p0(rt: FourPartyRuntime, m, *, tag: str, nbits: int,
     return got
 
 
+@traced_protocol("share")
 def share(rt: FourPartyRuntime, v, owner: int = 0) -> DistAShare:
     if owner != 0:
         raise NotImplementedError("runtime Pi_Sh: owner P0 only")
@@ -120,6 +122,7 @@ def share(rt: FourPartyRuntime, v, owner: int = 0) -> DistAShare:
     return DistAShare.from_views(views)
 
 
+@traced_protocol("share_bool")
 def share_bool(rt: FourPartyRuntime, v, owner: int = 0,
                nbits: int | None = None) -> DistBShare:
     if owner != 0:
@@ -152,6 +155,7 @@ def share_bool(rt: FourPartyRuntime, v, owner: int = 0,
 # ---------------------------------------------------------------------------
 # Pi_Rec (Fig. 3): each receiver is missing exactly one component.
 # ---------------------------------------------------------------------------
+@traced_protocol("reconstruct")
 def reconstruct(rt: FourPartyRuntime, x: DistAShare,
                 receivers=PARTIES) -> dict:
     """Open [[x]] towards `receivers`; returns {party: plaintext}."""
@@ -368,11 +372,13 @@ def _trunc_pair_check(rt: FourPartyRuntime, r: dict, pieces: list, *,
         rt.parties[2].ledger.record(ok, tag + ".tc")
 
 
+@traced_protocol("mult")
 def mult(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     """Pi_Mult (Fig. 4): elementwise product, no truncation."""
     return _mult_like(rt, x, y, name="mult")
 
 
+@traced_protocol("dotp")
 def dotp(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     """Pi_DotP (Fig. 9): wire cost independent of the vector length."""
     contract = lambda a, b: jnp.sum(a * b, axis=-1)
@@ -381,6 +387,7 @@ def dotp(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
                       name="dotp", kind="dotp")
 
 
+@traced_protocol("matmul")
 def matmul(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     contract = lambda a, b: jnp.matmul(a, b)
     return _mult_like(rt, x, y, contract=contract,
@@ -388,11 +395,13 @@ def matmul(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
                       kind="matmul")
 
 
+@traced_protocol("mult_tr")
 def mult_tr(rt: FourPartyRuntime, x: DistAShare, y: DistAShare) -> DistAShare:
     """Pi_MultTr (Fig. 18): multiplication with free truncation."""
     return _mult_like(rt, x, y, truncate=True, name="multtr")
 
 
+@traced_protocol("matmul_tr")
 def matmul_tr(rt: FourPartyRuntime, x: DistAShare,
               y: DistAShare) -> DistAShare:
     """[[X]] @ [[Y]] with fused truncation (the PPML workhorse)."""
@@ -402,6 +411,7 @@ def matmul_tr(rt: FourPartyRuntime, x: DistAShare,
                       name="matmultr", kind="matmul")
 
 
+@traced_protocol("truncate")
 def truncate_share(rt: FourPartyRuntime, x: DistAShare) -> DistAShare:
     """Standalone truncation (core.protocols.truncate_share twin)."""
     ring = rt.ring
@@ -534,6 +544,7 @@ def _vsh(rt: FourPartyRuntime, val_of, owners: tuple, shape, *, tag: str,
 # ---------------------------------------------------------------------------
 # B2A (Fig. 16): boolean -> arithmetic, constant online rounds.
 # ---------------------------------------------------------------------------
+@traced_protocol("b2a")
 def b2a(rt: FourPartyRuntime, v: DistBShare) -> DistAShare:
     ring = rt.ring
     tp = rt.transport

@@ -19,7 +19,8 @@ import jax
 
 from ..core.algebra import CheckLedger, PARTIES
 from ..core.ring import Ring, RING64
-from .kernel_backend import make_kernel_backend
+from ..obs import get_tracer
+from .kernel_backend import TracedKernels, make_kernel_backend
 from .party import Party, PartyKeys
 from .transport import LocalTransport, Transport
 
@@ -70,6 +71,13 @@ class FourPartyRuntime:
         # TRIDENT_RUNTIME_KERNELS.  Backends are bit-identical, so this
         # never changes transcripts, wire bytes, or outputs.
         self.kernels = make_kernel_backend(kernel_backend)
+        # Observability: share the transport's tracer (NetModelTransport
+        # forwards it to the wrapped transport) so protocol spans and wire
+        # events land in one buffer; when tracing, kernel launches are
+        # proxied into spans too.  Tracing off => NULL_TRACER, zero cost.
+        self.tracer = getattr(self.transport, "tracer", None) or get_tracer()
+        if self.tracer.enabled:
+            self.kernels = TracedKernels(self.kernels, self.tracer)
         # BitExt / NR-normalization knobs, mirroring TridentContext (same
         # defaults so the two backends trace identical programs).
         self.bitext_guard = bitext_guard

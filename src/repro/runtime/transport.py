@@ -38,7 +38,10 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import time
 from collections import defaultdict, deque
+
+from repro.obs import RECV_SPAN_MIN_S, get_tracer
 
 PHASES = ("offline", "online")
 
@@ -181,6 +184,12 @@ class MeasuredTransport(Transport):
         self._round_traffic = {p: False for p in PHASES}
         self._tampers: list[TamperRule] = []
         self._forbidden: set[str] = set()
+        # observability: the process tracer (NULL_TRACER unless enabled),
+        # plus per-phase round indices / open-scope timing for round spans
+        self.tracer = get_tracer()
+        self._round_index = {p: 0 for p in PHASES}
+        self._round_t0 = {p: 0.0 for p in PHASES}
+        self._round_bits0 = {p: 0 for p in PHASES}
 
     # -- measurement -------------------------------------------------------
     def bits(self, phase: str | None = None) -> int:
@@ -230,8 +239,12 @@ class MeasuredTransport(Transport):
     @contextlib.contextmanager
     def round(self, phase: str):
         assert phase in PHASES, phase
+        tracing = self.tracer.enabled
         if self._round_depth[phase] == 0:
             self._round_traffic[phase] = False
+            if tracing:
+                self._round_t0[phase] = time.perf_counter()
+                self._round_bits0[phase] = self.phase_bits[phase]
         self._round_depth[phase] += 1
         try:
             yield self
@@ -241,6 +254,17 @@ class MeasuredTransport(Transport):
                 if self._round_traffic[phase]:
                     self._frames.add(phase, 1)
                 self._round_flush(phase)
+                if tracing and self._round_traffic[phase]:
+                    # span covers the whole outermost scope incl. the
+                    # backend flush -- the measured cost of one round
+                    t0 = self._round_t0[phase]
+                    self.tracer.raw_span(
+                        f"round[{phase}]", "wire.round", t0,
+                        time.perf_counter() - t0, phase=phase,
+                        index=self._round_index[phase],
+                        bits=self.phase_bits[phase]
+                        - self._round_bits0[phase])
+                    self._round_index[phase] += 1
 
     def parallel(self, phases=PHASES):
         return self._frames.parallel(phases)
@@ -263,11 +287,24 @@ class MeasuredTransport(Transport):
             self.phase_bits[phase] += bits
             self.link_bits[(src, dst)][phase] += bits
         self.link_msgs[(src, dst)] += 1
+        if self.tracer.enabled:
+            self.tracer.wire_send(src, dst, tag, bits, phase,
+                                  self._round_index[phase])
         payload = self._apply_tamper(src, dst, tag, payload)
         self._put(src, dst, tag, payload)
 
     def recv(self, dst: int, src: int, *, tag: str):
-        return self._get(dst, src, tag)
+        if not self.tracer.enabled:
+            return self._get(dst, src, tag)
+        t0 = time.perf_counter()
+        payload = self._get(dst, src, tag)
+        dt = time.perf_counter() - t0
+        if dt >= RECV_SPAN_MIN_S:
+            # only blocking receives make the timeline -- a recv span is
+            # the wait for the peer (or the network), not the copy
+            self.tracer.raw_span("recv", "wire.recv", t0, dt, dst=dst,
+                                 src=src, tag=tag)
+        return payload
 
     # -- backend hooks -----------------------------------------------------
     def _put(self, src: int, dst: int, tag: str, payload) -> None:

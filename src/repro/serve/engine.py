@@ -9,11 +9,11 @@ accounting the paper's Tables VII/VIII use.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import numpy as np
 
+from .. import obs
 from ..core.context import make_context
 from ..core.costs import LAN, WAN, NetworkModel
 from ..core.ring import RING64
@@ -93,9 +93,9 @@ class PredictionServer:
         """Run all pending queries in batches; returns predictions."""
         def run_batch(X, n):
             ctx = make_context(self.ring, seed=self.seed)
-            t0 = time.perf_counter()
-            preds = np.asarray(self.predict_fn(ctx, X))
-            self.stats.compute_s += time.perf_counter() - t0
+            with obs.timed(self.stats, "compute_s", span="serve.batch",
+                           queries=n):
+                preds = np.asarray(self.predict_fn(ctx, X))
             self.stats.batches += 1
             self.stats.queries += n
             self.stats.online_rounds += ctx.tally.online.rounds

@@ -41,11 +41,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import tempfile
-import time
 from typing import Callable
 
 import numpy as np
 
+from .. import obs
 from ..core.costs import LAN, WAN, NetworkModel
 from ..core.ring import RING64
 from ..runtime import FourPartyRuntime, LocalTransport
@@ -141,9 +141,9 @@ class PartyPredictionServer:
         def run_batch(X, n):
             base, tp = self._transport()
             rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
-            t0 = time.perf_counter()
-            preds = np.asarray(self.predict_fn(rt, X))
-            self.stats.compute_s += time.perf_counter() - t0
+            with obs.timed(self.stats, "compute_s", span="serve.batch",
+                           queries=n):
+                preds = np.asarray(self.predict_fn(rt, X))
             self.stats.queries += n
             self._account(base, tp, rt)
             return preds
@@ -171,11 +171,9 @@ class PartyPredictionServer:
                 tp.forbid_phase("offline")
                 rt = FourPartyRuntime(self.ring, transport=tp,
                                       prep=OnlinePrep(store))
-                t0 = time.perf_counter()
-                preds = np.asarray(self.predict_fn(rt, X))
-                dt = time.perf_counter() - t0
-                self.stats.online_compute_s += dt
-                self.stats.compute_s += dt
+                with obs.timed(self.stats, "online_compute_s", "compute_s",
+                               span="serve.batch.online", queries=n):
+                    preds = np.asarray(self.predict_fn(rt, X))
                 self.stats.queries += n
                 self._account(base, tp, rt)
                 assert base.totals()["offline"]["bits"] == 0
@@ -304,14 +302,14 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
     deal_wall = 0.0
     if prep == "ahead":
         from ..offline import deal_sessions
-        t0 = time.perf_counter()
-        bank, _ = deal_sessions(
-            [functools.partial(_zero_deal_program, predict_fn, X)
-             for X in batches],
-            ring=ring, base_seed=seed)
-        prep_path = prep_dir or tempfile.mkdtemp(prefix="prepbank-")
-        bank.save(prep_path)
-        deal_wall = time.perf_counter() - t0
+        with obs.stopwatch() as sw:
+            bank, _ = deal_sessions(
+                [functools.partial(_zero_deal_program, predict_fn, X)
+                 for X in batches],
+                ring=ring, base_seed=seed)
+            prep_path = prep_dir or tempfile.mkdtemp(prefix="prepbank-")
+            bank.save(prep_path)
+        deal_wall = sw.s
     if own_cluster:
         cluster = PartyCluster(ring=ring, timeout=timeout,
                                net_model=net_model, prep_path=prep_path,

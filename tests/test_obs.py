@@ -1,0 +1,287 @@
+"""The observability plane: tracer mechanics, trace-consistency against
+the transport's own accounting, merging, metrics, and the traced
+4-process cluster path.
+
+The central cross-check: the tracer double-books wire traffic
+independently of ``MeasuredTransport``, and the two must agree EXACTLY
+(per link, per phase) -- any drift means an instrumented seam missed or
+double-counted a send.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.runtime import FourPartyRuntime, LocalTransport
+from repro.runtime import activations as ACT
+from repro.runtime import protocols as RT
+
+
+@pytest.fixture
+def tracer():
+    """Install a fresh enabled Tracer for the test, restore after."""
+    tr = obs.Tracer("test")
+    prev = obs.install_tracer(tr)
+    try:
+        yield tr
+    finally:
+        obs.install_tracer(prev)
+
+
+def _program(rt):
+    x = RT.share(rt, jnp.arange(6, dtype=jnp.int64).reshape(2, 3))
+    y = RT.share(rt, jnp.ones((3, 2), dtype=jnp.int64))
+    z = RT.matmul(rt, x, y)
+    r = ACT.relu(rt, z)
+    return RT.reconstruct(rt, r)[0]
+
+
+# ---------------------------------------------------------------------------
+# Off-by-default.
+# ---------------------------------------------------------------------------
+def test_tracing_off_by_default(monkeypatch):
+    monkeypatch.delenv(obs.TRACE_ENV, raising=False)
+    prev = obs.install_tracer(None)     # reset the lazy singleton
+    try:
+        assert obs.get_tracer() is obs.NULL_TRACER
+        rt = FourPartyRuntime()
+        assert not rt.tracer.enabled
+        assert rt.transport.tracer is obs.NULL_TRACER
+        _program(rt)                    # protocols run untraced
+        assert obs.NULL_TRACER.drain() is None
+    finally:
+        obs.install_tracer(prev)
+
+
+def test_env_var_enables(monkeypatch):
+    monkeypatch.setenv(obs.TRACE_ENV, "1")
+    prev = obs.install_tracer(None)
+    try:
+        assert obs.get_tracer().enabled
+    finally:
+        obs.install_tracer(prev)
+
+
+# ---------------------------------------------------------------------------
+# Trace consistency: traced bytes == transport accounting, exactly.
+# ---------------------------------------------------------------------------
+def test_traced_link_bits_equal_per_link(tracer):
+    rt = FourPartyRuntime(seed=7)
+    _program(rt)
+    traced = tracer.link_bits()
+    measured = rt.transport.per_link()
+    # every measured non-zero cell is traced with the same value...
+    for link, per in measured.items():
+        for phase, bits in per.items():
+            if bits:
+                assert traced[link][phase] == bits, (link, phase)
+    # ...and the trace saw nothing the transport didn't measure
+    for link, per in traced.items():
+        for phase, bits in per.items():
+            assert measured[link][phase] == bits, (link, phase)
+
+
+def test_drain_resets_and_is_json_clean(tracer):
+    rt = FourPartyRuntime(seed=1)
+    _program(rt)
+    chunk = tracer.drain()
+    assert chunk["label"] == "test"
+    assert chunk["events"], "no events traced"
+    import json
+    json.dumps(chunk)                    # plain data end to end
+    # drained: the next chunk starts empty
+    again = tracer.drain()
+    assert again["events"] == [] and again["link_bits"] == {}
+
+
+def test_span_taxonomy_covers_all_layers(tracer):
+    rt = FourPartyRuntime(seed=2)
+    _program(rt)
+    cats = {e["cat"] for e in tracer.drain()["events"]}
+    for expected in ("protocol", "wire.round", "wire.send", "kernel"):
+        assert expected in cats, (expected, cats)
+
+
+def test_protocol_spans_carry_prep_and_check_attribution(tracer):
+    rt = FourPartyRuntime(seed=3)
+    _program(rt)
+    spans = [e for e in tracer.drain()["events"]
+             if e["cat"] == "protocol"]
+    names = {e["name"] for e in spans}
+    assert {"share", "matmul", "relu", "reconstruct"} <= names
+    mm = next(e for e in spans if e["name"] == "matmul")
+    assert mm["args"]["prep"] == "inline"
+    assert mm["args"]["checks"] > 0      # malicious checks recorded
+
+
+def test_round_spans_carry_phase_index_bits(tracer):
+    rt = FourPartyRuntime(seed=4)
+    _program(rt)
+    rounds = [e for e in tracer.drain()["events"]
+              if e["cat"] == "wire.round"]
+    assert rounds
+    online = [e for e in rounds if e["args"]["phase"] == "online"]
+    assert [e["args"]["index"] for e in online] == list(range(len(online)))
+    assert all(e["args"]["bits"] > 0 for e in rounds)
+    # every analytic round has at least one traced scope; spans can
+    # exceed the analytic count because parallel-overlapped scopes
+    # max-merge in the tally but each emits its own span
+    per_phase = {p: sum(1 for e in rounds if e["args"]["phase"] == p)
+                 for p in ("offline", "online")}
+    for p in ("offline", "online"):
+        assert per_phase[p] >= rt.transport.rounds[p], (p, per_phase)
+
+
+# ---------------------------------------------------------------------------
+# Merging + metrics.
+# ---------------------------------------------------------------------------
+def _chunk(label, rank, epoch, events):
+    return {"label": label, "rank": rank, "epoch": epoch,
+            "events": events, "link_bits": {}}
+
+
+def test_merge_aligns_clocks_across_processes():
+    # same absolute instant, different perf_counter origins
+    a = _chunk("A", 0, 100.0, [{"ph": "i", "name": "x", "cat": "c",
+                                "ts": 5.0}])
+    b = _chunk("B", 1, 90.0, [{"ph": "i", "name": "y", "cat": "c",
+                               "ts": 15.0}])
+    doc = obs.merge_chunks([a, b, None])
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert {e["ts"] for e in evs} == {0.0}      # both at t=0, aligned
+    assert doc["metadata"]["ranks"] == [0, 1]
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M"}
+    assert names == {"A", "B"}
+
+
+def test_merge_spans_use_microseconds():
+    a = _chunk("A", 0, 0.0, [{"ph": "X", "name": "s", "cat": "c",
+                              "ts": 1.0, "dur": 0.002}])
+    doc = obs.merge_chunks([a])
+    span = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert span["dur"] == pytest.approx(2000.0)
+
+
+def test_merged_link_bits_takes_max_not_sum():
+    # replicated-program model: every rank carries the FULL per-link
+    # picture, so merging must not multiply it by four
+    a = _chunk("A", 0, 0.0, [])
+    b = _chunk("B", 1, 0.0, [])
+    a["link_bits"] = {"0->1": {"online": 128}}
+    b["link_bits"] = {"0->1": {"online": 128}, "2->3": {"offline": 64}}
+    merged = obs.merged_link_bits([a, b])
+    assert merged == {"0->1": {"online": 128}, "2->3": {"offline": 64}}
+
+
+def test_metrics_snapshot(tracer):
+    rt = FourPartyRuntime(seed=5)
+    _program(rt)
+    tracer.counter("depth", 3)
+    tracer.counter("depth", 1)
+    doc = obs.merge_chunks([tracer.drain()])
+    snap = obs.metrics_snapshot(doc)
+    assert snap["rounds"]["online"]["count"] == rt.transport.rounds["online"]
+    assert snap["rounds"]["online"]["wall_ms"] > 0
+    assert snap["sends"]["online"]["bits"] == \
+        rt.transport.phase_bits["online"]
+    assert snap["spans"]["protocol"]["count"] >= 4
+    hist = snap["spans"]["protocol"]["hist"]
+    assert sum(hist["counts"]) == snap["spans"]["protocol"]["count"]
+    assert snap["counters"]["depth"] == {"last": 1, "max": 3}
+
+
+def test_round_wall_ms(tracer):
+    rt = FourPartyRuntime(seed=6)
+    _program(rt)
+    doc = obs.merge_chunks([tracer.drain()])
+    walls = obs.round_wall_ms(doc)
+    (pid,) = walls.keys()
+    assert walls[pid]["online"] > 0
+
+
+# ---------------------------------------------------------------------------
+# The timed/stopwatch consolidation helpers (serve-layer bookkeeping).
+# ---------------------------------------------------------------------------
+class _Stats:
+    compute_s = 0.0
+    online_compute_s = 0.0
+
+
+def test_timed_accumulates_multiple_attrs(tracer):
+    st = _Stats()
+    with obs.timed(st, "compute_s", "online_compute_s", span="work"):
+        pass
+    assert st.compute_s > 0
+    assert st.compute_s == st.online_compute_s
+    before = st.compute_s
+    with obs.timed(st, "compute_s"):
+        pass
+    assert st.compute_s > before         # accumulates, not overwrites
+    names = [e["name"] for e in tracer.drain()["events"]]
+    assert names == ["work"]             # span=None records nothing
+
+
+def test_timed_without_tracer_still_accumulates():
+    prev = obs.install_tracer(obs.NULL_TRACER)
+    try:
+        st = _Stats()
+        with obs.timed(st, "compute_s", span="work"):
+            pass
+        assert st.compute_s > 0
+    finally:
+        obs.install_tracer(prev)
+
+
+def test_stopwatch():
+    with obs.stopwatch() as sw:
+        pass
+    assert sw.s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# The traced 4-process cluster (acceptance path, minus the dealer).
+# ---------------------------------------------------------------------------
+def _cluster_program(rt, rank):
+    return np.asarray(_program(rt))
+
+
+def test_cluster_trace_covers_all_ranks_and_matches_per_link():
+    from repro.runtime.net.cluster import PartyCluster
+
+    with PartyCluster(timeout=90.0, trace=True) as cluster:
+        results = cluster.submit(_cluster_program, seed=11)
+        assert cluster.trace
+        chunks = cluster.trace_chunks
+        assert len(chunks) == 4
+        assert sorted(c["rank"] for c in chunks) == [0, 1, 2, 3]
+        # trace consistency on the real wire: every rank's traced bytes
+        # equal the full per-link accounting (replicated-program model)
+        for r in results:
+            chunk = r.trace
+            assert chunk is not None and chunk["rank"] == r.rank
+            traced = chunk["link_bits"]
+            for (s, d), per in r.per_link.items():
+                for phase, bits in per.items():
+                    if bits:
+                        assert traced[f"{s}->{d}"][phase] == bits
+            assert r.prep_wait_s == 0.0  # no prep on this path
+        doc = cluster.merged_trace()
+        pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] != "M"}
+        assert len(pids) == 4
+        snap = obs.metrics_snapshot(doc)
+        assert snap["rounds"]["online"]["count"] > 0
+        assert len(cluster.task_walls) == 1 and cluster.task_walls[0] > 0
+
+
+def test_cluster_untraced_ships_no_chunks():
+    from repro.runtime.net.cluster import PartyCluster
+
+    with PartyCluster(timeout=90.0) as cluster:
+        results = cluster.submit(_cluster_program, seed=11)
+        assert cluster.trace_chunks == []
+        assert all(r.trace is None for r in results)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-x", "-q"]))

@@ -1,0 +1,160 @@
+"""RoundFrames parallel/branch bookkeeping edge cases (runtime/transport.py).
+
+The frames are the transport-side twin of CostTally's round algebra:
+parallel scopes take the max over their branches, branch scopes sequence
+(sum), and amounts route to the nearest enclosing frame capturing their
+phase.  These invariants were previously only exercised indirectly
+through whole protocols; here they are pinned directly.
+"""
+import pytest
+
+from repro.runtime.transport import PHASES, LocalTransport, RoundFrames
+
+
+def test_flat_adds_accumulate():
+    fr = RoundFrames()
+    fr.add("online", 1)
+    fr.add("online", 2)
+    fr.add("offline", 5)
+    assert fr.total == {"offline": 5, "online": 3}
+
+
+def test_parallel_keeps_max_of_branches():
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            fr.add("online", 3)
+        with fr.branch():
+            fr.add("online", 1)
+    assert fr.total["online"] == 3
+
+
+def test_branch_sequences_inside_itself():
+    # one branch doing two sequential rounds counts both
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            fr.add("online", 1)
+            fr.add("online", 1)
+        with fr.branch():
+            fr.add("online", 1)
+    assert fr.total["online"] == 2
+
+
+def test_nested_branch_inside_parallel_inside_branch():
+    # branch { 2 rounds } || branch { parallel { 3 || 1 } } -> max(2, 3)
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            fr.add("online", 2)
+        with fr.branch():
+            with fr.parallel():
+                with fr.branch():
+                    fr.add("online", 3)
+                with fr.branch():
+                    fr.add("online", 1)
+    assert fr.total["online"] == 3
+
+
+def test_sequential_parallels_sum():
+    fr = RoundFrames()
+    for amount in (2, 3):
+        with fr.parallel():
+            with fr.branch():
+                fr.add("online", amount)
+    assert fr.total["online"] == 5
+
+
+def test_empty_frames_contribute_nothing():
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            pass
+        with fr.branch():
+            pass
+    with fr.branch():
+        pass
+    assert fr.total == {p: 0 for p in PHASES}
+
+
+def test_zero_amounts_do_not_fold_out():
+    # fold-out skips zero cells: an explicit add(phase, 0) must leave the
+    # totals untouched (a round scope that moved nothing counts nothing)
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            fr.add("online", 0)
+    assert fr.total["online"] == 0
+
+
+def test_phase_filtered_parallel_bypasses_other_phase():
+    # parallel(phases=("online",)): offline adds skip the frame entirely
+    # and land on the totals (sequential), while online adds max-merge --
+    # exactly how offline prep traffic behaves inside an online-overlap
+    # scope
+    fr = RoundFrames()
+    with fr.parallel(phases=("online",)):
+        with fr.branch():
+            fr.add("online", 2)
+            fr.add("offline", 4)
+        with fr.branch():
+            fr.add("online", 1)
+            fr.add("offline", 4)
+    assert fr.total["online"] == 2
+    assert fr.total["offline"] == 8
+
+
+def test_fold_out_ordering_inner_before_outer():
+    # the inner parallel folds its max into the enclosing branch BEFORE
+    # the outer parallel compares branches: [para{4||1}; 1] || [3] ->
+    # max(4+1, 3) = 5, not max(4, 1, 1, 3)
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            with fr.parallel():
+                with fr.branch():
+                    fr.add("online", 4)
+                with fr.branch():
+                    fr.add("online", 1)
+            fr.add("online", 1)
+        with fr.branch():
+            fr.add("online", 3)
+    assert fr.total["online"] == 5
+
+
+def test_add_outside_any_frame_during_stack_unwound():
+    # after scopes exit, the stack is empty again: later adds are flat
+    fr = RoundFrames()
+    with fr.parallel():
+        with fr.branch():
+            fr.add("online", 7)
+    fr.add("online", 1)
+    assert fr.total["online"] == 8
+
+
+def test_transport_round_uses_frames():
+    # a transport-level sanity pin: two parallel branches each moving one
+    # round overlap to ONE counted round, and bits always sum
+    tp = LocalTransport()
+    import numpy as np
+    payload = np.zeros(4, dtype=np.uint64)
+    with tp.parallel():
+        with tp.branch():
+            with tp.round("online"):
+                tp.send(0, 1, payload, tag="a", nbits=64, phase="online")
+        with tp.branch():
+            with tp.round("online"):
+                tp.send(2, 3, payload, tag="b", nbits=64, phase="online")
+    assert tp.rounds["online"] == 1
+    assert tp.bits("online") == 2 * 4 * 64
+
+
+def test_empty_round_scope_counts_zero_rounds():
+    tp = LocalTransport()
+    with tp.round("online"):
+        pass
+    assert tp.rounds["online"] == 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-x", "-q"]))
