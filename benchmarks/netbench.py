@@ -58,15 +58,28 @@ socket record (``measured_online_ms`` from the wire-round spans,
 Chrome trace-event timeline to ``--trace-out`` (open in ui.perfetto.dev;
 smoke-checked in CI by scripts/check_trace.py).
 
+``--metrics`` exercises the LIVE metrics plane (the always-on
+``MetricsRegistry`` + per-daemon HTTP exporters): every in-process block
+asserts the registry's per-link byte counters equal ``per_link()``
+exactly, every socket block asserts the same over the daemons'
+``PartyResult.metrics`` snapshots, each BENCH record embeds a compact
+``metrics`` summary, and the ``--live`` block runs a ``HealthMonitor``
+scraping all five exporters (4 ranks + dealer) MID-TRAINING, writing the
+merged cluster health doc to ``--health-out`` (gated in CI by
+scripts/check_health.py; regressions vs the committed baseline by
+scripts/bench_compare.py).
+
 One ``BENCH {json}`` line per block on stdout; the aggregate goes to
 ``--out`` (default netbench.json) for CI artifact upload.
 
     PYTHONPATH=src python -m benchmarks.netbench [--quick] [--socket]
         [--live] [--trace [--trace-out trace.json]]
+        [--metrics [--health-out health.json]]
 """
 import argparse
 import json
 import math
+import os
 import sys
 import time
 from collections import defaultdict
@@ -74,6 +87,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro import obs
+from repro.obs import health as obs_health
 from repro.core.ring import RING64
 from repro.offline import OnlinePrep, PrepPipeline, deal, run_online
 from repro.runtime import FourPartyRuntime, LocalTransport
@@ -88,6 +102,12 @@ _SOCK_W2 = _rng.randn(6, 3) * 0.4
 _SOCK_X = _rng.randn(4, 8)
 _SOCK_SEED = 7
 _SOCK_SESSIONS = 3
+
+
+def _mkparent(path):
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
 
 
 def _enc(x):
@@ -223,13 +243,56 @@ def _stacked():
     return lan_tp, wan_tp
 
 
-def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
+def _nonzero_links(per_link) -> dict:
+    """``per_link()`` restricted to its non-zero cells -- the exact shape
+    ``MetricsRegistry.link_bits()`` reports (counters only exist for links
+    that carried bytes)."""
+    out = {}
+    for link, per in per_link.items():
+        cell = {ph: b for ph, b in per.items() if b}
+        if cell:
+            out[link] = cell
+    return out
+
+
+def _metrics_summary(snap) -> dict:
+    """Compact registry totals embedded per BENCH record (--metrics)."""
+    return {
+        "wire_bits": obs.snapshot_total(snap, "trident_wire_bits_total"),
+        "wire_msgs": obs.snapshot_total(snap, "trident_wire_msgs_total"),
+        "round_scopes": obs.snapshot_total(
+            snap, "trident_wire_round_scopes_total"),
+        "protocol_calls": obs.snapshot_total(
+            snap, "trident_protocol_calls_total"),
+        "kernel_launches": obs.snapshot_total(
+            snap, "trident_kernel_launches_total"),
+    }
+
+
+def run_block(name, fn, seed=0, kernel_backend="jnp",
+              metrics: bool = False) -> tuple:
     """Returns (rec, interleaved_out).  ``kernel_backend`` routes every
     party's local compute ("jnp" or "pallas" -- bit-identical, so all the
     exact-split/wire assertions hold unchanged in both modes); the rec's
     ``local_compute_{offline,online}_ms`` are the measured per-phase local
     compute wall-clock of the split runs, printed next to the modeled
-    LAN/WAN wire times -- the compute-vs-wire breakdown."""
+    LAN/WAN wire times -- the compute-vs-wire breakdown.
+
+    ``metrics=True`` runs the registry-vs-transport contract in process:
+    a fresh ``MetricsRegistry`` is installed before each sub-run's
+    transports are built (they capture the registry at construction), the
+    registry's per-link byte counters are asserted EQUAL to ``per_link()``
+    after the run, and the rec carries a compact ``metrics`` summary."""
+    prev_reg = obs.install_registry(obs.MetricsRegistry(
+        f"netbench-{name}")) if metrics else None
+    try:
+        return _run_block_inner(name, fn, seed, kernel_backend, metrics)
+    finally:
+        if metrics:
+            obs.install_registry(prev_reg)
+
+
+def _run_block_inner(name, fn, seed, kernel_backend, metrics) -> tuple:
     # ---- interleaved end-to-end ------------------------------------------
     lan_tp, wan_tp = _stacked()
     rt = FourPartyRuntime(RING64, seed=seed, transport=wan_tp,
@@ -238,6 +301,15 @@ def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
     interleaved_out = fn(rt)
     compute_s = time.perf_counter() - t0
     totals = rt.transport.totals()
+    if metrics:
+        # the always-on registry saw every byte the transport measured
+        reg = obs.get_registry()
+        assert reg.link_bits() == _nonzero_links(rt.transport.per_link()), \
+            (name, reg.link_bits(), rt.transport.per_link())
+        interleaved_metrics = _metrics_summary(reg.snapshot())
+        # fresh registry for the split runs below: their transports are
+        # new constructions, so their counters start from zero too
+        obs.install_registry(obs.MetricsRegistry(f"netbench-{name}-split"))
     on_r = totals["online"]["rounds"]
     rec = {
         "bench": "netbench",
@@ -267,6 +339,16 @@ def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
     lan_o, wan_o = _stacked()
     online_out, orep = run_online(fn, store, ring=RING64, transport=wan_o,
                                   runtime_kwargs=rt_kw)
+    if metrics:
+        # the split registry accumulated BOTH split transports (deal +
+        # online-only): its counters must equal their merged per-link view
+        merged = _nonzero_links(wan_d.per_link())
+        for link, per in _nonzero_links(wan_o.per_link()).items():
+            cell = merged.setdefault(link, {})
+            for ph, b in per.items():
+                cell[ph] = cell.get(ph, 0) + b
+        assert obs.get_registry().link_bits() == merged, \
+            (name, obs.get_registry().link_bits(), merged)
 
     # the split must be exact: same online wire cost, zero offline bytes,
     # and the same modeled online clock the interleaved run integrated
@@ -295,6 +377,8 @@ def run_block(name, fn, seed=0, kernel_backend="jnp") -> tuple:
         "local_compute_offline_ms": drep.wall_s * 1e3,
         "local_compute_online_ms": orep.wall_s * 1e3,
     })
+    if metrics:
+        rec["metrics"] = interleaved_metrics
     return rec, interleaved_out
 
 
@@ -334,6 +418,41 @@ def _assert_trace_consistent(results, strict: bool = True) -> None:
                 (r.rank, phase, traced_total, measured_total)
 
 
+def _assert_metrics_consistent(per_task_results, strict: bool = True) -> None:
+    """The metrics twin of ``_assert_trace_consistent``, over the real
+    socket mesh: every rank's CUMULATIVE registry byte counters (the final
+    task's ``PartyResult.metrics`` snapshot) must equal the sum of its
+    per-task ``per_link()`` deltas EXACTLY.  ``strict=False`` confines the
+    check to the online phase, for programs that also run process-local
+    transports (the pipelined block's in-daemon dealer counts its local
+    deals on the same daemon registry, off the mesh)."""
+    by_rank = defaultdict(list)
+    for results in per_task_results:
+        for r in results:
+            by_rank[r.rank].append(r)
+    for rank, rs in sorted(by_rank.items()):
+        snap = rs[-1].metrics
+        assert snap is not None, f"P{rank}: no metrics snapshot"
+        got = obs.snapshot_link_bits(snap)
+        want: dict = defaultdict(lambda: defaultdict(int))
+        for r in rs:
+            for link, per in r.per_link.items():
+                for phase, bits in per.items():
+                    if bits:
+                        want[link][phase] += bits
+        # every byte the transport measured is on a registry counter
+        for link, per in want.items():
+            for phase, bits in per.items():
+                assert got.get(link, {}).get(phase) == bits, \
+                    (rank, link, phase, bits, got)
+        phases = ("offline", "online") if strict else ("online",)
+        for phase in phases:
+            got_total = sum(per.get(phase, 0) for per in got.values())
+            want_total = sum(per.get(phase, 0) for per in want.values())
+            assert got_total == want_total, \
+                (rank, phase, got_total, want_total)
+
+
 def _attribution(rec, results, modeled_online_s, sessions=1,
                  strict: bool = True) -> list:
     """The measured-vs-modeled pass: fold the ranks' traced round wall
@@ -357,13 +476,19 @@ def _attribution(rec, results, modeled_online_s, sessions=1,
     return chunks
 
 
-def run_socket_block(timeout: float = 300.0, trace: bool = False) -> tuple:
+def run_socket_block(timeout: float = 300.0, trace: bool = False,
+                     metrics: bool = False) -> tuple:
     t0 = time.perf_counter()
     with PartyCluster(timeout=timeout, net_model=WAN,
-                      trace=trace) as cluster:
+                      trace=trace, metrics=metrics) as cluster:
         results = cluster.submit(_socket_nn_program, seed=_SOCK_SEED,
                                  timeout=timeout)
         trace = cluster.trace           # may have come from TRIDENT_TRACE
+        metrics = cluster.metrics       # may have come from TRIDENT_METRICS
+        if metrics:
+            _assert_metrics_consistent([results])
+            health = cluster.health()
+            assert health["healthy"], health["probes"]
     wall = time.perf_counter() - t0
     ref = results[0]
     assert all(r.totals == ref.totals for r in results)
@@ -383,21 +508,30 @@ def run_socket_block(timeout: float = 300.0, trace: bool = False) -> tuple:
         "launch_wall_s": wall,
         "aborted": False,
     }
+    if metrics:
+        rec["metrics"] = _metrics_summary(results[0].metrics)
     chunks = _attribution(rec, results, ref.modeled_s["online"]) \
         if trace else []
     return rec, chunks
 
 
 def run_socket_pipelined_block(timeout: float = 300.0,
-                               trace: bool = False) -> tuple:
+                               trace: bool = False,
+                               metrics: bool = False) -> tuple:
     """The pipelined 4-process backend: background dealers + online-only
     consumers over the real TCP mesh; ``online_only_ms`` is measured
     per-batch online wall-clock (max over parties)."""
     t0 = time.perf_counter()
-    with PartyCluster(timeout=timeout, trace=trace) as cluster:
+    with PartyCluster(timeout=timeout, trace=trace,
+                      metrics=metrics) as cluster:
         results = cluster.submit(_socket_pipelined_program,
                                  seed=_SOCK_SEED, timeout=timeout)
         trace = cluster.trace
+        metrics = cluster.metrics
+        if metrics:
+            # strict=False: the in-daemon dealers count their local deal
+            # traffic on the same registry, off the mesh
+            _assert_metrics_consistent([results], strict=False)
     wall = time.perf_counter() - t0
     ref = results[0]
     assert all(r.totals == ref.totals for r in results)
@@ -430,6 +564,8 @@ def run_socket_pipelined_block(timeout: float = 300.0,
         "launch_wall_s": wall,
         "aborted": False,
     }
+    if metrics:
+        rec["metrics"] = _metrics_summary(results[0].metrics)
     chunks = _attribution(rec, results,
                           float(ref.result["wan_online_s"]),
                           sessions=n, strict=False) if trace else []
@@ -437,7 +573,8 @@ def run_socket_pipelined_block(timeout: float = 300.0,
 
 
 def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
-                          trace: bool = False) -> tuple:
+                          trace: bool = False,
+                          metrics: bool = False) -> tuple:
     """The live-streamed 4-process training backend: the cluster's
     PrepBank starts EMPTY and a ``DealerDaemon`` streams step k's session
     over the per-rank control channel while step k-1 runs online.  The
@@ -468,13 +605,20 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
         ref.append((dict(ref_p), loss))
 
     t0 = time.perf_counter()
+    health = None
     with PartyCluster(live_prep=True, timeout=timeout,
-                      trace=trace) as cluster:
+                      trace=trace, metrics=metrics) as cluster:
         with SGD.attach_live_dealer(cluster, task, params0,
                                     data.batch(0, batch), base_seed=seed,
                                     ahead=2, total=steps) as dealer:
+            metrics = cluster.metrics
+            # scrape all five exporters (4 ranks + dealer) MID-RUN: the
+            # monitor polls while training steps execute, and a probe that
+            # fires at any point fails the final health doc
+            monitor = obs_health.HealthMonitor(
+                cluster, dealer=dealer, interval=0.2) if metrics else None
             sgd = SGD.ClusterSGD(cluster, task, base_seed=seed,
-                                 prep="live")
+                                 prep="live", dealer=dealer)
             p = dict(params0)
             for step in range(steps):
                 p, loss, abort = sgd.step_fn(p, step,
@@ -486,6 +630,9 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
                     assert np.array_equal(p[k], ref[step][0][k]), (step, k)
             offline_bits = sgd.offline_bits_on_mesh()
             results = sgd.results
+            if metrics:
+                _assert_metrics_consistent(results)
+                health = monitor.stop()
         # party chunks per step + the dealer's per-session chunks: the
         # merged timeline shows deal(k) overlapping online step k-1
         chunks = ([*cluster.trace_chunks, *dealer.trace_chunks]
@@ -509,6 +656,8 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
         "bit_identical": True,
         "aborted": False,
     }
+    if metrics:
+        rec["metrics"] = _metrics_summary(results[-1][0].metrics)
     if chunks:
         labels = {c["label"] for c in chunks}
         assert "dealer" in labels, labels     # the dealer made the timeline
@@ -522,15 +671,17 @@ def run_socket_live_block(timeout: float = 300.0, steps: int = 3,
                 * 1e3,
             "trace_events": sum(len(c["events"]) for c in chunks),
         })
-    return rec, chunks
+    return rec, chunks, health
 
 
 def run(quick: bool = True, socket: bool = False, out: str | None = None,
         timeout: float = 300.0, train: bool = True,
         train_only: bool = False, live: bool = False,
-        trace: bool = False, trace_out: str | None = None):
+        trace: bool = False, trace_out: str | None = None,
+        metrics: bool = False, health_out: str | None = None):
     records = []
     trace = trace or obs.tracing_enabled()
+    metrics = metrics or obs.metrics_enabled()
     trace_chunks: list = []
     print("netbench: measured wire traffic + modeled LAN/WAN wall-clock "
           "(end-to-end AND online-only)")
@@ -546,12 +697,13 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
     # breakdown for BOTH backends, with bit-identity asserted)
     both = ("mlp_inference", "train_logreg", "train_nn")
     for name, fn in blocks:
-        rec, jout = run_block(name, fn)
+        rec, jout = run_block(name, fn, metrics=metrics)
         records.append(rec)
         print("BENCH " + json.dumps(rec))
         if not any(name.startswith(p) for p in both):
             continue
-        prec, pout = run_block(name, fn, kernel_backend="pallas")
+        prec, pout = run_block(name, fn, kernel_backend="pallas",
+                               metrics=metrics)
         # the backends are bit-identical: same outputs, same wire costs
         if jout is not None:
             assert np.array_equal(np.asarray(jout), np.asarray(pout)), \
@@ -566,20 +718,36 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
         if "relu" in rec["block"] or "sigmoid" in rec["block"]:
             assert rec["wan_online_round_frac"] > 0.9, rec
     if socket:
-        rec, chunks = run_socket_block(timeout=timeout, trace=trace)
+        rec, chunks = run_socket_block(timeout=timeout, trace=trace,
+                                       metrics=metrics)
         records.append(rec)
         trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
         rec, chunks = run_socket_pipelined_block(timeout=timeout,
-                                                 trace=trace)
+                                                 trace=trace,
+                                                 metrics=metrics)
         records.append(rec)
         trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
     if live:
-        rec, chunks = run_socket_live_block(timeout=timeout, trace=trace)
+        rec, chunks, health = run_socket_live_block(timeout=timeout,
+                                                    trace=trace,
+                                                    metrics=metrics)
         records.append(rec)
         trace_chunks.extend(chunks)
         print("BENCH " + json.dumps(rec))
+        if health is not None:
+            # the live block's merged health doc -- every rank + the
+            # dealer healthy, no probe ever fired -- is the CI gate
+            # (scripts/check_health.py)
+            assert health["healthy"], health
+            path = health_out or "cluster_health.json"
+            _mkparent(path)
+            with open(path, "w") as f:
+                json.dump(health, f, indent=2)
+            print(f"[netbench] wrote cluster health doc to {path} "
+                  f"(healthy={health['healthy']}, "
+                  f"scrapes={health['scrapes']})")
     if trace and trace_chunks:
         path = trace_out or "netbench_trace.json"
         doc = obs.write_chrome_trace(path, trace_chunks)
@@ -590,6 +758,7 @@ def run(quick: bool = True, socket: bool = False, out: str | None = None,
         print("TRACE " + json.dumps({"rounds": snap["rounds"],
                                      "sends": snap["sends"]}))
     if out:
+        _mkparent(out)
         with open(out, "w") as f:
             json.dump({"bench": "netbench", "quick": quick,
                        "records": records}, f, indent=2)
@@ -620,12 +789,23 @@ def main():
     ap.add_argument("--trace-out", default="netbench_trace.json",
                     help="merged Perfetto-viewable trace path (with "
                          "--trace; default netbench_trace.json)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="live metrics plane (TRIDENT_METRICS=1 "
+                         "equivalent): per-daemon HTTP exporters, "
+                         "registry-vs-transport byte consistency asserts, "
+                         "a compact metrics summary per BENCH record, and "
+                         "(with --live) the mid-run cluster health doc "
+                         "to --health-out")
+    ap.add_argument("--health-out", default="cluster_health.json",
+                    help="cluster health doc path (with --metrics --live; "
+                         "default cluster_health.json)")
     ap.add_argument("--out", default="netbench.json")
     ap.add_argument("--timeout", type=float, default=300.0)
     args = ap.parse_args()
     run(quick=args.quick, socket=args.socket, out=args.out,
         timeout=args.timeout, train=args.train, train_only=args.train_only,
-        live=args.live, trace=args.trace, trace_out=args.trace_out)
+        live=args.live, trace=args.trace, trace_out=args.trace_out,
+        metrics=args.metrics, health_out=args.health_out)
     return 0
 
 

@@ -1,0 +1,160 @@
+#!/usr/bin/env python
+"""Compare a fresh netbench run against the committed baseline -- the
+bench-regression gate.
+
+Two regimes, keyed by what the number IS (docs/OBSERVABILITY.md):
+
+  * **modeled/wire metrics are deterministic** -- measured bits, rounds,
+    prep entries (ints/bools) must match the baseline EXACTLY, and the
+    modeled LAN/WAN clocks (``lan_*``/``wan_*``/``modeled_*`` floats,
+    pure arithmetic over the wire tallies) must match to 1e-6 relative.
+    Any drift here is a protocol change, not noise, and fails the gate.
+  * **measured wall-clocks are noisy** -- ``*_ms``/``*_s`` timings vary
+    severalfold across CI runners, so a measured key regresses only if
+    it exceeds ``baseline * tol`` (default 5x) AND the absolute growth
+    clears a floor (250 ms for ``*_ms`` keys, 0.25 s for ``*_s``): the
+    multiplicative bound catches order-of-magnitude regressions, the
+    floor keeps microsecond-scale jitter from tripping the multiplier.
+
+A block or key present in the baseline but missing from the fresh run is
+a regression (coverage must not silently shrink); keys only in the fresh
+run are reported as notes.  ``--update`` rewrites the baseline from the
+fresh run instead of comparing.
+
+    python scripts/bench_compare.py netbench.json \
+        [--baseline benchmarks/baselines/netbench_baseline.json]
+        [--tol 5.0] [--summary bench_diff.json] [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = (Path(__file__).resolve().parent.parent
+                    / "benchmarks" / "baselines"
+                    / "netbench_baseline.json")
+DEFAULT_TOL = 5.0
+
+# identity / free-form keys: never compared
+SKIP_KEYS = {"bench", "block", "kernel_backend", "per_step_ms", "metrics",
+             "health", "frames_sent", "trace_events"}
+MODELED_PREFIXES = ("lan_", "wan_", "modeled_")
+
+
+def _block_key(rec: dict) -> str:
+    backend = rec.get("kernel_backend", "")
+    return f"{rec['block']}[{backend}]" if backend else rec["block"]
+
+
+def _index(doc: dict) -> dict:
+    return {_block_key(rec): rec for rec in doc["records"]}
+
+
+def _floor_for(key: str) -> float:
+    if key.endswith("_ms"):
+        return 250.0
+    return 0.25                          # *_s and anything else measured
+
+
+def compare_value(key: str, base, fresh, tol: float) -> dict | None:
+    """One key's verdict: None if fine, else a regression dict."""
+    if key in SKIP_KEYS or isinstance(base, (list, dict, str)):
+        return None
+    if isinstance(base, bool) or isinstance(base, int):
+        if fresh != base:
+            return {"key": key, "kind": "exact", "base": base,
+                    "fresh": fresh}
+        return None
+    if any(key.startswith(p) for p in MODELED_PREFIXES):
+        if not math.isclose(fresh, base, rel_tol=1e-6, abs_tol=1e-12):
+            return {"key": key, "kind": "modeled", "base": base,
+                    "fresh": fresh}
+        return None
+    # measured wall-clock: multiplicative bound + absolute floor
+    floor = _floor_for(key)
+    if fresh > base * tol and (fresh - base) > floor:
+        return {"key": key, "kind": "measured", "base": base,
+                "fresh": fresh, "tol": tol, "floor": floor}
+    return None
+
+
+def compare(base_doc: dict, fresh_doc: dict,
+            tol: float = DEFAULT_TOL) -> dict:
+    """Full comparison: {"regressions": [...], "notes": [...]}."""
+    base_idx, fresh_idx = _index(base_doc), _index(fresh_doc)
+    regressions: list = []
+    notes: list = []
+    for block, base_rec in base_idx.items():
+        fresh_rec = fresh_idx.get(block)
+        if fresh_rec is None:
+            regressions.append({"block": block, "key": None,
+                                "kind": "missing_block"})
+            continue
+        for key, base_val in base_rec.items():
+            if key not in fresh_rec:
+                if key not in SKIP_KEYS:
+                    regressions.append({"block": block, "key": key,
+                                        "kind": "missing_key"})
+                continue
+            verdict = compare_value(key, base_val, fresh_rec[key], tol)
+            if verdict is not None:
+                verdict["block"] = block
+                regressions.append(verdict)
+        extra = set(fresh_rec) - set(base_rec) - SKIP_KEYS
+        if extra:
+            notes.append({"block": block, "extra_keys": sorted(extra)})
+    for block in fresh_idx.keys() - base_idx.keys():
+        notes.append({"block": block, "extra_block": True})
+    return {"regressions": regressions, "notes": notes,
+            "blocks_compared": len(base_idx.keys() & fresh_idx.keys()),
+            "tol": tol}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="netbench --out JSON from this run")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline netbench JSON")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="measured-wall multiplicative tolerance "
+                         "(default 5.0)")
+    ap.add_argument("--summary", default=None,
+                    help="write the diff summary JSON here (CI artifact)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh run")
+    args = ap.parse_args()
+
+    if args.update:
+        Path(args.baseline).parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"[bench_compare] baseline updated from {args.fresh}")
+        return 0
+
+    with open(args.baseline) as fh:
+        base_doc = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh_doc = json.load(fh)
+    diff = compare(base_doc, fresh_doc, tol=args.tol)
+    if args.summary:
+        with open(args.summary, "w") as fh:
+            json.dump(diff, fh, indent=2)
+    for note in diff["notes"]:
+        print(f"[bench_compare] note: {json.dumps(note)}")
+    if diff["regressions"]:
+        for reg in diff["regressions"]:
+            print(f"[bench_compare] REGRESSION: {json.dumps(reg)}")
+        print(f"[bench_compare] FAIL: {len(diff['regressions'])} "
+              f"regression(s) across {diff['blocks_compared']} blocks "
+              f"(tol {args.tol}x)")
+        return 1
+    print(f"[bench_compare] OK: {diff['blocks_compared']} blocks within "
+          f"tolerance (tol {args.tol}x, modeled exact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

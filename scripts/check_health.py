@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Gate a cluster health document (netbench ``--metrics --live``) in CI.
+
+The doc is the ``HealthMonitor``'s final scrape of all five metrics
+exporters (four party daemons + the dealer) taken DURING a live-prep
+training run, annotated with every probe that ever fired mid-run.  The
+gate requires:
+
+  * ``healthy`` is true;
+  * all four ranks were alive and their exporters answered the final
+    scrape;
+  * no probe fired at any point during the run (``probes`` AND
+    ``probes_fired_ever`` empty) -- a transient round stall or dealer
+    lag fails CI even if the last scrape looked clean;
+  * with ``--expect-dealer``: the dealer entry is present, was scraped
+    at least once (it has a port), and finished its quota (``done``).
+
+    python scripts/check_health.py cluster_health.json [--expect-dealer]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(path: str, expect_dealer: bool = False) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc.get("healthy") is True, \
+        f"{path}: cluster unhealthy -- probes {doc.get('probes')}, " \
+        f"ever {doc.get('probes_fired_ever')}"
+    ranks = doc.get("ranks", {})
+    # JSON round-trip stringifies the rank keys
+    assert sorted(ranks) == ["0", "1", "2", "3"], \
+        f"{path}: expected entries for all four ranks, got {sorted(ranks)}"
+    for rank, entry in sorted(ranks.items()):
+        assert entry["alive"], f"{path}: rank {rank} not alive"
+        assert entry["scrape_ok"], \
+            f"{path}: rank {rank}'s exporter did not answer " \
+            f"(port {entry.get('port')})"
+    assert not doc.get("probes"), f"{path}: probes fired: {doc['probes']}"
+    assert not doc.get("probes_fired_ever"), \
+        f"{path}: probes fired mid-run: {doc['probes_fired_ever']}"
+    assert doc.get("scrapes", 0) > 0, \
+        f"{path}: the monitor never scraped mid-run"
+    dealer = doc.get("dealer")
+    if expect_dealer:
+        assert dealer is not None, f"{path}: no dealer entry"
+        assert dealer.get("port") is not None, \
+            f"{path}: the dealer never published its exporter port"
+        assert dealer.get("done"), \
+            f"{path}: dealer did not finish its quota ({dealer})"
+    return {"ranks": len(ranks), "scrapes": doc.get("scrapes", 0),
+            "dealer": dealer}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("health", help="cluster health JSON "
+                                   "(netbench --metrics --live)")
+    ap.add_argument("--expect-dealer", action="store_true",
+                    help="require a scraped, finished dealer entry too")
+    args = ap.parse_args()
+    info = check(args.health, expect_dealer=args.expect_dealer)
+    print(f"[check_health] OK: {args.health} -- {info['ranks']} ranks "
+          f"healthy, {info['scrapes']} mid-run scrapes, dealer "
+          f"{'present' if info['dealer'] else 'absent'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

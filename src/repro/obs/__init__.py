@@ -1,12 +1,35 @@
-"""repro.obs -- the observability plane (tracing + metrics).
+"""repro.obs -- the observability plane (tracing + live metrics).
 
-Off by default; ``TRIDENT_TRACE=1`` (or ``PartyCluster(trace=True)`` /
-``netbench --trace``) turns every instrumented seam into span/instant
-events that merge into one Perfetto-viewable cluster timeline.  See
-docs/OBSERVABILITY.md for the span taxonomy and capture workflow.
+Two halves:
+
+  * **Tracing** (off by default; ``TRIDENT_TRACE=1`` /
+    ``PartyCluster(trace=True)`` / ``netbench --trace``): every
+    instrumented seam records span/instant events that merge into one
+    Perfetto-viewable cluster timeline.
+  * **Live metrics** (always on): the same seams update a process-local
+    ``MetricsRegistry`` -- counters, gauges, fixed-edge histograms --
+    unconditionally; ``TRIDENT_METRICS=1`` / ``PartyCluster(metrics=True)``
+    additionally serves each daemon's registry over a tiny HTTP exporter,
+    and ``health.cluster_health`` scrapes all five into one health doc.
+
+See docs/OBSERVABILITY.md for the span/metric taxonomy and workflows.
 """
 from repro.obs.merge import merge_chunks, merged_link_bits, write_chrome_trace
 from repro.obs.metrics import metrics_snapshot, round_wall_ms
+from repro.obs.registry import (
+    METRICS_ENV,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    install_registry,
+    metrics_enabled,
+    snapshot_link_bits,
+    snapshot_total,
+    snapshot_updated,
+    snapshot_value,
+)
 from repro.obs.tracer import (
     NULL_TRACER,
     RECV_SPAN_MIN_S,
@@ -24,6 +47,11 @@ from repro.obs.tracer import (
 )
 
 __all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "METRICS_ENV",
+    "MetricsRegistry",
     "NULL_TRACER",
     "NullTracer",
     "RECV_SPAN_MIN_S",
@@ -31,12 +59,19 @@ __all__ = [
     "TRACE_ENV",
     "Tracer",
     "ensure_tracer",
+    "get_registry",
     "get_tracer",
+    "install_registry",
     "install_tracer",
     "merge_chunks",
     "merged_link_bits",
+    "metrics_enabled",
     "metrics_snapshot",
     "round_wall_ms",
+    "snapshot_link_bits",
+    "snapshot_total",
+    "snapshot_updated",
+    "snapshot_value",
     "stopwatch",
     "timed",
     "traced_protocol",

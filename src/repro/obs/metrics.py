@@ -29,10 +29,13 @@ def _histogram(durs_us) -> dict:
 
 
 def round_wall_ms(doc, pid=None) -> dict:
-    """Measured wall time spent inside transport round scopes, per phase
-    and per process: {pid: {phase: ms}}.  A single pid's total is the
-    measured online/offline time from that process's perspective -- the
-    number netbench compares against the NetModel prediction."""
+    """Measured wall time spent inside transport round scopes.
+
+    Without ``pid``: {pid: {phase: ms}} across every process on the
+    timeline.  With ``pid``: the FLAT ``{phase: ms}`` for that one
+    process (a single pid's total is the measured online/offline time
+    from that process's perspective -- the number netbench compares
+    against the NetModel prediction)."""
     per: dict = defaultdict(lambda: defaultdict(float))
     for ev in doc["traceEvents"]:
         if ev["ph"] == "X" and ev.get("cat") == "wire.round":
@@ -40,6 +43,8 @@ def round_wall_ms(doc, pid=None) -> dict:
                 continue
             phase = ev.get("args", {}).get("phase", "?")
             per[ev["pid"]][phase] += ev["dur"] / 1e3
+    if pid is not None:
+        return dict(per.get(pid, {}))
     return {p: dict(v) for p, v in per.items()}
 
 

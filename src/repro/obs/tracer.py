@@ -214,30 +214,39 @@ def ensure_tracer(label: str, rank: int | None = None):
 # Instrumentation helpers.
 # ---------------------------------------------------------------------------
 def traced_protocol(name: str):
-    """Decorate a runtime protocol entry point (``fn(rt, ...)``): when the
-    runtime's tracer is enabled, the call becomes a span carrying prep
-    attribution (mode + PrepStore session) and the number of CheckLedger
-    verdicts the four parties recorded during it.  Disabled: one attribute
-    check, then straight through."""
+    """Decorate a runtime protocol entry point (``fn(rt, ...)``): the
+    live metrics registry UNCONDITIONALLY counts the call and the number
+    of CheckLedger verdicts the four parties recorded during it; when the
+    runtime's tracer is enabled, the call additionally becomes a span
+    carrying prep attribution (mode + PrepStore session) and the same
+    check count.  Untraced: two counter adds, then straight through."""
+    from .registry import get_registry
+
     def deco(fn):
         @functools.wraps(fn)
         def wrapper(rt, *args, **kwargs):
-            tr = rt.tracer
-            if not tr.enabled:
-                return fn(rt, *args, **kwargs)
-            t0 = time.perf_counter()
+            reg = get_registry()
+            reg.counter("trident_protocol_calls_total",
+                        "runtime protocol entries", protocol=name).inc()
             checks0 = sum(len(p.ledger.checks) for p in rt.parties)
+            tr = rt.tracer
+            t0 = time.perf_counter() if tr.enabled else 0.0
             try:
                 return fn(rt, *args, **kwargs)
             finally:
                 checks = sum(len(p.ledger.checks)
                              for p in rt.parties) - checks0
-                store = getattr(rt.prep, "store", None)
-                session = getattr(store, "meta", {}).get("session") \
-                    if store is not None else None
-                tr.raw_span(name, "protocol", t0,
-                            time.perf_counter() - t0, prep=rt.prep.mode,
-                            session=session, checks=checks)
+                if checks:
+                    reg.counter("trident_protocol_checks_total",
+                                "CheckLedger verdicts recorded").inc(checks)
+                if tr.enabled:
+                    store = getattr(rt.prep, "store", None)
+                    session = getattr(store, "meta", {}).get("session") \
+                        if store is not None else None
+                    tr.raw_span(name, "protocol", t0,
+                                time.perf_counter() - t0,
+                                prep=rt.prep.mode,
+                                session=session, checks=checks)
         return wrapper
     return deco
 

@@ -49,7 +49,8 @@ import time
 import traceback
 
 from ..core.ring import Ring
-from ..obs import Tracer, get_tracer, install_tracer, tracing_enabled
+from ..obs import (MetricsRegistry, Tracer, get_tracer, install_registry,
+                   install_tracer, metrics_enabled, tracing_enabled)
 from .store import PrepBank, PrepError, PrepMissingError, PrepStore
 
 DEFAULT_AHEAD = 2
@@ -198,10 +199,30 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
     daemons' control queues.  Runs in its own spawned process, so
     ``cfg["program_for_step"]`` must be picklable (a module-level callable
     or a functools.partial of one)."""
+    exporter = None
     try:
         if cfg.get("trace") or tracing_enabled():
             install_tracer(Tracer("dealer"))
         tracer = get_tracer()
+        # live metrics: the dealer's registry is always on; cfg["metrics"]
+        # additionally serves it over HTTP and publishes the port on the
+        # status queue BEFORE any session is dealt, so the driver can
+        # scrape a dealer that is still warming up its first session
+        reg = MetricsRegistry("dealer")
+        install_registry(reg)
+        if cfg.get("metrics"):
+            from ..obs.exporter import MetricsExporter
+            exporter = MetricsExporter()
+            status_q.put(("metrics_port", exporter.port))
+        c_dealt = reg.counter("trident_dealer_sessions_dealt_total",
+                              "sessions fully dealt by the dealer runtime")
+        c_shipped = reg.counter(
+            "trident_dealer_sessions_shipped_total",
+            "sessions fanned out to all four party daemons")
+        g_mark = reg.gauge("trident_dealer_watermark",
+                           "next session the dealer will ship")
+        g_done = reg.gauge("trident_dealer_done",
+                           "1 once the dealer finished its quota cleanly")
 
         from .continuous import ContinuousDealer
 
@@ -214,6 +235,7 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                 t0 = time.perf_counter()
                 store = dealer.next_store(timeout=None)
                 t1 = time.perf_counter()
+                c_dealt.inc()
                 # replicated-program model: every daemon simulates all
                 # four parties, so each gets the full store -- serialize
                 # it once and fan the blob out per rank
@@ -223,6 +245,8 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                     # (backpressure), not the party daemons
                     q.put(("prep", session, blob))
                 status_q.put(("dealt", session))
+                c_shipped.inc()
+                g_mark.set(session + 1)
                 if tracer.enabled:
                     now = time.perf_counter()
                     tracer.raw_span("session.deal", "prep", t0, t1 - t0,
@@ -233,6 +257,7 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                     # leaves its dealt sessions on the merged timeline
                     status_q.put(("trace", tracer.drain()))
                 session += 1
+        g_done.set(1)
         status_q.put(("done", session))
         for q in ctrl_qs:
             q.put(("dealer_done", session))
@@ -247,6 +272,9 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                 q.put(("dealer_error", tb), timeout=5.0)
             except Exception:
                 pass
+    finally:
+        if exporter is not None:
+            exporter.close()
 
 
 class DealerDaemon:
@@ -265,7 +293,8 @@ class DealerDaemon:
                  base_seed: int = 0, ahead: int = DEFAULT_AHEAD,
                  total: int | None = None,
                  runtime_kwargs: dict | None = None,
-                 trace: bool | None = None):
+                 trace: bool | None = None,
+                 metrics: bool | None = None):
         ctrl_qs = getattr(cluster, "ctrl_queues", None)
         if not ctrl_qs:
             raise PrepError(
@@ -282,6 +311,11 @@ class DealerDaemon:
         self.trace = (bool(getattr(cluster, "trace", False))
                       if trace is None else trace) or tracing_enabled()
         self.trace_chunks: list = []
+        # same defaulting for the metrics exporter; the port arrives over
+        # the status queue before the first dealt session
+        self.metrics = (bool(getattr(cluster, "metrics", False))
+                        if metrics is None else metrics) or metrics_enabled()
+        self.metrics_port: int | None = None
         ctx = mp.get_context("spawn")
         self._status_q = ctx.Queue()
         cfg = {
@@ -289,7 +323,7 @@ class DealerDaemon:
             "ring": ring if ring is not None else cluster.ring,
             "base_seed": base_seed, "ahead": ahead, "total": total,
             "runtime_kwargs": runtime_kwargs,
-            "trace": self.trace,
+            "trace": self.trace, "metrics": self.metrics,
         }
         self._proc = ctx.Process(target=_dealer_daemon_main,
                                  args=(cfg, list(ctrl_qs), self._status_q),
@@ -311,6 +345,8 @@ class DealerDaemon:
             self._error = item[1]
         elif kind == "trace":
             self.trace_chunks.append(item[1])
+        elif kind == "metrics_port":
+            self.metrics_port = item[1]
 
     def _watch(self) -> None:
         while True:

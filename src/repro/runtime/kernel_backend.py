@@ -47,6 +47,7 @@ import jax.numpy as jnp
 from ..core import algebra as AL
 from ..core import prf
 from ..kernels import ops
+from ..obs import get_registry
 
 
 class JnpKernels:
@@ -204,6 +205,59 @@ class PallasKernels(JnpKernels):
         s = ops.and_terms(a, b, c)
         parts = {j: s[k].reshape(full) for k, j in enumerate(js)}
         return s[len(js)].reshape(full), parts
+
+
+class MeteredKernels:
+    """Always-on metering proxy over a ``KernelBackend``: every launch
+    increments ``trident_kernel_launches_total{kind, backend}`` on the
+    live metrics registry.  Unlike ``TracedKernels`` this is installed
+    UNCONDITIONALLY by ``FourPartyRuntime`` -- the cost is one cached
+    counter add per launch.  The ``kind`` labels match the traced span
+    kinds (prf_bits, gamma.mul, online.matmul, ...)."""
+
+    def __init__(self, inner, registry=None):
+        self._inner = inner
+        self._reg = registry if registry is not None else get_registry()
+        self._counters: dict = {}
+        self.name = inner.name
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+    def _count(self, kind: str) -> None:
+        c = self._counters.get(kind)
+        if c is None:
+            c = self._counters[kind] = self._reg.counter(
+                "trident_kernel_launches_total",
+                "kernel-backend launches", kind=kind, backend=self.name)
+        c.inc()
+
+    def prf_bits(self, key, counter, shape, ring):
+        self._count("prf_bits")
+        return self._inner.prf_bits(key, counter, shape, ring)
+
+    def prf_bounded(self, key, counter, shape, ring, bits):
+        self._count("prf_bounded")
+        return self._inner.prf_bounded(key, counter, shape, ring, bits)
+
+    def gamma_pieces(self, kind, op, lam_x, lam_y, masks, js):
+        self._count(f"gamma.{kind}")
+        return self._inner.gamma_pieces(kind, op, lam_x, lam_y, masks, js)
+
+    def online_parts(self, kind, op, m_x, m_y, lam_x, lam_y, gammas,
+                     lam_zs, js):
+        self._count(f"online.{kind}")
+        return self._inner.online_parts(kind, op, m_x, m_y, lam_x, lam_y,
+                                        gammas, lam_zs, js)
+
+    def bool_gamma_pieces(self, lam_x, lam_y, masks, js):
+        self._count("gamma.bool")
+        return self._inner.bool_gamma_pieces(lam_x, lam_y, masks, js)
+
+    def bool_online_parts(self, m_x, m_y, lam_x, lam_y, gammas, lam_zs, js):
+        self._count("online.bool")
+        return self._inner.bool_online_parts(m_x, m_y, lam_x, lam_y,
+                                             gammas, lam_zs, js)
 
 
 class TracedKernels:

@@ -66,7 +66,9 @@ import traceback
 import numpy as np
 
 from ...core.ring import RING64, Ring
-from ...obs import Tracer, get_tracer, install_tracer, tracing_enabled
+from ...obs import (MetricsRegistry, Tracer, get_registry, get_tracer,
+                    install_registry, install_tracer, metrics_enabled,
+                    tracing_enabled)
 
 DEFAULT_TIMEOUT = 120.0
 DEFAULT_LIVE_AHEAD = 2
@@ -96,6 +98,7 @@ class PartyResult:
     task_id: int | None = None        # correlates results with submissions
     prep_wait_s: float = 0.0          # blocked on prep material (live banks)
     trace: dict | None = None         # this task's trace chunk (trace=True)
+    metrics: dict | None = None       # daemon registry snapshot (metrics=True)
 
 
 def _free_ports(n: int) -> list:
@@ -122,7 +125,7 @@ def _totals_delta(after: dict, before: dict) -> dict:
 
 
 def _run_task(task, *, ring, transport, base, bank, out_q, rank,
-              prep_wait: float = DEFAULT_TIMEOUT):
+              prep_wait: float = DEFAULT_TIMEOUT, metrics: bool = False):
     from .. import FourPartyRuntime
 
     t_before = base.totals()
@@ -131,47 +134,76 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
     m_before = dict(transport._sec.total) if transport is not base else None
 
     tracer = get_tracer()
+    reg = get_registry()
+    reg.counter("trident_cluster_tasks_total",
+                "tasks served by this party daemon").inc()
+    g_inflight = reg.gauge("trident_cluster_tasks_inflight",
+                           "tasks currently executing (0 or 1)")
+    g_inflight.set(1)
     t_task0 = time.perf_counter()
     prep = None
     prep_wait_s = 0.0
-    if task.get("prep") == "bank":
-        from ...offline.store import OnlinePrep
-        if bank is None:
-            raise RuntimeError("task wants prep='bank' but the daemon has "
-                               "no PrepBank (load one at startup with "
-                               "prep_path= or stream one with "
-                               "live_prep=True)")
-        session = task.get("prep_session")
-        t_prep0 = time.perf_counter()
-        if getattr(bank, "live", False):
-            # live streaming: the session may not have arrived yet --
-            # block until the dealer's watermark passes it (a dead dealer
-            # raises its traceback here instead of timing out)
-            bank.wait_for(session if session is not None
-                          else bank.next_session, timeout=prep_wait)
-        if session is not None:
-            # step-indexed consumption (training): session == step, so a
-            # resumed run skips spent sessions and a retried step raises
-            # PrepReplayError instead of silently eating wrong material
-            bank.seek(session)
-        store = bank.next()
-        prep_wait_s = time.perf_counter() - t_prep0
-        if tracer.enabled:
-            tracer.raw_span("prep.acquire", "prep", t_prep0, prep_wait_s,
-                            session=getattr(store, "meta",
-                                            {}).get("session"))
-        store.party = rank              # attribute store errors to P{rank}
-        prep = OnlinePrep(store)
-        base.forbid_phase("offline")
     try:
-        rt = FourPartyRuntime(ring, seed=task["seed"], transport=transport,
-                              prep=prep, **task["runtime_kwargs"])
-        t0 = time.perf_counter()
-        result = task["program"](rt, rank)
-        wall = time.perf_counter() - t0
+        if task.get("prep") == "bank":
+            from ...offline.store import OnlinePrep
+            if bank is None:
+                raise RuntimeError("task wants prep='bank' but the daemon "
+                                   "has no PrepBank (load one at startup "
+                                   "with prep_path= or stream one with "
+                                   "live_prep=True)")
+            session = task.get("prep_session")
+            t_prep0 = time.perf_counter()
+            if getattr(bank, "live", False):
+                # live streaming: the session may not have arrived yet --
+                # block until the dealer's watermark passes it (a dead
+                # dealer raises its traceback here instead of timing out)
+                bank.wait_for(session if session is not None
+                              else bank.next_session, timeout=prep_wait)
+            if session is not None:
+                # step-indexed consumption (training): session == step, so
+                # a resumed run skips spent sessions and a retried step
+                # raises PrepReplayError instead of silently eating wrong
+                # material
+                bank.seek(session)
+            store = bank.next()
+            prep_wait_s = time.perf_counter() - t_prep0
+            reg.counter("trident_prep_sessions_consumed_total",
+                        "PrepStore sessions consumed by tasks").inc()
+            reg.counter("trident_prep_wait_us_total",
+                        "wall-clock blocked acquiring prep material "
+                        "(us)").inc(prep_wait_s * 1e6)
+            sess_no = getattr(store, "meta", {}).get("session")
+            reg.gauge("trident_prep_next_session",
+                      "next prep session this daemon will consume").set(
+                bank.next_session if getattr(bank, "live", False)
+                else bank._next)
+            reg.gauge("trident_live_bank_depth",
+                      "unconsumed sessions buffered in the prep "
+                      "bank").set(bank.sessions_left)
+            if tracer.enabled:
+                tracer.raw_span("prep.acquire", "prep", t_prep0,
+                                prep_wait_s, session=sess_no)
+            store.party = rank          # attribute store errors to P{rank}
+            prep = OnlinePrep(store)
+            base.forbid_phase("offline")
+        try:
+            rt = FourPartyRuntime(ring, seed=task["seed"],
+                                  transport=transport, prep=prep,
+                                  **task["runtime_kwargs"])
+            t0 = time.perf_counter()
+            result = task["program"](rt, rank)
+            wall = time.perf_counter() - t0
+        finally:
+            if prep is not None:
+                base.allow_phase("offline")
     finally:
-        if prep is not None:
-            base.allow_phase("offline")
+        # metrics are live even for failing tasks: the inflight gauge
+        # drops back and the wall histogram records the attempt, so a
+        # health scrape never sees a phantom running task
+        g_inflight.set(0)
+        reg.histogram("trident_cluster_task_wall_us",
+                      "per-task wall clock (us)").observe(
+            (time.perf_counter() - t_task0) * 1e6)
     if tracer.enabled:
         tracer.raw_span(f"task#{task['id']}", "cluster.task", t_task0,
                         time.perf_counter() - t_task0, task_id=task["id"],
@@ -200,6 +232,9 @@ def _run_task(task, *, ring, transport, base, bank, out_q, rank,
         # per-task trace delta: drain() resets the buffer, so each task's
         # chunk stands alone and the driver concatenates them
         trace=tracer.drain() if tracer.enabled else None,
+        # metrics snapshot is CUMULATIVE (registry counters never reset):
+        # the driver diffs snapshots or scrapes the exporter for rates
+        metrics=reg.snapshot() if metrics else None,
     ))
 
 
@@ -212,6 +247,11 @@ def _ctrl_loop(ctrl_q, bank, rank):
     cause instead of timing out."""
     import pickle
     tracer = get_tracer()
+    reg = get_registry()
+    g_depth = reg.gauge("trident_live_bank_depth",
+                        "unconsumed sessions buffered in the prep bank")
+    g_mark = reg.gauge("trident_live_bank_watermark",
+                       "sessions streamed into the live bank so far")
     try:
         while True:
             item = ctrl_q.get()
@@ -231,6 +271,8 @@ def _ctrl_loop(ctrl_q, bank, rank):
                     tracer.counter("live_bank_depth", len(bank), "prep")
                 else:
                     bank.append(session, store)
+                g_depth.set(bank.sessions_left)
+                g_mark.set(bank.watermark)
             elif kind == "dealer_error":
                 bank.fail(item[1])
                 return
@@ -243,12 +285,22 @@ def _ctrl_loop(ctrl_q, bank, rank):
 
 
 def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
+    exporter = None
     try:
         # install the labeled tracer BEFORE the transport exists so the
         # mesh's MeasuredTransport captures it (env TRIDENT_TRACE=1 also
         # lands here: spawned children inherit the environment)
         if cfg.get("trace") or tracing_enabled():
             install_tracer(Tracer(f"party-P{rank}", rank=rank))
+        # the metrics registry is ALWAYS on (cheap counters); install it
+        # labeled and BEFORE the transport for the same capture reason.
+        # cfg["metrics"] only decides whether an HTTP exporter serves it.
+        install_registry(MetricsRegistry(f"party-P{rank}", rank=rank))
+        metrics_port = None
+        if cfg.get("metrics"):
+            from ...obs.exporter import MetricsExporter
+            exporter = MetricsExporter()
+            metrics_port = exporter.port
 
         from .model import NetModelTransport
         from .socket_transport import SocketTransport
@@ -269,7 +321,8 @@ def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
             bank = LivePrepBank(ahead=cfg["live_ahead"])
             threading.Thread(target=_ctrl_loop, args=(ctrl_q, bank, rank),
                              daemon=True, name=f"ctrl-P{rank}").start()
-        out_q.put(("ready", rank, len(bank) if bank is not None else 0))
+        out_q.put(("ready", rank, len(bank) if bank is not None else 0,
+                   metrics_port))
         while True:
             task = task_q.get()
             if task is None:
@@ -282,7 +335,8 @@ def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
                 budget = task.get("timeout") or cfg["timeout"]
                 _run_task(task, ring=cfg["ring"], transport=transport,
                           base=base, bank=bank, out_q=out_q, rank=rank,
-                          prep_wait=max(1.0, 0.75 * budget))
+                          prep_wait=max(1.0, 0.75 * budget),
+                          metrics=bool(cfg.get("metrics")))
             except BaseException:
                 # a failed task leaves the lock-step mesh undefined: report
                 # and stop serving (the driver poisons the cluster)
@@ -291,6 +345,9 @@ def _daemon_main(rank, endpoints, cfg, task_q, ctrl_q, out_q):
         base.close()
     except BaseException:
         out_q.put(("error", rank, traceback.format_exc()))
+    finally:
+        if exporter is not None:
+            exporter.close()
 
 
 class PartyCluster:
@@ -301,7 +358,7 @@ class PartyCluster:
                  net_model=None, prep_path: str | None = None,
                  live_prep: bool = False,
                  live_ahead: int = DEFAULT_LIVE_AHEAD,
-                 trace: bool = False):
+                 trace: bool = False, metrics: bool = False):
         if live_prep and prep_path is not None:
             raise ValueError(
                 "live_prep streams into an initially empty bank; "
@@ -309,17 +366,21 @@ class PartyCluster:
         ctx = mp.get_context("spawn")
         endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
         trace = trace or tracing_enabled()
+        metrics = metrics or metrics_enabled()
         cfg = {
             "ring": ring, "timeout": timeout, "tampers": list(tampers),
             "net_model": net_model, "prep_path": prep_path,
             "live_prep": live_prep, "live_ahead": live_ahead,
-            "trace": trace,
+            "trace": trace, "metrics": metrics,
         }
         self.ring = ring
         self.timeout = timeout
         self.net_model = net_model
         self.live_prep = live_prep
         self.trace = trace
+        self.metrics = metrics
+        # rank -> exporter HTTP port (metrics=True; filled from ready acks)
+        self.metrics_ports: dict = {}
         # per-task trace chunks from every rank (plus whatever the caller
         # extends with, e.g. the DealerDaemon's chunks)
         self.trace_chunks: list = []
@@ -347,7 +408,9 @@ class PartyCluster:
         for p in self._procs:
             p.start()
         try:
-            self._collect(lambda item: item[0] == "ready", self.timeout)
+            acks = self._collect(lambda item: item[0] == "ready",
+                                 self.timeout)
+            self.metrics_ports = {a[1]: a[3] for a in acks}
         except Exception:
             self.close()
             raise
@@ -457,6 +520,25 @@ class PartyCluster:
         from ...obs import write_chrome_trace
         return write_chrome_trace(path,
                                   [*self.trace_chunks, *extra_chunks])
+
+    def alive(self) -> dict:
+        """{rank: daemon process is alive} -- the liveness half of the
+        health probes."""
+        return {rank: p.is_alive() for rank, p in enumerate(self._procs)}
+
+    def scrape(self, timeout: float = 2.0) -> dict:
+        """Scrape every daemon's metrics exporter: {rank: snapshot|None}
+        (None for a down daemon or a cluster built with metrics=False)."""
+        from ...obs.health import _try_scrape
+        return {rank: _try_scrape(port, timeout)
+                for rank, port in sorted(self.metrics_ports.items())}
+
+    def health(self, dealer=None, **kw) -> dict:
+        """One cluster health document (docs/OBSERVABILITY.md): scrape
+        all four exporters (plus the dealer's when attached), evaluate
+        the stall/lag/liveness probes, and report ``healthy``."""
+        from ...obs.health import cluster_health
+        return cluster_health(self, dealer=dealer, **kw)
 
     # -- lifecycle ---------------------------------------------------------
     @property

@@ -20,7 +20,8 @@ import jax
 from ..core.algebra import CheckLedger, PARTIES
 from ..core.ring import Ring, RING64
 from ..obs import get_tracer
-from .kernel_backend import TracedKernels, make_kernel_backend
+from .kernel_backend import (MeteredKernels, TracedKernels,
+                             make_kernel_backend)
 from .party import Party, PartyKeys
 from .transport import LocalTransport, Transport
 
@@ -70,7 +71,10 @@ class FourPartyRuntime:
         # "pallas" (fused Pallas kernels); None reads
         # TRIDENT_RUNTIME_KERNELS.  Backends are bit-identical, so this
         # never changes transcripts, wire bytes, or outputs.
-        self.kernels = make_kernel_backend(kernel_backend)
+        # Launches always count on the live metrics registry
+        # (MeteredKernels); the name passes through, so callers still see
+        # "jnp"/"pallas".
+        self.kernels = MeteredKernels(make_kernel_backend(kernel_backend))
         # Observability: share the transport's tracer (NetModelTransport
         # forwards it to the wrapped transport) so protocol spans and wire
         # events land in one buffer; when tracing, kernel launches are

@@ -41,7 +41,7 @@ import math
 import time
 from collections import defaultdict, deque
 
-from repro.obs import RECV_SPAN_MIN_S, get_tracer
+from repro.obs import RECV_SPAN_MIN_S, get_registry, get_tracer
 
 PHASES = ("offline", "online")
 
@@ -190,6 +190,21 @@ class MeasuredTransport(Transport):
         self._round_index = {p: 0 for p in PHASES}
         self._round_t0 = {p: 0.0 for p in PHASES}
         self._round_bits0 = {p: 0 for p in PHASES}
+        # live metrics (always on): the registry double-books the wire --
+        # trident_wire_bits_total must equal per_link() exactly, the
+        # consistency contract tests/test_metrics.py asserts.  Hot-path
+        # counters are cached per label set so a send pays dict.get + one
+        # locked add, not a registry lookup.
+        self.metrics = get_registry()
+        self._m_bits: dict = {}
+        self._m_msgs: dict = {}
+        self._m_rounds: dict = {}
+        self._m_recv_wait = self.metrics.counter(
+            "trident_wire_recv_wait_us_total",
+            "total wall-clock blocked in recv (us)")
+        self._m_slow_recv = self.metrics.counter(
+            "trident_wire_slow_recvs_total",
+            f"receives that blocked >= {RECV_SPAN_MIN_S * 1e3:g} ms")
 
     # -- measurement -------------------------------------------------------
     def bits(self, phase: str | None = None) -> int:
@@ -253,6 +268,14 @@ class MeasuredTransport(Transport):
             if self._round_depth[phase] == 0:
                 if self._round_traffic[phase]:
                     self._frames.add(phase, 1)
+                    c = self._m_rounds.get(phase)
+                    if c is None:
+                        c = self._m_rounds[phase] = self.metrics.counter(
+                            "trident_wire_round_scopes_total",
+                            "traffic-bearing outermost round scopes "
+                            "(parallel-overlapped scopes each count, so "
+                            ">= the analytic round tally)", phase=phase)
+                    c.inc()
                 self._round_flush(phase)
                 if tracing and self._round_traffic[phase]:
                     # span covers the whole outermost scope incl. the
@@ -286,7 +309,21 @@ class MeasuredTransport(Transport):
             self._round_traffic[phase] = True
             self.phase_bits[phase] += bits
             self.link_bits[(src, dst)][phase] += bits
+            c = self._m_bits.get((src, dst, phase))
+            if c is None:
+                c = self._m_bits[(src, dst, phase)] = self.metrics.counter(
+                    "trident_wire_bits_total",
+                    "measured wire bits (== per_link() exactly)",
+                    src=src, dst=dst, phase=phase)
+            c.inc(bits)
         self.link_msgs[(src, dst)] += 1
+        c = self._m_msgs.get((src, dst))
+        if c is None:
+            c = self._m_msgs[(src, dst)] = self.metrics.counter(
+                "trident_wire_msgs_total",
+                "messages sent (zero-bit hash copies included)",
+                src=src, dst=dst)
+        c.inc()
         if self.tracer.enabled:
             self.tracer.wire_send(src, dst, tag, bits, phase,
                                   self._round_index[phase])
@@ -294,16 +331,17 @@ class MeasuredTransport(Transport):
         self._put(src, dst, tag, payload)
 
     def recv(self, dst: int, src: int, *, tag: str):
-        if not self.tracer.enabled:
-            return self._get(dst, src, tag)
         t0 = time.perf_counter()
         payload = self._get(dst, src, tag)
         dt = time.perf_counter() - t0
+        self._m_recv_wait.inc(dt * 1e6)
         if dt >= RECV_SPAN_MIN_S:
-            # only blocking receives make the timeline -- a recv span is
-            # the wait for the peer (or the network), not the copy
-            self.tracer.raw_span("recv", "wire.recv", t0, dt, dst=dst,
-                                 src=src, tag=tag)
+            self._m_slow_recv.inc()
+            if self.tracer.enabled:
+                # only blocking receives make the timeline -- a recv span
+                # is the wait for the peer (or the network), not the copy
+                self.tracer.raw_span("recv", "wire.recv", t0, dt, dst=dst,
+                                     src=src, tag=tag)
         return payload
 
     # -- backend hooks -----------------------------------------------------

@@ -87,6 +87,20 @@ class PartyServeStats:
                            self.online_bits / self.batches)
 
 
+def _record_serve_metrics(n_queries: int, wall_s: float) -> None:
+    """One served batch on the live metrics registry (always on): the
+    serving-plane counters scraped by the exporter / embedded in health
+    docs.  In-process servers count on the driver's registry; the socket
+    path counts driver-side submit round-trips (the daemons' own task
+    metrics live in their per-process registries)."""
+    reg = obs.get_registry()
+    reg.counter("trident_serve_queries_total",
+                "queries served").inc(n_queries)
+    reg.counter("trident_serve_batches_total", "batches served").inc()
+    reg.histogram("trident_serve_batch_latency_us",
+                  "per-batch serve wall clock (us)").observe(wall_s * 1e6)
+
+
 class PartyPredictionServer:
     """predict_fn(rt, X_batch) -> np.ndarray predictions; a fresh
     FourPartyRuntime (fresh PRF counters + transport) per batch, as a real
@@ -141,10 +155,12 @@ class PartyPredictionServer:
         def run_batch(X, n):
             base, tp = self._transport()
             rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
+            c0 = self.stats.compute_s
             with obs.timed(self.stats, "compute_s", span="serve.batch",
                            queries=n):
                 preds = np.asarray(self.predict_fn(rt, X))
             self.stats.queries += n
+            _record_serve_metrics(n, self.stats.compute_s - c0)
             self._account(base, tp, rt)
             return preds
 
@@ -171,10 +187,12 @@ class PartyPredictionServer:
                 tp.forbid_phase("offline")
                 rt = FourPartyRuntime(self.ring, transport=tp,
                                       prep=OnlinePrep(store))
+                c0 = self.stats.compute_s
                 with obs.timed(self.stats, "online_compute_s", "compute_s",
                                span="serve.batch.online", queries=n):
                     preds = np.asarray(self.predict_fn(rt, X))
                 self.stats.queries += n
+                _record_serve_metrics(n, self.stats.compute_s - c0)
                 self._account(base, tp, rt)
                 assert base.totals()["offline"]["bits"] == 0
                 out.extend(preds[:n])
@@ -241,7 +259,8 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
                        prep: str | None = None,
                        prep_ahead: bool = False,
                        prep_dir: str | None = None,
-                       live_ahead: int = 2):
+                       live_ahead: int = 2,
+                       metrics: bool = False):
     """Serve a query stream across four party processes over TCP.
 
     ``predict_fn(rt, X_batch)`` has the same contract as
@@ -270,6 +289,11 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
         ``live_ahead`` look-ahead.  Same online-only/zero-offline-bytes
         contract on the mesh, but serving starts immediately and the
         stream could be open-ended.
+
+    ``metrics=True`` starts an HTTP metrics exporter in every daemon (and
+    the dealer), scrapes them once at end of stream, and puts the merged
+    cluster health document in the report under ``"health"``
+    (docs/OBSERVABILITY.md).
     """
     from ..runtime.net.cluster import PartyCluster
 
@@ -314,7 +338,7 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
         cluster = PartyCluster(ring=ring, timeout=timeout,
                                net_model=net_model, prep_path=prep_path,
                                live_prep=(prep == "live"),
-                               live_ahead=live_ahead)
+                               live_ahead=live_ahead, metrics=metrics)
     dealer = None
     try:
         if prep == "live":
@@ -355,6 +379,7 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
                 link_online[link] = link_online.get(link, 0) \
                     + bits["online"]
             wall += max(r.wall_s for r in results)
+            _record_serve_metrics(len(X), cluster.task_walls[-1])
             if ref.modeled_s is not None:
                 modeled = modeled or {p: 0.0 for p in ref.modeled_s}
                 for p, s in ref.modeled_s.items():
@@ -380,6 +405,10 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
             report["live_sessions_streamed"] = dealer.dealt
         if modeled is not None and net_model is not None:
             report[f"modeled_{net_model.name}_s"] = modeled
+        if getattr(cluster, "metrics", False):
+            # scrape while the daemons (and dealer) are still up: the
+            # health doc is part of the stream's report
+            report["health"] = cluster.health(dealer=dealer)
         return preds, report
     finally:
         if dealer is not None:

@@ -275,7 +275,7 @@ class ClusterSGD:
     PREPPED = ("bank", "live")
 
     def __init__(self, cluster, task: SGDTask, *, base_seed: int = 0,
-                 prep: str | None = None):
+                 prep: str | None = None, dealer=None):
         assert prep in (None, "bank", "live"), prep
         if prep == "live" and not getattr(cluster, "live_prep", False):
             raise ValueError("prep='live' needs a cluster built with "
@@ -284,6 +284,8 @@ class ClusterSGD:
         self.task = task
         self.base_seed = base_seed
         self.prep = prep
+        # DealerDaemon (prep="live"): health() folds in the dealer's view
+        self.dealer = dealer
         self.results: list = []         # per-step [PartyResult x4]
 
     def step_fn(self, params, step, *batch):
@@ -313,3 +315,9 @@ class ClusterSGD:
         """Total offline-phase bits the socket mesh carried across the
         recorded steps (0 in prep="bank" mode -- the acceptance check)."""
         return sum(res[0].totals["offline"]["bits"] for res in self.results)
+
+    def health(self, **kw) -> dict:
+        """One cluster health document mid-training: all four party
+        exporters plus the attached dealer's (``PartyCluster`` and
+        ``DealerDaemon`` built with ``metrics=True``)."""
+        return self.cluster.health(dealer=self.dealer, **kw)

@@ -1,0 +1,449 @@
+"""The live metrics plane: registry mechanics, the exporter HTTP surface,
+health probes, the registry-vs-transport consistency contract, the
+metrics-enabled socket cluster, and the scripts/ gates.
+
+The central cross-check mirrors test_obs's tracer one: the registry
+double-books wire traffic independently of ``MeasuredTransport``, and
+``registry.link_bits()`` must equal ``per_link()``'s non-zero cells
+EXACTLY -- in process and across the 4-process socket cluster.
+"""
+import importlib.util
+import json
+import threading
+import time
+import urllib.request
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import exporter as obs_exporter
+from repro.obs import health as obs_health
+from repro.obs import metrics as obs_metrics
+from repro.obs.registry import MetricsRegistry
+from repro.runtime import FourPartyRuntime
+from repro.runtime import protocols as RT
+
+SCRIPTS = Path(__file__).resolve().parent.parent / "scripts"
+
+
+def _load_script(name):
+    spec = importlib.util.spec_from_file_location(name,
+                                                  SCRIPTS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture
+def registry():
+    """Install a fresh labeled registry for the test, restore after."""
+    reg = MetricsRegistry("test")
+    prev = obs.install_registry(reg)
+    try:
+        yield reg
+    finally:
+        obs.install_registry(prev)
+
+
+def _program(rt):
+    x = RT.share(rt, jnp.arange(6, dtype=jnp.int64).reshape(2, 3))
+    y = RT.share(rt, jnp.ones((3, 2), dtype=jnp.int64))
+    z = RT.matmul(rt, x, y)
+    return RT.reconstruct(rt, z)[0]
+
+
+def _nonzero_links(per_link):
+    out = {}
+    for link, per in per_link.items():
+        cell = {p: b for p, b in per.items() if b}
+        if cell:
+            out[link] = cell
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics.
+# ---------------------------------------------------------------------------
+def test_counter_gauge_histogram_basics(registry):
+    c = registry.counter("c_total", "a counter", kind="x")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5 and c.updated > 0
+    # same (name, labels) -> same object; new labels -> new sample
+    assert registry.counter("c_total", kind="x") is c
+    registry.counter("c_total", kind="y").inc(2)
+    assert registry.total("c_total") == 7
+
+    g = registry.gauge("g", "a gauge")
+    g.set(3)
+    v, ts = g.read()
+    assert (v, ts > 0) == (3, True)
+
+    h = registry.histogram("h_us", "a histogram")
+    h.observe(50.0)
+    assert h.count == 1 and h.sum == 50.0
+    assert registry.total("h_us") == 1   # histograms total their counts
+
+
+def test_type_conflict_raises(registry):
+    registry.counter("m")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.gauge("m")
+
+
+def test_histogram_edges_match_trace_histogram(registry):
+    """Boundary parity with metrics._histogram: a value landing exactly
+    on an edge goes to the NEXT bucket in both implementations."""
+    values = [0.0, 9.9, 10.0, 99.0, 100.0, 1_000.0, 99_999.0,
+              100_000.0, 5e6]
+    h = registry.histogram("h_us")
+    for v in values:
+        h.observe(v)
+    assert h.buckets == obs_metrics._histogram(values)["counts"]
+    assert list(h.edges) == list(obs_metrics._HIST_EDGES_US)
+
+
+def test_snapshot_is_json_clean_and_readable(registry):
+    registry.counter("trident_wire_bits_total", src=0, dst=1,
+                     phase="online").inc(128)
+    registry.gauge("depth").set(7)
+    registry.histogram("lat_us").observe(42.0)
+    snap = registry.snapshot()
+    json.dumps(snap)                     # plain data end to end
+    assert snap["label"] == "test"
+    assert obs.snapshot_total(snap, "trident_wire_bits_total") == 128
+    assert obs.snapshot_value(snap, "trident_wire_bits_total",
+                              src=0, dst=1, phase="online") == 128
+    assert obs.snapshot_value(snap, "depth") == 7
+    assert obs.snapshot_value(snap, "absent", default=None) is None
+    assert obs.snapshot_updated(snap, "depth") > 0
+    assert obs.snapshot_updated(snap, "absent") == 0.0
+    assert obs.snapshot_link_bits(snap) == {(0, 1): {"online": 128}}
+
+
+def test_render_prometheus_exposition(registry):
+    registry.counter("c_total", "help text", kind="x").inc(3)
+    registry.histogram("h_us").observe(5.0)
+    text = registry.render_prometheus()
+    assert "# HELP c_total help text" in text
+    assert "# TYPE c_total counter" in text
+    assert 'c_total{kind="x"} 3' in text
+    assert 'h_us_bucket{le="10.0"} 1' in text
+    assert 'h_us_bucket{le="+Inf"} 1' in text
+    assert "h_us_count 1" in text
+
+
+def test_concurrent_updates_never_lose_increments(registry):
+    c = registry.counter("c_total")
+    g = registry.gauge("g")
+    h = registry.histogram("h_us")
+    N, THREADS = 10_000, 8
+
+    def work(tid):
+        for i in range(N):
+            c.inc()
+            g.set(tid)
+            h.observe(float(i % 200))
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == N * THREADS
+    assert h.count == N * THREADS
+    assert sum(h.buckets) == h.count
+    assert g.read()[0] in range(THREADS)
+
+
+def test_metrics_env_gates_exporters_not_registry(monkeypatch):
+    monkeypatch.delenv(obs.METRICS_ENV, raising=False)
+    assert not obs.metrics_enabled()
+    monkeypatch.setenv(obs.METRICS_ENV, "1")
+    assert obs.metrics_enabled()
+    # the registry itself is always on regardless
+    monkeypatch.delenv(obs.METRICS_ENV, raising=False)
+    assert isinstance(obs.get_registry(), MetricsRegistry)
+
+
+# ---------------------------------------------------------------------------
+# The consistency contract, in process.
+# ---------------------------------------------------------------------------
+def test_registry_link_bits_equal_per_link(registry):
+    # the transport captures the registry at construction: install first
+    rt = FourPartyRuntime(seed=7)
+    _program(rt)
+    assert registry.link_bits() == _nonzero_links(rt.transport.per_link())
+    assert registry.total("trident_wire_msgs_total") > 0
+    assert registry.total("trident_wire_round_scopes_total") > 0
+
+
+def test_protocol_and_kernel_counters(registry):
+    rt = FourPartyRuntime(seed=8)
+    _program(rt)
+    snap = registry.snapshot()
+    for proto in ("share", "matmul", "reconstruct"):
+        assert obs.snapshot_value(snap, "trident_protocol_calls_total",
+                                  protocol=proto) > 0, proto
+    assert obs.snapshot_total(snap, "trident_protocol_checks_total") > 0
+    assert obs.snapshot_total(snap, "trident_kernel_launches_total") > 0
+
+
+# ---------------------------------------------------------------------------
+# The exporter HTTP surface.
+# ---------------------------------------------------------------------------
+def test_exporter_serves_registry_over_http():
+    reg = MetricsRegistry("exported")
+    reg.counter("c_total", "c").inc(11)
+    with obs_exporter.MetricsExporter(reg) as exp:
+        snap = obs_health.scrape(exp.port)
+        assert snap["label"] == "exported"
+        assert obs.snapshot_total(snap, "c_total") == 11
+        base = f"http://127.0.0.1:{exp.port}"
+        with urllib.request.urlopen(f"{base}/metrics", timeout=5) as r:
+            assert b"c_total 11" in r.read()
+        with urllib.request.urlopen(f"{base}/healthz", timeout=5) as r:
+            assert json.loads(r.read())["label"] == "exported"
+    # closed: scrapes now fail cleanly
+    assert obs_health._try_scrape(exp.port, timeout=0.5) is None
+    assert obs_health._try_scrape(None, timeout=0.5) is None
+
+
+# ---------------------------------------------------------------------------
+# Trace-side metrics helpers (satellite: round_wall_ms + edge cases).
+# ---------------------------------------------------------------------------
+def test_round_wall_ms_pid_returns_flat_phases():
+    doc = {"traceEvents": [
+        {"ph": "X", "cat": "wire.round", "pid": 2, "ts": 0.0,
+         "dur": 3000.0, "args": {"phase": "online"}},
+        {"ph": "X", "cat": "wire.round", "pid": 2, "ts": 0.0,
+         "dur": 1000.0, "args": {"phase": "offline"}},
+        {"ph": "X", "cat": "wire.round", "pid": 3, "ts": 0.0,
+         "dur": 500.0, "args": {"phase": "online"}},
+    ]}
+    assert obs.round_wall_ms(doc, pid=2) == {"online": 3.0, "offline": 1.0}
+    assert obs.round_wall_ms(doc, pid=99) == {}
+    nested = obs.round_wall_ms(doc)
+    assert nested[2]["online"] == 3.0 and nested[3]["online"] == 0.5
+
+
+def test_metrics_snapshot_empty_doc():
+    snap = obs.metrics_snapshot({"traceEvents": []})
+    assert snap == {"spans": {}, "rounds": {}, "sends": {},
+                    "counters": {}}
+
+
+def test_metrics_snapshot_counter_only_doc():
+    doc = {"traceEvents": [
+        {"ph": "C", "name": "depth", "pid": 0, "ts": 0.0,
+         "args": {"value": 5}},
+        {"ph": "C", "name": "depth", "pid": 0, "ts": 1.0,
+         "args": {"value": 2}},
+    ]}
+    snap = obs.metrics_snapshot(doc)
+    assert snap["counters"]["depth"] == {"last": 2, "max": 5}
+    assert snap["spans"] == {} and snap["rounds"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Health probes over synthetic snapshots (pure, offline).
+# ---------------------------------------------------------------------------
+def _rank_snap(*, inflight=0, depth=None, next_session=0):
+    reg = MetricsRegistry("synthetic")
+    reg.gauge("trident_cluster_tasks_inflight").set(inflight)
+    if inflight:
+        reg.counter("trident_wire_round_scopes_total", phase="online").inc()
+    if depth is not None:
+        reg.gauge("trident_live_bank_depth").set(depth)
+    reg.gauge("trident_prep_next_session").set(next_session)
+    return reg.snapshot()
+
+
+def _dealer_snap(*, watermark=0, done=0):
+    reg = MetricsRegistry("synthetic-dealer")
+    reg.gauge("trident_dealer_watermark").set(watermark)
+    reg.gauge("trident_dealer_done").set(done)
+    return reg.snapshot()
+
+
+def test_probe_round_stall_is_age_gated():
+    snap = _rank_snap(inflight=1)
+    t0 = time.time()
+    assert obs_health.evaluate_probes({0: snap}, now=t0 + 1,
+                                      stall_s=5.0) == []
+    probes = obs_health.evaluate_probes({0: snap}, now=t0 + 10,
+                                        stall_s=5.0)
+    assert [p["probe"] for p in probes] == ["round_stall"]
+    assert probes[0]["rank"] == 0 and probes[0]["stalled_s"] > 5.0
+    # idle ranks never stall, however old the snapshot
+    idle = _rank_snap(inflight=0)
+    assert obs_health.evaluate_probes({0: idle}, now=t0 + 100,
+                                      stall_s=5.0) == []
+
+
+def test_probe_bank_low_requires_attached_undone_dealer():
+    snap = _rank_snap(inflight=1, depth=0)
+    dealer = _dealer_snap(watermark=5)
+    t0 = time.time()
+    probes = obs_health.evaluate_probes({0: snap}, dealer, now=t0 + 10,
+                                        stall_s=5.0, dealer_attached=True)
+    assert "bank_low" in {p["probe"] for p in probes}
+    # a finished dealer makes an empty bank normal
+    done = _dealer_snap(watermark=5, done=1)
+    probes = obs_health.evaluate_probes({0: snap}, done, now=t0 + 10,
+                                        stall_s=5.0, dealer_attached=True)
+    assert "bank_low" not in {p["probe"] for p in probes}
+    # no dealer attached: local banks drain by design
+    probes = obs_health.evaluate_probes({0: snap}, None, now=t0 + 10,
+                                        stall_s=5.0, dealer_attached=False)
+    assert "bank_low" not in {p["probe"] for p in probes}
+
+
+def test_probe_dealer_lag():
+    snap = _rank_snap(next_session=7)
+    t0 = time.time()
+    lagging = _dealer_snap(watermark=2)
+    probes = obs_health.evaluate_probes({0: snap}, lagging, now=t0 + 10,
+                                        stall_s=5.0, dealer_attached=True)
+    assert [p["probe"] for p in probes] == ["dealer_lag"]
+    assert (probes[0]["wanted"], probes[0]["watermark"]) == (7, 2)
+    # caught-up watermark, or a freshly-moved one, is fine
+    ahead = _dealer_snap(watermark=9)
+    assert obs_health.evaluate_probes({0: snap}, ahead, now=t0 + 10,
+                                      stall_s=5.0,
+                                      dealer_attached=True) == []
+    assert obs_health.evaluate_probes({0: snap}, lagging, now=t0 + 1,
+                                      stall_s=5.0,
+                                      dealer_attached=True) == []
+
+
+# ---------------------------------------------------------------------------
+# The metrics-enabled 4-process cluster.
+# ---------------------------------------------------------------------------
+def _cluster_program(rt, rank):
+    return np.asarray(_program(rt))
+
+
+def test_cluster_metrics_ports_scrape_and_health():
+    from repro.runtime.net.cluster import PartyCluster
+
+    with PartyCluster(timeout=90.0, metrics=True) as cluster:
+        assert sorted(cluster.metrics_ports) == [0, 1, 2, 3]
+        assert all(p for p in cluster.metrics_ports.values())
+        results = cluster.submit(_cluster_program, seed=11)
+
+        # the consistency contract over the real wire: each daemon's
+        # registry equals the task's full per-link accounting
+        for r in results:
+            assert r.metrics is not None
+            assert obs.snapshot_link_bits(r.metrics) == \
+                _nonzero_links(r.per_link), f"P{r.rank}"
+            assert obs.snapshot_value(
+                r.metrics, "trident_cluster_tasks_total") == 1
+            assert obs.snapshot_value(
+                r.metrics, "trident_cluster_tasks_inflight") == 0
+
+        # live scrape of the daemons' exporters between tasks
+        snaps = cluster.scrape()
+        assert sorted(snaps) == [0, 1, 2, 3]
+        for rank, snap in snaps.items():
+            assert snap is not None and snap["rank"] == rank
+            assert obs.snapshot_total(snap, "trident_wire_bits_total") > 0
+
+        doc = cluster.health()
+        assert doc["healthy"], doc
+        assert sorted(doc["ranks"]) == [0, 1, 2, 3]
+        for entry in doc["ranks"].values():
+            assert entry["alive"] and entry["scrape_ok"]
+            assert entry["tasks"] == 1
+        json.dumps(doc)                  # ships to CI as JSON
+
+
+def test_cluster_without_metrics_has_no_ports():
+    from repro.runtime.net.cluster import PartyCluster
+
+    with PartyCluster(timeout=90.0) as cluster:
+        results = cluster.submit(_cluster_program, seed=11)
+        assert all(p is None for p in cluster.metrics_ports.values())
+        assert all(r.metrics is None for r in results)
+
+
+# ---------------------------------------------------------------------------
+# The scripts/ gates (importable, tested offline).
+# ---------------------------------------------------------------------------
+def _bench_doc(**overrides):
+    rec = {"bench": "netbench", "block": "b", "kernel_backend": "jnp",
+           "online_bits": 1024, "online_rounds": 7, "bit_identical": True,
+           "wan_online_s": 0.125, "wall_ms": 40.0, "launch_wall_s": 2.0}
+    rec.update(overrides)
+    return {"bench": "netbench", "records": [rec]}
+
+
+def test_bench_compare_classification():
+    bc = _load_script("bench_compare")
+    base = _bench_doc()
+    # identical -> clean
+    assert bc.compare(base, _bench_doc())["regressions"] == []
+    # measured noise below tol*floor -> clean; past both -> regression
+    assert bc.compare(base, _bench_doc(wall_ms=150.0),
+                      tol=5.0)["regressions"] == []
+    slow = bc.compare(base, _bench_doc(wall_ms=450.0), tol=5.0)
+    assert [r["kind"] for r in slow["regressions"]] == ["measured"]
+    # the floor keeps small absolute jitter from tripping the multiplier
+    tiny = _bench_doc(wall_ms=0.001)
+    assert bc.compare(tiny, _bench_doc(wall_ms=0.1))["regressions"] == []
+    # modeled drift and exact-int drift always fail
+    drift = bc.compare(base, _bench_doc(wan_online_s=0.126))
+    assert [r["kind"] for r in drift["regressions"]] == ["modeled"]
+    bits = bc.compare(base, _bench_doc(online_bits=1025))
+    assert [r["kind"] for r in bits["regressions"]] == ["exact"]
+    flipped = bc.compare(base, _bench_doc(bit_identical=False))
+    assert [r["kind"] for r in flipped["regressions"]] == ["exact"]
+    # missing block / key regress; extra keys are notes
+    gone = bc.compare(base, {"bench": "netbench", "records": []})
+    assert [r["kind"] for r in gone["regressions"]] == ["missing_block"]
+    fresh = _bench_doc(extra_key=1.0)
+    del fresh["records"][0]["wall_ms"]
+    diff = bc.compare(base, fresh)
+    assert [r["kind"] for r in diff["regressions"]] == ["missing_key"]
+    assert diff["notes"][0]["extra_keys"] == ["extra_key"]
+
+
+def _health_doc(**overrides):
+    doc = {"healthy": True, "scrapes": 5, "probes": [],
+           "probes_fired_ever": [],
+           "ranks": {str(r): {"alive": True, "scrape_ok": True,
+                              "port": 4000 + r} for r in range(4)},
+           "dealer": {"alive": True, "port": 5000, "scrape_ok": True,
+                      "dealt": 3, "done": True}}
+    doc.update(overrides)
+    return doc
+
+
+def test_check_health_gate(tmp_path):
+    ch = _load_script("check_health")
+    path = tmp_path / "health.json"
+    path.write_text(json.dumps(_health_doc()))
+    info = ch.check(str(path), expect_dealer=True)
+    assert info["ranks"] == 4 and info["scrapes"] == 5
+
+    path.write_text(json.dumps(_health_doc(
+        probes_fired_ever=[{"probe": "round_stall", "rank": 1}],
+        healthy=False)))
+    with pytest.raises(AssertionError, match="unhealthy"):
+        ch.check(str(path))
+
+    undone = _health_doc()
+    undone["dealer"]["done"] = False
+    path.write_text(json.dumps(undone))
+    ch.check(str(path))                  # fine without --expect-dealer
+    with pytest.raises(AssertionError, match="quota"):
+        ch.check(str(path), expect_dealer=True)
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-x", "-q"]))
