@@ -15,15 +15,25 @@ Two regimes, keyed by what the number IS (docs/OBSERVABILITY.md):
     clears a floor (250 ms for ``*_ms`` keys, 0.25 s for ``*_s``): the
     multiplicative bound catches order-of-magnitude regressions, the
     floor keeps microsecond-scale jitter from tripping the multiplier.
+  * **throughput metrics are lower-is-worse** -- for ``*_qps`` /
+    ``*_speedup_x`` / ``avg_batch_size`` / ``qps_at_slo`` keys (the
+    serving block) the measured rule flips:
+    a key regresses only if it falls below ``baseline / tol`` AND the
+    absolute drop clears the floor (1.0 qps / 0.25x), so a collapse in
+    serving throughput fails the gate while runner jitter does not.
 
 A block or key present in the baseline but missing from the fresh run is
 a regression (coverage must not silently shrink); keys only in the fresh
 run are reported as notes.  ``--update`` rewrites the baseline from the
-fresh run instead of comparing.
+fresh run instead of comparing.  ``--blocks``/``--exclude-blocks``
+confine the comparison to named blocks (prefix match on the block name),
+so a CI job that only runs a subset of the bench -- e.g. the serve job's
+serving-only sweep -- can gate exactly what it measured.
 
     python scripts/bench_compare.py netbench.json \
         [--baseline benchmarks/baselines/netbench_baseline.json]
         [--tol 5.0] [--summary bench_diff.json] [--update]
+        [--blocks serving] [--exclude-blocks serving]
 """
 from __future__ import annotations
 
@@ -41,8 +51,12 @@ DEFAULT_TOL = 5.0
 
 # identity / free-form keys: never compared
 SKIP_KEYS = {"bench", "block", "kernel_backend", "per_step_ms", "metrics",
-             "health", "frames_sent", "trace_events"}
+             "health", "frames_sent", "trace_events", "sweep",
+             "per_member_utilization"}
 MODELED_PREFIXES = ("lan_", "wan_", "modeled_")
+# lower-is-worse measured metrics (serving throughput): the tol/floor
+# rule flips direction, and the floors are throughput-scaled
+THROUGHPUT_SUFFIXES = ("_qps", "_speedup_x")
 
 
 def _block_key(rec: dict) -> str:
@@ -60,6 +74,11 @@ def _floor_for(key: str) -> float:
     return 0.25                          # *_s and anything else measured
 
 
+def _is_throughput(key: str) -> bool:
+    return (any(key.endswith(s) for s in THROUGHPUT_SUFFIXES)
+            or key in ("avg_batch_size", "qps_at_slo"))
+
+
 def compare_value(key: str, base, fresh, tol: float) -> dict | None:
     """One key's verdict: None if fine, else a regression dict."""
     if key in SKIP_KEYS or isinstance(base, (list, dict, str)):
@@ -74,6 +93,13 @@ def compare_value(key: str, base, fresh, tol: float) -> dict | None:
             return {"key": key, "kind": "modeled", "base": base,
                     "fresh": fresh}
         return None
+    if _is_throughput(key):
+        # lower is worse: regress on a tol-fold DROP that clears the floor
+        floor = 1.0 if key.endswith("_qps") else 0.25
+        if fresh < base / tol and (base - fresh) > floor:
+            return {"key": key, "kind": "throughput", "base": base,
+                    "fresh": fresh, "tol": tol, "floor": floor}
+        return None
     # measured wall-clock: multiplicative bound + absolute floor
     floor = _floor_for(key)
     if fresh > base * tol and (fresh - base) > floor:
@@ -82,10 +108,25 @@ def compare_value(key: str, base, fresh, tol: float) -> dict | None:
     return None
 
 
+def _filter_blocks(idx: dict, only: list | None,
+                   exclude: list | None) -> dict:
+    """Confine an index to named blocks (prefix match on block name)."""
+    out = idx
+    if only:
+        out = {k: v for k, v in out.items()
+               if any(k.startswith(p) for p in only)}
+    if exclude:
+        out = {k: v for k, v in out.items()
+               if not any(k.startswith(p) for p in exclude)}
+    return out
+
+
 def compare(base_doc: dict, fresh_doc: dict,
-            tol: float = DEFAULT_TOL) -> dict:
+            tol: float = DEFAULT_TOL, blocks: list | None = None,
+            exclude_blocks: list | None = None) -> dict:
     """Full comparison: {"regressions": [...], "notes": [...]}."""
-    base_idx, fresh_idx = _index(base_doc), _index(fresh_doc)
+    base_idx = _filter_blocks(_index(base_doc), blocks, exclude_blocks)
+    fresh_idx = _filter_blocks(_index(fresh_doc), blocks, exclude_blocks)
     regressions: list = []
     notes: list = []
     for block, base_rec in base_idx.items():
@@ -126,6 +167,12 @@ def main() -> int:
                     help="write the diff summary JSON here (CI artifact)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the fresh run")
+    ap.add_argument("--blocks", nargs="+", default=None,
+                    help="compare ONLY blocks whose name starts with one "
+                         "of these prefixes")
+    ap.add_argument("--exclude-blocks", nargs="+", default=None,
+                    help="skip blocks whose name starts with one of "
+                         "these prefixes")
     args = ap.parse_args()
 
     if args.update:
@@ -138,7 +185,8 @@ def main() -> int:
         base_doc = json.load(fh)
     with open(args.fresh) as fh:
         fresh_doc = json.load(fh)
-    diff = compare(base_doc, fresh_doc, tol=args.tol)
+    diff = compare(base_doc, fresh_doc, tol=args.tol, blocks=args.blocks,
+                   exclude_blocks=args.exclude_blocks)
     if args.summary:
         with open(args.summary, "w") as fh:
             json.dump(diff, fh, indent=2)

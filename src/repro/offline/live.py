@@ -218,7 +218,7 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
                               "sessions fully dealt by the dealer runtime")
         c_shipped = reg.counter(
             "trident_dealer_sessions_shipped_total",
-            "sessions fanned out to all four party daemons")
+            "sessions fanned out to every consuming party daemon")
         g_mark = reg.gauge("trident_dealer_watermark",
                            "next session the dealer will ship")
         g_done = reg.gauge("trident_dealer_done",
@@ -287,6 +287,17 @@ class DealerDaemon:
     ``base_seed + k`` == ``seed_for_step(base_seed, k)``, so session k IS
     step k's preprocessing.  ``total=None`` streams until closed --
     open-ended training.
+
+    Multi-consumer fan-out: ``cluster`` may be a SEQUENCE of live
+    clusters (a gateway pool).  Every consumer receives the full session
+    stream -- each blob is serialized once and fanned out to every
+    consuming daemon's control queue -- and the pool's scheduler assigns
+    each session to exactly ONE member (the others ``seek`` past it), so
+    the one-time-use discipline holds across the pool.  The bounded
+    control queues mean a member that stops consuming (evicted, idle
+    under skewed load) eventually stalls the dealer; the gateway drains
+    an evicted member's queues, and balanced placement plus a generous
+    ``ahead`` cover the skew.
     """
 
     def __init__(self, cluster, program_for_step, *, ring: Ring | None = None,
@@ -295,11 +306,19 @@ class DealerDaemon:
                  runtime_kwargs: dict | None = None,
                  trace: bool | None = None,
                  metrics: bool | None = None):
-        ctrl_qs = getattr(cluster, "ctrl_queues", None)
-        if not ctrl_qs:
-            raise PrepError(
-                "DealerDaemon needs a live cluster: build it with "
-                "PartyCluster(live_prep=True)")
+        clusters = (list(cluster) if isinstance(cluster, (list, tuple))
+                    else [cluster])
+        if not clusters:
+            raise PrepError("DealerDaemon needs at least one live cluster")
+        ctrl_qs = []
+        for c in clusters:
+            qs = getattr(c, "ctrl_queues", None)
+            if not qs:
+                raise PrepError(
+                    "DealerDaemon needs a live cluster: build it with "
+                    "PartyCluster(live_prep=True)")
+            ctrl_qs.extend(qs)
+        cluster = clusters[0]           # defaults source (ring/trace/metrics)
         self.total = total
         self._ctrl_qs = ctrl_qs
         self._dealt = 0
@@ -388,11 +407,11 @@ class DealerDaemon:
                 except _queue.Full:
                     if time.monotonic() >= deadline:
                         _log.warning(
-                            "could not poison party daemon P%d's live "
-                            "bank (control queue full for 10s); a step "
-                            "blocked on streamed prep there will time "
-                            "out instead of naming the dealer failure",
-                            rank)
+                            "could not poison consumer %d's live bank "
+                            "(rank P%d; control queue full for 10s); a "
+                            "step blocked on streamed prep there will "
+                            "time out instead of naming the dealer "
+                            "failure", rank, rank % 4)
                         break
                     time.sleep(0.05)
 

@@ -31,11 +31,31 @@ zero offline bytes, transport-enforced.  A dealer failure poisons the
 live banks, so a waiting task fails with the dealer's traceback instead
 of a generic timeout.
 
+Async dispatch (the serving-gateway seam): ``submit`` is now a thin
+wrapper over ``submit_nowait`` (enqueue one task on every daemon, return
+a ``TaskHandle`` immediately) plus ``collect`` (gather that task's four
+``PartyResult``s).  The daemons serve their task queues strictly in
+order, so a driver may keep several tasks in flight on one cluster --
+task k+1's submit overlaps task k's execution -- and a pool scheduler
+(``serve.gateway``) overlaps submit/collect across whole clusters.
+Results come back on one shared queue; ``collect`` routes them into
+per-task buckets by task id, so concurrent collectors (one worker thread
+per pool member) never steal each other's results.
+
 A failed or timed-out task leaves the lock-step mesh undefined, so the
-cluster POISONS itself: the failing ``submit`` raises with the collected
-tracebacks, and every later ``submit`` raises ``ClusterPoisoned``
-immediately (instead of hanging until timeout against daemons that
-already exited).  Tear the cluster down and start a fresh one.
+cluster POISONS itself: the failing ``collect`` raises with the collected
+tracebacks, and every later ``submit``/``collect`` raises
+``ClusterPoisoned`` immediately (instead of hanging until timeout against
+daemons that already exited).  Tear the cluster down and start a fresh
+one.
+
+Port allocation: ``_free_ports`` probes free ports by binding and
+releasing them, so another process (or a sibling cluster booting
+concurrently -- exactly what a gateway pool does) can grab a port in the
+window between the probe and the daemon's bind.  Boot therefore
+fail-fasts on the first daemon error and retries the whole mesh
+construction with fresh ports when the error is ``EADDRINUSE``, up to
+``PORT_RETRIES`` attempts.
 
 ``run_four_parties(program)`` is the one-shot path (spawn, run one task,
 tear down) used by tests and benches; it is now a thin wrapper over a
@@ -72,6 +92,7 @@ from ...obs import (MetricsRegistry, Tracer, get_registry, get_tracer,
 
 DEFAULT_TIMEOUT = 120.0
 DEFAULT_LIVE_AHEAD = 2
+PORT_RETRIES = 3
 
 _log = logging.getLogger(__name__)
 
@@ -99,6 +120,21 @@ class PartyResult:
     prep_wait_s: float = 0.0          # blocked on prep material (live banks)
     trace: dict | None = None         # this task's trace chunk (trace=True)
     metrics: dict | None = None       # daemon registry snapshot (metrics=True)
+
+
+@dataclasses.dataclass
+class TaskHandle:
+    """A submitted-but-not-yet-collected cluster task (``submit_nowait``).
+    Pass it to ``PartyCluster.collect`` to gather the four results."""
+
+    task_id: int
+    submitted_at: float          # perf_counter at submit (task_walls base)
+    timeout: float
+
+
+def _addr_in_use(text: str) -> bool:
+    """Does a collected boot traceback name the bind port race?"""
+    return "EADDRINUSE" in text or "Address already in use" in text
 
 
 def _free_ports(n: int) -> list:
@@ -364,7 +400,6 @@ class PartyCluster:
                 "live_prep streams into an initially empty bank; "
                 "prep_path loads a frozen one at startup -- pick one")
         ctx = mp.get_context("spawn")
-        endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
         trace = trace or tracing_enabled()
         metrics = metrics or metrics_enabled()
         cfg = {
@@ -377,6 +412,7 @@ class PartyCluster:
         self.timeout = timeout
         self.net_model = net_model
         self.live_prep = live_prep
+        self.live_ahead = live_ahead
         self.trace = trace
         self.metrics = metrics
         # rank -> exporter HTTP port (metrics=True; filled from ready acks)
@@ -384,44 +420,90 @@ class PartyCluster:
         # per-task trace chunks from every rank (plus whatever the caller
         # extends with, e.g. the DealerDaemon's chunks)
         self.trace_chunks: list = []
-        # driver-side wall clock of every submit (uniform across prep /
-        # live / plain paths -- PartyResult.wall_s is the program only)
+        # driver-side wall clock of every submit->collect round trip
+        # (uniform across prep / live / plain paths -- PartyResult.wall_s
+        # is the program only)
         self.task_walls: list = []
-        self._task_qs = [ctx.Queue() for _ in range(4)]
-        # per-rank control queues (live prep streaming): bounded, so a
-        # dealer running ahead of consumption blocks instead of buffering
-        # unbounded sessions in flight
-        self.ctrl_queues = ([ctx.Queue(maxsize=2 * live_ahead)
-                             for _ in range(4)] if live_prep else None)
-        self._out_q = ctx.Queue()
-        self._procs = [
-            ctx.Process(target=_daemon_main,
-                        args=(rank, endpoints, cfg, self._task_qs[rank],
-                              self.ctrl_queues[rank] if live_prep else None,
-                              self._out_q),
-                        daemon=True)
-            for rank in range(4)]
         self._closed = False
         self._poisoned: str | None = None
         self.tasks_run = 0
         self._task_id = 0
+        # async-dispatch state: submit_nowait enqueues atomically under
+        # _sub_lock (the four task queues must agree on task order --
+        # the daemons execute in queue order, and diverging orders would
+        # deadlock the lock-step mesh); collect routes the shared result
+        # queue into per-task buckets under _res_lock
+        self._sub_lock = threading.Lock()
+        self._res_lock = threading.Lock()
+        self._results: dict = {}         # task_id -> [PartyResult...]
+        self._errors: dict = {}          # rank -> traceback text
+        # _free_ports probes-then-releases, so a concurrently booting
+        # process can win the race to a probed port; retry the whole mesh
+        # with fresh ports on EADDRINUSE (fail-fast on the first boot
+        # error, so a lost race costs milliseconds, not a full timeout)
+        for attempt in range(1, PORT_RETRIES + 1):
+            self._task_qs = [ctx.Queue() for _ in range(4)]
+            # per-rank control queues (live prep streaming): bounded, so a
+            # dealer running ahead of consumption blocks instead of
+            # buffering unbounded sessions in flight
+            self.ctrl_queues = ([ctx.Queue(maxsize=2 * live_ahead)
+                                 for _ in range(4)] if live_prep else None)
+            self._out_q = ctx.Queue()
+            endpoints = [("127.0.0.1", p) for p in _free_ports(4)]
+            self._procs = [
+                ctx.Process(target=_daemon_main,
+                            args=(rank, endpoints, cfg,
+                                  self._task_qs[rank],
+                                  self.ctrl_queues[rank] if live_prep
+                                  else None,
+                                  self._out_q),
+                            daemon=True)
+                for rank in range(4)]
+            for p in self._procs:
+                p.start()
+            try:
+                acks = self._collect(lambda item: item[0] == "ready",
+                                     self.timeout, fail_fast=True)
+                self.metrics_ports = {a[1]: a[3] for a in acks}
+                break
+            except Exception as e:
+                self._teardown_procs()
+                if attempt < PORT_RETRIES and _addr_in_use(str(e)):
+                    _log.warning(
+                        "cluster boot lost the free-port race "
+                        "(EADDRINUSE); retrying with fresh ports "
+                        "(attempt %d/%d)", attempt, PORT_RETRIES)
+                    self._errors.clear()
+                    continue
+                self._closed = True
+                raise
+
+    def _teardown_procs(self) -> None:
+        """Boot-retry teardown: stop whatever daemons of a failed attempt
+        came up.  Daemons still dialing the half-built mesh are not
+        reading their task queues, so terminate after a short grace."""
+        for q in self._task_qs:
+            try:
+                q.put_nowait(None)
+            except (OSError, ValueError, _queue.Full):
+                pass
         for p in self._procs:
-            p.start()
-        try:
-            acks = self._collect(lambda item: item[0] == "ready",
-                                 self.timeout)
-            self.metrics_ports = {a[1]: a[3] for a in acks}
-        except Exception:
-            self.close()
-            raise
+            p.join(timeout=0.5)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=1.0)
 
     # -- task round-trips --------------------------------------------------
-    def _collect(self, is_ack, timeout: float) -> list:
-        """Gather one ack per daemon; raise with the collected tracebacks
-        as soon as all four have answered (result or error) or on
-        timeout/death.  ``is_ack`` filters tuple-shaped acks; stale
-        PartyResults from an abandoned (timed-out) task are discarded by
-        task id."""
+    def _collect(self, is_ack, timeout: float,
+                 fail_fast: bool = False) -> list:
+        """Gather one boot ack per daemon; raise with the collected
+        tracebacks as soon as all four have answered (ack or error) or on
+        timeout/death.  ``is_ack`` filters tuple-shaped acks.
+        ``fail_fast=True`` raises on the FIRST error instead of waiting
+        for the stragglers -- at boot the other ranks keep dialing the
+        dead listener until connect_timeout, and the port-retry loop
+        wants to tear down and retry in milliseconds, not minutes."""
         got, errors = [], {}
         answered: set[int] = set()
         deadline = time.monotonic() + timeout
@@ -449,11 +531,8 @@ class PartyCluster:
             if isinstance(item, tuple) and item[0] == "error":
                 errors[item[1]] = item[2]
                 answered.add(item[1])
-            elif isinstance(item, PartyResult):
-                if item.task_id == self._task_id:
-                    got.append(item)
-                    answered.add(item.rank)
-                # else: stale result of a task whose submit() timed out
+                if fail_fast:
+                    break
             elif isinstance(item, tuple) and is_ack(item):
                 got.append(item)
                 answered.add(item[1])
@@ -462,6 +541,136 @@ class PartyCluster:
                              for r, tb in sorted(errors.items()))
             raise RuntimeError(f"party daemon failures:\n{msgs}")
         return got
+
+    def _check_usable(self) -> None:
+        assert not self._closed, "cluster is closed"
+        if self._poisoned is not None:
+            raise ClusterPoisoned(
+                "cluster poisoned by an earlier task failure -- the "
+                "lock-step mesh is undefined and the daemons have stopped "
+                "serving; tear this cluster down and spawn a fresh one. "
+                f"Original failure:\n{self._poisoned}")
+
+    def submit_nowait(self, program, *, seed: int = 0,
+                      prep: str | None = None,
+                      prep_session: int | None = None,
+                      runtime_kwargs: dict | None = None,
+                      timeout: float | None = None) -> TaskHandle:
+        """Enqueue ``program(rt, rank)`` on all four daemons and return a
+        ``TaskHandle`` immediately (gather with ``collect``).  The four
+        task-queue puts happen atomically under a lock: the daemons
+        execute strictly in queue order, so all four queues must agree on
+        the task order or the lock-step mesh deadlocks.  Tasks pipeline
+        on the daemon side -- submitting task k+1 while task k runs
+        overlaps driver-side share packing with party-side execution."""
+        self._check_usable()
+        with self._sub_lock:
+            self._check_usable()
+            self._task_id += 1
+            task = {"program": program, "seed": seed, "prep": prep,
+                    "prep_session": prep_session,
+                    "runtime_kwargs": dict(runtime_kwargs or {}),
+                    "timeout": timeout or self.timeout,
+                    "id": self._task_id}
+            with self._res_lock:
+                self._results[self._task_id] = []
+            t0 = time.perf_counter()
+            for q in self._task_qs:
+                q.put(task)
+        return TaskHandle(task_id=task["id"], submitted_at=t0,
+                          timeout=timeout or self.timeout)
+
+    def _route(self, item) -> None:
+        """Route one result-queue item (caller holds ``_res_lock``)."""
+        if isinstance(item, tuple) and item[0] == "error":
+            self._errors[item[1]] = item[2]
+        elif isinstance(item, PartyResult):
+            bucket = self._results.get(item.task_id)
+            if bucket is not None:
+                bucket.append(item)
+            # else: stale result of an abandoned (timed-out) task
+
+    def collect(self, handle: TaskHandle,
+                timeout: float | None = None) -> list:
+        """Gather the four ``PartyResult``s of a ``submit_nowait`` task.
+        Safe to call from several threads for different handles: every
+        collector drains the shared result queue and routes items into
+        per-task buckets, so nobody steals another task's results.
+
+        A task failure, daemon death, or timeout POISONS the cluster:
+        this collect raises with the daemons' tracebacks and every later
+        ``submit``/``collect`` raises ``ClusterPoisoned``."""
+        assert not self._closed, "cluster is closed"
+        tid = handle.task_id
+        deadline = time.monotonic() + (timeout or handle.timeout)
+        try:
+            while True:
+                with self._res_lock:
+                    if self._poisoned is not None:
+                        # another collector hit the failure first; its
+                        # raise carries the tracebacks, ours the summary
+                        raise ClusterPoisoned(
+                            "cluster poisoned while this task was in "
+                            f"flight:\n{self._poisoned}")
+                    bucket = self._results.get(tid)
+                    if bucket is not None and len(bucket) == 4:
+                        del self._results[tid]
+                        results = sorted(bucket, key=lambda r: r.rank)
+                        self.task_walls.append(
+                            time.perf_counter() - handle.submitted_at)
+                        self.tasks_run += 1
+                        self.trace_chunks.extend(
+                            r.trace for r in results if r.trace)
+                        return results
+                    if bucket is None:
+                        raise RuntimeError(
+                            f"task {tid} was never submitted or was "
+                            "already collected")
+                    if self._errors:
+                        # grace-drain so the raise carries every rank's
+                        # traceback, not just the first one routed
+                        grace = time.monotonic() + 1.0
+                        while (len(self._errors) < 4
+                               and time.monotonic() < grace):
+                            try:
+                                self._route(self._out_q.get(timeout=0.1))
+                            except Exception:
+                                if all(not p.is_alive()
+                                       for p in self._procs):
+                                    break
+                        msgs = "\n".join(
+                            f"--- P{r} ---\n{tb}" for r, tb
+                            in sorted(self._errors.items()))
+                        raise RuntimeError(
+                            f"party daemon failures:\n{msgs}")
+                rem = deadline - time.monotonic()
+                if rem <= 0:
+                    raise RuntimeError(
+                        f"party daemons timed out after "
+                        f"{timeout or handle.timeout}s on task {tid} "
+                        f"({len(self._results.get(tid) or [])}/4 results)")
+                try:
+                    item = self._out_q.get(timeout=min(rem, 0.25))
+                except Exception:
+                    with self._res_lock:
+                        done = {r.rank for r
+                                in self._results.get(tid) or []}
+                        dead = [i for i, p in enumerate(self._procs)
+                                if not p.is_alive() and i not in done
+                                and i not in self._errors]
+                    if dead and self._out_q.empty():
+                        raise RuntimeError(
+                            f"party daemon(s) {dead} died without a "
+                            f"result on task {tid}") from None
+                    continue
+                with self._res_lock:
+                    self._route(item)
+        except BaseException as e:
+            with self._res_lock:
+                if self._poisoned is None:
+                    self._poisoned = f"{type(e).__name__}: {e}"
+                self._results.pop(tid, None)
+            raise
 
     def submit(self, program, *, seed: int = 0, prep: str | None = None,
                prep_session: int | None = None,
@@ -475,36 +684,20 @@ class PartyCluster:
         prep: session k is step k's material, so resumed runs seek past
         spent sessions and replays fail loudly).
 
-        A task failure or timeout POISONS the cluster: this submit raises
-        with the daemons' tracebacks, and every later submit raises
-        ``ClusterPoisoned`` immediately."""
-        assert not self._closed, "cluster is closed"
-        if self._poisoned is not None:
-            raise ClusterPoisoned(
-                "cluster poisoned by an earlier task failure -- the "
-                "lock-step mesh is undefined and the daemons have stopped "
-                "serving; tear this cluster down and spawn a fresh one. "
-                f"Original failure:\n{self._poisoned}")
-        self._task_id += 1
-        task = {"program": program, "seed": seed, "prep": prep,
-                "prep_session": prep_session,
-                "runtime_kwargs": dict(runtime_kwargs or {}),
-                "timeout": timeout or self.timeout,
-                "id": self._task_id}
-        t0 = time.perf_counter()
-        for q in self._task_qs:
-            q.put(task)
-        try:
-            results = self._collect(lambda item: False,
-                                    timeout or self.timeout)
-        except BaseException as e:
-            self._poisoned = f"{type(e).__name__}: {e}"
-            raise
-        self.task_walls.append(time.perf_counter() - t0)
-        self.tasks_run += 1
-        results = sorted(results, key=lambda r: r.rank)
-        self.trace_chunks.extend(r.trace for r in results if r.trace)
-        return results
+        Blocking convenience over ``submit_nowait`` + ``collect``; the
+        poisoning contract is theirs."""
+        handle = self.submit_nowait(program, seed=seed, prep=prep,
+                                    prep_session=prep_session,
+                                    runtime_kwargs=runtime_kwargs,
+                                    timeout=timeout)
+        return self.collect(handle, timeout=timeout)
+
+    @property
+    def inflight(self) -> int:
+        """Submitted-but-not-collected tasks (pool-scheduler load
+        signal)."""
+        with self._res_lock:
+            return len(self._results)
 
     # -- observability -----------------------------------------------------
     def merged_trace(self, extra_chunks=()) -> dict:

@@ -1,0 +1,873 @@
+"""High-throughput serving gateway: PartyCluster pools, dynamic batching.
+
+One ``PartyCluster`` serves one task at a time, and the classic
+``submit`` blocks in collect -- so a query stream's throughput is bounded
+by single-task latency, not by the hardware.  The ``ServingGateway``
+closes that gap with three mechanisms:
+
+  * **dynamic batching** -- queries arriving within a ``max_wait_ms`` /
+    ``max_batch`` window coalesce into ONE share batch per cluster
+    dispatch.  Every dynamic batch is zero-padded to exactly
+    ``max_batch`` rows, so all dispatches trace the same program shape
+    (one JIT compilation, and in live-prep mode one dealer program for
+    every session).  Batching is nearly free on the wire: dotp's online
+    cost is length-independent, so rounds amortize across the batch.
+
+  * **async dispatch** -- the gateway uses ``PartyCluster.submit_nowait``
+    + ``collect`` (one collector thread per pool member), so member A's
+    collect overlaps member B's execute, and one member pipelines task
+    k+1's submit behind task k's run.
+
+  * **pool scheduling** -- each closed batch goes to the least-loaded
+    ALIVE member (fewest submitted-but-uncollected tasks, the driver
+    mirror of the daemons' ``trident_cluster_tasks_inflight`` gauge;
+    ties break toward the member with the deepest live bank).  A member
+    whose task fails is EVICTED: its queued dynamic batches are
+    re-dispatched to the survivors (no query is dropped), its explicit
+    batch futures fail with the member's error, its control queues are
+    drained so a shared dealer never stalls against a dead consumer, and
+    -- in plain-prep mode -- a replacement cluster boots in the
+    background and joins the pool.
+
+Pool members are either ``PartyCluster``s (the distributed path) or
+``LocalMember``s -- the single-member degenerate case that executes each
+dispatched batch in-process.  ``PartyPredictionServer`` and
+``serve_over_sockets`` both route their batches through this machinery,
+so the serve layer has ONE dispatch/accounting implementation
+(``ServeMeter`` + the ``trident_serve_*`` / ``trident_gateway_*``
+registry metrics).
+
+Live prep (``prep="live"``): the gateway boots every pool member with
+``live_prep=True`` and starts ONE shared ``DealerDaemon`` fanning the
+session stream out to every member's live bank.  The pool scheduler
+assigns each session to exactly one member (session = the global
+dispatch counter; the others ``seek`` past it), preserving the
+one-time-use discipline, and the dispatch seed is ``base_seed +
+session`` -- the seed the dealer dealt that session from.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import logging
+import queue as _queue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from .. import obs
+from ..core.ring import RING64
+
+_log = logging.getLogger(__name__)
+
+DEFAULT_MAX_WAIT_MS = 2.0
+
+
+def record_serve_metrics(n_queries: int, wall_s: float) -> None:
+    """One served batch on the live metrics registry (always on): the
+    serving-plane counters scraped by the exporter / embedded in health
+    docs.  The single implementation behind every serve-layer path --
+    the gateway's collectors, ``PartyPredictionServer``, and
+    ``serve_over_sockets`` all land here exactly once per batch."""
+    reg = obs.get_registry()
+    reg.counter("trident_serve_queries_total",
+                "queries served").inc(n_queries)
+    reg.counter("trident_serve_batches_total", "batches served").inc()
+    reg.histogram("trident_serve_batch_latency_us",
+                  "per-batch serve wall clock (us)").observe(wall_s * 1e6)
+
+
+def _pct(sorted_vals: list, q: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    k = max(0, min(len(sorted_vals) - 1,
+                   int(round(q / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[k]
+
+
+class ServeMeter:
+    """Thread-safe serve-layer accounting shared by every serving path:
+    batch/query counts, per-batch walls, per-query latencies, and the
+    registry increments (``record_serve_metrics``)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.queries = 0
+        self.batches = 0
+        self.batch_sizes: list = []       # real (unpadded) queries/batch
+        self.batch_walls: list = []       # dispatch -> resolve seconds
+        self.query_lat_s: list = []       # submit -> resolve seconds
+        self.aborted = False
+        self.t_first: float | None = None  # first submit (perf_counter)
+        self.t_last: float | None = None   # last resolve
+
+    def mark_submit(self) -> float:
+        now = time.perf_counter()
+        with self._lock:
+            if self.t_first is None:
+                self.t_first = now
+        return now
+
+    def record_batch(self, n: int, wall_s: float,
+                     abort: bool = False) -> None:
+        record_serve_metrics(n, wall_s)
+        with self._lock:
+            self.queries += n
+            self.batches += 1
+            self.batch_sizes.append(n)
+            self.batch_walls.append(wall_s)
+            self.aborted = self.aborted or abort
+            self.t_last = time.perf_counter()
+
+    def record_query_latency(self, seconds: float) -> None:
+        obs.get_registry().histogram(
+            "trident_gateway_query_latency_us",
+            "per-query submit->resolve latency (us)").observe(
+                seconds * 1e6)
+        with self._lock:
+            self.query_lat_s.append(seconds)
+
+    def span_s(self) -> float:
+        with self._lock:
+            if self.t_first is None or self.t_last is None:
+                return 0.0
+            return max(self.t_last - self.t_first, 1e-9)
+
+    def summary(self) -> dict:
+        with self._lock:
+            lats = sorted(self.query_lat_s)
+            nb = max(self.batches, 1)
+            span = (max(self.t_last - self.t_first, 1e-9)
+                    if self.t_first is not None and self.t_last is not None
+                    else 0.0)
+            return {
+                "queries": self.queries,
+                "batches": self.batches,
+                "aborted": self.aborted,
+                "avg_batch_size": sum(self.batch_sizes) / nb,
+                "achieved_qps": (self.queries / span) if span else 0.0,
+                "p50_ms": _pct(lats, 50) * 1e3,
+                "p95_ms": _pct(lats, 95) * 1e3,
+                "p99_ms": _pct(lats, 99) * 1e3,
+            }
+
+
+class QueryFuture:
+    """Resolves to this query's prediction row (``ServingGateway.submit``)
+    or to a ``BatchResult`` (``submit_batch``)."""
+
+    def __init__(self, qid: int | None = None):
+        self.qid = qid
+        self._ev = threading.Event()
+        self._value = None
+        self._exc: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._ev.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._ev.set()
+
+    def result(self, timeout: float | None = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError(
+                f"query {self.qid} not resolved within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """What an explicit ``submit_batch`` future resolves to."""
+
+    preds: np.ndarray
+    results: list | None        # the four PartyResults (cluster members)
+    abort: bool
+    wall_s: float
+
+
+@dataclasses.dataclass
+class _Dispatch:
+    """One batch en route through a pool member."""
+
+    X: np.ndarray
+    n: int                       # real (unpadded) queries
+    seed: int
+    prep: str | None
+    session: int | None
+    timeout: float | None
+    entries: list | None         # [(future, x, t_enq)] dynamic batches
+    future: QueryFuture | None   # explicit submit_batch
+    handle: object = None        # member backend's dispatch handle
+
+
+def _predict_batch(rt, rank, predict_fn=None, X=None):
+    """Party-daemon task: one batch through predict_fn on this runtime
+    (module-level: the daemons are spawned, so it travels by name)."""
+    return np.asarray(predict_fn(rt, X))
+
+
+def _zero_predict_program(predict_fn, X0, rt):
+    """Module-level deal twin of ``_predict_batch`` (shapes only)."""
+    predict_fn(rt, X0)
+
+
+def _gw_program_for_step(step, *, predict_fn, X0):
+    """Picklable ``step -> deal program`` for the shared live dealer:
+    every dynamic batch is padded to the same shape, so every session
+    traces the same (data-independent) offline program."""
+    return functools.partial(_zero_predict_program, predict_fn, X0)
+
+
+class _ClusterMember:
+    """Pool-member backend over a ``PartyCluster`` (async dispatch)."""
+
+    local = False
+
+    def __init__(self, cluster, predict_fn):
+        self.cluster = cluster
+        self.predict_fn = predict_fn
+
+    @property
+    def load(self) -> int:
+        return self.cluster.inflight
+
+    @property
+    def bank_depth(self) -> int:
+        # scheduling tie-break only: the last scraped/collected live-bank
+        # depth is advisory, so 0 (unknown) is always safe
+        return 0
+
+    def dispatch(self, d: _Dispatch):
+        return self.cluster.submit_nowait(
+            functools.partial(_predict_batch, predict_fn=self.predict_fn,
+                              X=d.X),
+            seed=d.seed, prep=d.prep, prep_session=d.session,
+            timeout=d.timeout)
+
+    def finish(self, handle):
+        results = self.cluster.collect(handle)
+        ref = results[0]
+        for r in results[1:]:
+            if r.totals != ref.totals:
+                raise RuntimeError(
+                    "party processes disagree on measured traffic")
+        preds = np.asarray(results[1].result)
+        return preds, results, any(r.abort for r in results)
+
+    def alive(self) -> bool:
+        return (self.cluster.poisoned is None
+                and all(self.cluster.alive().values()))
+
+    def health(self, **kw) -> dict:
+        return self.cluster.health(**kw)
+
+    def close(self) -> None:
+        self.cluster.close()
+
+
+class LocalMember:
+    """The degenerate in-process pool member: ``run_batch(X, n)`` executes
+    synchronously in the member's collector thread (so two LocalMembers
+    still overlap).  ``PartyPredictionServer`` routes its flush through
+    one of these, making the gateway THE serve-layer implementation even
+    for the in-process world."""
+
+    local = True
+
+    def __init__(self, run_batch: Callable):
+        self._run = run_batch
+        self._inflight = 0
+        self._lock = threading.Lock()
+
+    @property
+    def load(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    bank_depth = 0
+
+    def dispatch(self, d: _Dispatch):
+        with self._lock:
+            self._inflight += 1
+        return d
+
+    def finish(self, d: _Dispatch):
+        try:
+            preds = np.asarray(self._run(d.X, d.n))
+        finally:
+            with self._lock:
+                self._inflight -= 1
+        return preds, None, False
+
+    def alive(self) -> bool:
+        return True
+
+    def health(self, **kw) -> dict:
+        return {"healthy": True, "local": True}
+
+    def close(self) -> None:
+        pass
+
+
+@dataclasses.dataclass
+class _Member:
+    """Gateway-side record of one pool member."""
+
+    idx: int
+    backend: object
+    q: object                    # _queue.Queue of _Dispatch (FIFO collect)
+    thread: threading.Thread | None = None
+    owned: bool = True           # gateway booted it (close() tears it down)
+    alive: bool = True
+    tasks_done: int = 0
+    busy_s: float = 0.0
+    results_log: list = dataclasses.field(default_factory=list)
+    dispatch_log: list = dataclasses.field(default_factory=list)
+
+
+class _Flush:
+    """Batcher-queue marker: close the pending partial batch now."""
+
+
+class ServingGateway:
+    """A pool of party clusters behind one dynamic-batching front end.
+
+    ``predict_fn(rt, X_batch)`` is the ``serve_over_sockets`` contract
+    (module-level picklable; returns the opened prediction array).
+    Queries enter via ``submit(x)`` (returns a ``QueryFuture``) from any
+    number of threads; pre-formed batches enter via ``submit_batch``.
+
+    Pool construction: pass ``clusters=[...]`` to adopt existing
+    ``PartyCluster``s, ``members=[...]`` for arbitrary backends (e.g.
+    ``LocalMember``), or let the gateway boot ``pool`` clusters itself
+    (concurrently -- the port-race retry in ``PartyCluster`` makes that
+    safe).  ``max_wait_ms=None`` disables the timer: batches close only
+    when full or on ``flush()`` -- deterministic batch composition for
+    the classic serve paths.
+
+    ``prep="live"`` boots the pool with live banks and one SHARED
+    ``DealerDaemon`` fanning sessions to every member; each dispatch
+    consumes the globally-numbered session assigned to it (seed ==
+    ``base_seed + session``).
+
+    ``max_inflight`` is per-member admission control for DYNAMIC batches
+    (window batches; explicit ``submit_batch`` is exempt): a batch only
+    dispatches to a member with fewer than ``max_inflight`` uncollected
+    tasks, otherwise the batcher waits -- backpressure that lets queries
+    arriving under load coalesce into fuller batches instead of queueing
+    behind busy members as singletons.
+    """
+
+    def __init__(self, predict_fn: Callable | None = None, *,
+                 pool: int = 2, max_batch: int = 8,
+                 max_wait_ms: float | None = DEFAULT_MAX_WAIT_MS,
+                 max_inflight: int = 2,
+                 ring=RING64, base_seed: int = 0,
+                 timeout: float = 120.0, net_model=None,
+                 prep: str | None = None, live_ahead: int = 8,
+                 metrics: bool = False, replace_evicted: bool = True,
+                 keep_results: bool = False,
+                 clusters=None, members=None):
+        assert prep in (None, "live"), prep
+        self.predict_fn = predict_fn
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        # admission control: a DYNAMIC batch waits for a member with
+        # fewer than max_inflight submitted-but-uncollected tasks (2 =
+        # one running + one pipelined behind it).  The wait backpressures
+        # the batching window, so under load arriving queries coalesce
+        # into fuller batches instead of queueing as singletons
+        self.max_inflight = max(1, max_inflight)
+        self.ring = ring
+        self.base_seed = base_seed
+        self.timeout = timeout
+        self.prep = prep
+        self.live_ahead = live_ahead
+        self.metrics = metrics
+        self.replace_evicted = replace_evicted and prep is None
+        self.keep_results = keep_results
+        self.meter = ServeMeter()
+        self.evictions: list = []
+        self.dealer = None
+        self._cluster_kwargs = dict(ring=ring, timeout=timeout,
+                                    net_model=net_model,
+                                    live_prep=(prep == "live"),
+                                    live_ahead=live_ahead, metrics=metrics)
+        self._lock = threading.RLock()
+        self._members: list[_Member] = []
+        self._next_member = 0
+        self._qid = 0
+        self._dispatch_ctr = 0          # plain-mode seeds
+        self._session_ctr = 0           # live-mode global sessions
+        self._outstanding = 0
+        self._done_cond = threading.Condition(self._lock)
+        self._closed = False
+        self._in_q: _queue.Queue = _queue.Queue()
+        self._reg = obs.get_registry()
+        self._g_pool = self._reg.gauge(
+            "trident_gateway_pool_size", "alive pool members")
+        self._g_depth = self._reg.gauge(
+            "trident_gateway_queue_depth",
+            "queries waiting in the batching window")
+        # adopted members (clusters=/members=) belong to the caller:
+        # close() leaves them up so a stream can reuse them (members the
+        # gateway boots itself -- including replacements -- it also owns)
+        if members is not None:
+            for be in members:
+                self._add_member(be, owned=False)
+        elif clusters is not None:
+            for c in clusters:
+                self._add_member(_ClusterMember(c, predict_fn),
+                                 owned=False)
+        else:
+            self._boot_pool(pool)
+        self._batcher = threading.Thread(target=self._batch_loop,
+                                         daemon=True, name="gw-batcher")
+        self._batcher.start()
+
+    # -- pool construction --------------------------------------------------
+    def _boot_pool(self, pool: int) -> None:
+        from ..runtime.net.cluster import PartyCluster
+
+        slots: list = [None] * pool
+        errs: list = [None] * pool
+
+        def boot(i):
+            try:
+                slots[i] = PartyCluster(**self._cluster_kwargs)
+            except BaseException as e:       # noqa: BLE001 -- re-raised
+                errs[i] = e
+
+        threads = [threading.Thread(target=boot, args=(i,), daemon=True)
+                   for i in range(pool)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if any(e is not None for e in errs):
+            for c in slots:
+                if c is not None:
+                    c.close()
+            raise next(e for e in errs if e is not None)
+        for c in slots:
+            self._add_member(_ClusterMember(c, self.predict_fn))
+
+    def _add_member(self, backend, owned: bool = True) -> "_Member":
+        with self._lock:
+            m = _Member(idx=self._next_member, backend=backend,
+                        q=_queue.Queue(), owned=owned)
+            self._next_member += 1
+            m.thread = threading.Thread(target=self._collect_loop,
+                                        args=(m,), daemon=True,
+                                        name=f"gw-collect-{m.idx}")
+            self._members.append(m)
+            self._g_pool.set(sum(1 for x in self._members if x.alive))
+        m.thread.start()
+        return m
+
+    @property
+    def pool_size(self) -> int:
+        with self._lock:
+            return sum(1 for m in self._members if m.alive)
+
+    def _alive_members(self) -> list:
+        return [m for m in self._members if m.alive]
+
+    # -- query intake -------------------------------------------------------
+    def submit(self, x: np.ndarray) -> QueryFuture:
+        """Enqueue one query; returns a future resolving to its
+        prediction row.  Thread-safe; queries coalesce into share batches
+        inside the ``max_wait_ms``/``max_batch`` window."""
+        assert not self._closed, "gateway is closed"
+        t_enq = self.meter.mark_submit()
+        with self._lock:
+            self._qid += 1
+            fut = QueryFuture(self._qid)
+            self._outstanding += 1
+        self._reg.counter("trident_gateway_queries_total",
+                          "queries accepted by the gateway").inc()
+        self._in_q.put((fut, np.asarray(x), t_enq))
+        self._g_depth.set(self._in_q.qsize())
+        return fut
+
+    def submit_batch(self, X, *, n: int | None = None, seed: int | None = None,
+                     prep: str | None = None, prep_session: int | None = None,
+                     timeout: float | None = None) -> QueryFuture:
+        """Dispatch one PRE-FORMED batch (no padding, no window); returns
+        a future resolving to a ``BatchResult``.  The classic serve paths
+        use this to keep their batch composition (and hence reports)
+        bit-identical to the pre-gateway implementations."""
+        assert not self._closed, "gateway is closed"
+        X = np.asarray(X)
+        self.meter.mark_submit()
+        with self._lock:
+            self._outstanding += 1
+        fut = QueryFuture()
+        d = _Dispatch(X=X, n=n if n is not None else int(X.shape[0]),
+                      seed=self.base_seed if seed is None else seed,
+                      prep=prep, session=prep_session,
+                      timeout=timeout or self.timeout,
+                      entries=None, future=fut)
+        self._dispatch(d)
+        return fut
+
+    def flush(self) -> None:
+        """Close the pending partial batch immediately (don't wait for
+        the window timer / more arrivals)."""
+        self._in_q.put(_Flush)
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until every accepted query/batch has resolved."""
+        self.flush()
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._done_cond:
+            while self._outstanding > 0:
+                budget = None if deadline is None \
+                    else deadline - time.monotonic()
+                if budget is not None and budget <= 0:
+                    raise TimeoutError(
+                        f"{self._outstanding} queries still in flight "
+                        f"after {timeout}s")
+                self._done_cond.wait(timeout=0.1 if budget is None
+                                     else min(budget, 0.1))
+
+    def _settled(self, k: int = 1) -> None:
+        with self._done_cond:
+            self._outstanding -= k
+            self._done_cond.notify_all()
+
+    # -- dynamic batching ---------------------------------------------------
+    def _batch_loop(self) -> None:
+        pending: list = []
+        deadline = None
+        while True:
+            if pending and self.max_wait_ms is not None:
+                budget = max(deadline - time.monotonic(), 0.0)
+            else:
+                budget = None
+            try:
+                item = self._in_q.get(timeout=budget)
+            except _queue.Empty:
+                self._close_batch(pending)
+                pending, deadline = [], None
+                continue
+            if item is None:                       # close() sentinel
+                self._close_batch(pending)
+                return
+            if item is _Flush:
+                self._close_batch(pending)
+                pending, deadline = [], None
+                continue
+            pending.append(item)
+            self._g_depth.set(self._in_q.qsize())
+            if len(pending) == 1 and self.max_wait_ms is not None:
+                deadline = time.monotonic() + self.max_wait_ms / 1e3
+            if len(pending) >= self.max_batch:
+                self._close_batch(pending)
+                pending, deadline = [], None
+
+    def _close_batch(self, entries: list) -> None:
+        if not entries:
+            return
+        X = np.stack([x for _, x, _ in entries])
+        pad = self.max_batch - len(entries)
+        if pad > 0:
+            # fixed max_batch shape: one compiled program, one dealer
+            # program shape, regardless of how full the window was
+            X = np.concatenate([X, np.zeros((pad,) + X.shape[1:])])
+        d = _Dispatch(X=X, n=len(entries), seed=0, prep=None, session=None,
+                      timeout=self.timeout, entries=list(entries),
+                      future=None)
+        self._dispatch(d)
+
+    # -- pool scheduling ----------------------------------------------------
+    def _pick_member(self):
+        alive = self._alive_members()
+        if not alive:
+            return None
+        return min(alive, key=lambda m: (m.backend.load,
+                                         -m.backend.bank_depth, m.idx))
+
+    def _dispatch(self, d: _Dispatch) -> None:
+        while True:
+            with self._lock:
+                member = self._pick_member()
+                if member is None:
+                    err = RuntimeError(
+                        "gateway pool exhausted: every member was "
+                        "evicted" + ("" if not self.evictions else
+                                     f" (last: {self.evictions[-1]['error']})"))
+                    self._fail_dispatch(d, err)
+                    return
+                if (d.entries is not None
+                        and member.backend.load >= self.max_inflight
+                        and not self._closed):
+                    member = None       # no capacity: backpressure below
+                else:
+                    if d.entries is not None:
+                        # dynamic batch: seed/session assigned AT
+                        # dispatch so a re-dispatched (evicted-member)
+                        # batch gets fresh, never-consumed material
+                        if self.prep == "live":
+                            d.session = self._session_ctr
+                            self._session_ctr += 1
+                            d.prep = "bank"
+                            d.seed = self.base_seed + d.session
+                        else:
+                            d.seed = self.base_seed + self._dispatch_ctr
+                        self._dispatch_ctr += 1
+                        if self.prep == "live" and self.dealer is None:
+                            self._start_dealer(d.X)
+                    try:
+                        d.handle = member.backend.dispatch(d)
+                    except BaseException as e:  # noqa: BLE001 -- evicted
+                        self._evict(member, e, requeue=[])
+                        continue
+                    member.q.put(d)
+                    self._reg.counter("trident_gateway_dispatches_total",
+                                      "batches dispatched to the pool").inc()
+                    self._reg.histogram(
+                        "trident_gateway_batch_size",
+                        "real queries per dispatched batch").observe(d.n)
+                    if self.keep_results:
+                        member.dispatch_log.append(
+                            {"member": member.idx, "seed": d.seed,
+                             "session": d.session, "n": d.n,
+                             "qids": ([f.qid for f, _, _ in d.entries]
+                                      if d.entries else None),
+                             "X": np.array(d.X)})
+                    return
+            # backpressure: every live member is at max_inflight.  Wait
+            # (outside the lock) for a collector to drain a task, then
+            # re-pick -- meanwhile the batching window keeps coalescing
+            # newly arriving queries into fuller batches.
+            time.sleep(0.001)
+
+    def _start_dealer(self, X_template: np.ndarray) -> None:
+        """Lazily start the SHARED dealer on the first live dispatch (the
+        padded batch fixes the session program shape).  Caller holds the
+        gateway lock."""
+        from ..offline.live import DealerDaemon
+        clusters = [m.backend.cluster for m in self._members
+                    if m.alive and not m.backend.local]
+        self.dealer = DealerDaemon(
+            clusters,
+            functools.partial(_gw_program_for_step,
+                              predict_fn=self.predict_fn,
+                              X0=np.zeros_like(X_template)),
+            ring=self.ring, base_seed=self.base_seed,
+            ahead=self.live_ahead, total=None)
+
+    # -- collection ---------------------------------------------------------
+    def _collect_loop(self, member: _Member) -> None:
+        while True:
+            d = member.q.get()
+            if d is None:
+                return
+            t0 = time.perf_counter()
+            try:
+                preds, results, abort = member.backend.finish(d.handle)
+            except BaseException as e:     # noqa: BLE001 -- evicted
+                self._evict(member, e, requeue=[d])
+                return
+            wall = time.perf_counter() - t0
+            with self._lock:
+                member.tasks_done += 1
+                member.busy_s += wall
+                if self.keep_results and results is not None:
+                    member.results_log.append(results)
+            self.meter.record_batch(d.n, wall, abort)
+            now = time.perf_counter()
+            if d.entries is not None:
+                for i, (fut, _, t_enq) in enumerate(d.entries):
+                    self.meter.record_query_latency(now - t_enq)
+                    fut._resolve(np.asarray(preds)[i])
+                self._settled(len(d.entries))
+            else:
+                d.future._resolve(BatchResult(preds=preds, results=results,
+                                              abort=abort, wall_s=wall))
+                self._settled()
+
+    # -- eviction -----------------------------------------------------------
+    def _fail_dispatch(self, d: _Dispatch, exc: BaseException) -> None:
+        if d.entries is not None:
+            for fut, _, _ in d.entries:
+                fut._fail(exc)
+            self._settled(len(d.entries))
+        else:
+            d.future._fail(exc)
+            self._settled()
+
+    def _evict(self, member: _Member, exc: BaseException,
+               requeue: list) -> None:
+        """Remove a failed member from the pool: re-dispatch its queued
+        dynamic batches to the survivors, fail its explicit batch
+        futures, keep a shared dealer flowing by draining the dead
+        member's control queues, and (plain prep) boot a replacement."""
+        with self._lock:
+            if not member.alive:
+                return
+            member.alive = False
+            self.evictions.append({
+                "member": member.idx,
+                "error": f"{type(exc).__name__}: {exc}"[:500],
+                "tasks_done": member.tasks_done,
+            })
+            self._g_pool.set(sum(1 for x in self._members if x.alive))
+            self._reg.counter("trident_gateway_evictions_total",
+                              "pool members evicted after a failure").inc()
+        _log.warning("gateway: evicting pool member %d after %s: %s",
+                     member.idx, type(exc).__name__, exc)
+        lost = list(requeue)
+        while True:
+            try:
+                item = member.q.get_nowait()
+            except _queue.Empty:
+                break
+            if item is not None:
+                lost.append(item)
+        for d in lost:
+            if d.entries is not None:
+                self._dispatch(d)          # re-dispatch: no query dropped
+            else:
+                self._fail_dispatch(d, exc)
+        ctrl_qs = getattr(getattr(member.backend, "cluster", None),
+                          "ctrl_queues", None)
+        if ctrl_qs:
+            threading.Thread(target=self._drain_ctrl, args=(ctrl_qs,),
+                             daemon=True,
+                             name=f"gw-drain-{member.idx}").start()
+        try:
+            member.backend.close()
+        except Exception as e:
+            _log.warning("gateway: closing evicted member %d failed: %s",
+                         member.idx, e)
+        if self.replace_evicted and not self._closed:
+            threading.Thread(target=self._boot_replacement, daemon=True,
+                             name=f"gw-replace-{member.idx}").start()
+
+    def _drain_ctrl(self, ctrl_qs) -> None:
+        """Discard the dealer stream addressed to an evicted member so
+        the SHARED dealer never blocks on a dead consumer's bounded
+        queue."""
+        while not self._closed:
+            idle = True
+            for q in ctrl_qs:
+                try:
+                    q.get_nowait()
+                    idle = False
+                except Exception:
+                    pass
+            if idle:
+                time.sleep(0.05)
+
+    def _boot_replacement(self) -> None:
+        from ..runtime.net.cluster import PartyCluster
+        try:
+            cluster = PartyCluster(**self._cluster_kwargs)
+        except BaseException as e:     # noqa: BLE001 -- logged
+            _log.error("gateway: replacement cluster failed to boot: %s", e)
+            return
+        if self._closed:
+            cluster.close()
+            return
+        m = self._add_member(_ClusterMember(cluster, self.predict_fn))
+        _log.info("gateway: replacement member %d joined the pool", m.idx)
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> dict:
+        """Serving report: throughput/latency summary plus per-member
+        utilization and the eviction log."""
+        out = self.meter.summary()
+        span = self.meter.span_s()
+        with self._lock:
+            out["pool_size"] = sum(1 for m in self._members if m.alive)
+            out["evictions"] = len(self.evictions)
+            out["per_member"] = {
+                str(m.idx): {
+                    "alive": m.alive,
+                    "tasks": m.tasks_done,
+                    "busy_s": m.busy_s,
+                    "utilization": (m.busy_s / span) if span else 0.0,
+                } for m in self._members}
+        if self.dealer is not None:
+            out["live_sessions_streamed"] = self.dealer.dealt
+        return out
+
+    def health(self, **kw) -> dict:
+        """Gateway health doc: per-member cluster health (exporter
+        scrapes + probes), the eviction log, and an overall verdict --
+        healthy iff at least one member is alive, every alive member is
+        healthy, and the shared dealer (if any) has not failed."""
+        with self._lock:
+            members = list(self._members)
+            evictions = list(self.evictions)
+        pool = {}
+        for m in members:
+            if not m.alive:
+                pool[str(m.idx)] = {"healthy": False, "evicted": True}
+            else:
+                try:
+                    pool[str(m.idx)] = m.backend.health(**kw)
+                except Exception as e:
+                    pool[str(m.idx)] = {"healthy": False,
+                                        "error": f"{type(e).__name__}: {e}"}
+        alive_ok = [h for mid, h in pool.items()
+                    if not h.get("evicted")]
+        doc = {
+            "pool": pool,
+            "evictions": evictions,
+            "dealer_failed": (self.dealer.failed
+                              if self.dealer is not None else None),
+            "healthy": (bool(alive_ok)
+                        and all(h.get("healthy", False) for h in alive_ok)
+                        and (self.dealer is None
+                             or self.dealer.failed is None)),
+        }
+        return doc
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        try:
+            self.drain(timeout=self.timeout)
+        except Exception as e:
+            _log.warning("gateway close: drain failed (%s); proceeding "
+                         "with teardown", e)
+        self._closed = True
+        self._in_q.put(None)
+        self._batcher.join(timeout=5.0)
+        with self._lock:
+            members = list(self._members)
+        for m in members:
+            m.q.put(None)
+        for m in members:
+            if m.thread is not None:
+                m.thread.join(timeout=5.0)
+        if self.dealer is not None:
+            self.dealer.close()
+        for m in members:
+            if not m.owned:
+                continue
+            try:
+                m.backend.close()
+            except Exception as e:
+                _log.warning("gateway close: member %d teardown "
+                             "failed: %s", m.idx, e)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -49,7 +49,8 @@ from .. import obs
 from ..core.costs import LAN, WAN, NetworkModel
 from ..core.ring import RING64
 from ..runtime import FourPartyRuntime, LocalTransport
-from .engine import drain_in_batches, form_batches
+from .engine import form_batches
+from .gateway import LocalMember, ServingGateway, record_serve_metrics
 
 # runtime.net (sockets, cluster spawn, network model) is imported lazily
 # inside the paths that need it, keeping the in-process serving path free
@@ -87,18 +88,10 @@ class PartyServeStats:
                            self.online_bits / self.batches)
 
 
-def _record_serve_metrics(n_queries: int, wall_s: float) -> None:
-    """One served batch on the live metrics registry (always on): the
-    serving-plane counters scraped by the exporter / embedded in health
-    docs.  In-process servers count on the driver's registry; the socket
-    path counts driver-side submit round-trips (the daemons' own task
-    metrics live in their per-process registries)."""
-    reg = obs.get_registry()
-    reg.counter("trident_serve_queries_total",
-                "queries served").inc(n_queries)
-    reg.counter("trident_serve_batches_total", "batches served").inc()
-    reg.histogram("trident_serve_batch_latency_us",
-                  "per-batch serve wall clock (us)").observe(wall_s * 1e6)
+# one serve-layer metrics implementation for every path (the gateway's
+# collectors call it per completed dispatch); the old name stays as an
+# alias for callers that imported it from here
+_record_serve_metrics = record_serve_metrics
 
 
 class PartyPredictionServer:
@@ -130,9 +123,27 @@ class PartyPredictionServer:
         self.stats = PartyServeStats()
         self._queue: list[np.ndarray] = []
         self._batches_dealt = 0
+        # the serve-layer dispatch machinery is the gateway's; this
+        # server is its single-member in-process degenerate case
+        self._pipe = None
+        self._gw: ServingGateway | None = None
+
+    def _gateway(self) -> ServingGateway:
+        if self._gw is None:
+            self._gw = ServingGateway(
+                members=[LocalMember(self._run_batch)],
+                max_batch=self.batch_size, max_wait_ms=None,
+                ring=self.ring)
+        return self._gw
 
     def submit(self, x: np.ndarray) -> None:
         self._queue.append(np.asarray(x))
+
+    def close(self) -> None:
+        """Stop the dispatch machinery (idle daemon threads otherwise)."""
+        if self._gw is not None:
+            self._gw.close()
+            self._gw = None
 
     # -- per-batch transports ---------------------------------------------
     def _transport(self):
@@ -150,61 +161,64 @@ class PartyPredictionServer:
                 self.stats.modeled_s[phase] += tp.seconds(phase)
         self.stats.aborted = self.stats.aborted or bool(rt.abort_flag())
 
-    # -- interleaved path ---------------------------------------------------
-    def _flush_interleaved(self) -> list:
-        def run_batch(X, n):
-            base, tp = self._transport()
-            rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
-            c0 = self.stats.compute_s
-            with obs.timed(self.stats, "compute_s", span="serve.batch",
-                           queries=n):
-                preds = np.asarray(self.predict_fn(rt, X))
-            self.stats.queries += n
-            _record_serve_metrics(n, self.stats.compute_s - c0)
-            self._account(base, tp, rt)
-            return preds
+    # -- one batch, either path (runs inside the gateway's collector) -------
+    def _run_batch(self, X, n):
+        if self._pipe is not None:
+            return self._run_batch_pipelined(X, n)
+        base, tp = self._transport()
+        rt = FourPartyRuntime(self.ring, seed=self.seed, transport=tp)
+        with obs.timed(self.stats, "compute_s", span="serve.batch",
+                       queries=n):
+            preds = np.asarray(self.predict_fn(rt, X))
+        self.stats.queries += n
+        self._account(base, tp, rt)
+        return preds
 
-        return drain_in_batches(self._queue, self.batch_size, run_batch)
-
-    # -- pipelined offline/online path --------------------------------------
-    def _flush_pipelined(self) -> list:
-        from ..offline import OnlinePrep, PrepPipeline
-
-        # form the batches first: the dealer needs their shapes
-        batches = form_batches(self._queue, self.batch_size)
-
-        base_seed = self.seed + self._batches_dealt
-        self._batches_dealt += len(batches)
-        programs = [functools.partial(self._deal_program, np.zeros_like(X))
-                    for X, _ in batches]
-        out: list = []
-        with PrepPipeline(programs, ring=self.ring, base_seed=base_seed,
-                          capacity=self.prep_capacity) as pipe:
-            for X, n in batches:
-                _, store, drep = pipe.next_store()
-                self.stats.offline_deal_s += drep.wall_s
-                base, tp = self._transport()
-                tp.forbid_phase("offline")
-                rt = FourPartyRuntime(self.ring, transport=tp,
-                                      prep=OnlinePrep(store))
-                c0 = self.stats.compute_s
-                with obs.timed(self.stats, "online_compute_s", "compute_s",
-                               span="serve.batch.online", queries=n):
-                    preds = np.asarray(self.predict_fn(rt, X))
-                self.stats.queries += n
-                _record_serve_metrics(n, self.stats.compute_s - c0)
-                self._account(base, tp, rt)
-                assert base.totals()["offline"]["bits"] == 0
-                out.extend(preds[:n])
-        return out
+    def _run_batch_pipelined(self, X, n):
+        from ..offline import OnlinePrep
+        _, store, drep = self._pipe.next_store()
+        self.stats.offline_deal_s += drep.wall_s
+        base, tp = self._transport()
+        tp.forbid_phase("offline")
+        rt = FourPartyRuntime(self.ring, transport=tp,
+                              prep=OnlinePrep(store))
+        with obs.timed(self.stats, "online_compute_s", "compute_s",
+                       span="serve.batch.online", queries=n):
+            preds = np.asarray(self.predict_fn(rt, X))
+        self.stats.queries += n
+        self._account(base, tp, rt)
+        assert base.totals()["offline"]["bits"] == 0
+        return preds
 
     def _deal_program(self, X, rt):
         self.predict_fn(rt, X)
 
+    def _drain(self, batches: list) -> list:
+        """Route the formed batches through the gateway (single
+        ``LocalMember`` pool) and gather predictions in order."""
+        gw = self._gateway()
+        futs = [gw.submit_batch(X, n=n) for X, n in batches]
+        out: list = []
+        for (X, n), fut in zip(batches, futs):
+            out.extend(np.asarray(fut.result().preds)[:n])
+        return out
+
     def flush(self) -> list:
-        if self.prep == "pipelined":
-            return self._flush_pipelined()
-        return self._flush_interleaved()
+        batches = form_batches(self._queue, self.batch_size)
+        if self.prep != "pipelined":
+            return self._drain(batches)
+        from ..offline import PrepPipeline
+        base_seed = self.seed + self._batches_dealt
+        self._batches_dealt += len(batches)
+        programs = [functools.partial(self._deal_program, np.zeros_like(X))
+                    for X, _ in batches]
+        with PrepPipeline(programs, ring=self.ring, base_seed=base_seed,
+                          capacity=self.prep_capacity) as pipe:
+            self._pipe = pipe
+            try:
+                return self._drain(batches)
+            finally:
+                self._pipe = None
 
     def report(self) -> dict:
         links = {f"P{a}->P{b}": bits for (a, b), bits
@@ -360,30 +374,38 @@ def serve_over_sockets(predict_fn: Callable, queries, batch_size: int = 32,
         aborted = False
         wall = 0.0
         modeled = None
-        for k, X in enumerate(batches):
-            results = cluster.submit(
-                functools.partial(_serve_batch, predict_fn=predict_fn,
-                                  X=X),
-                seed=seed + k, prep="bank" if prep is not None else None,
-                prep_session=k if prep is not None else None,
-                timeout=timeout)
-            ref = results[0]
-            assert all(r.totals == ref.totals for r in results), \
-                "party processes disagree on measured traffic"
-            aborted = aborted or any(r.abort for r in results)
-            preds.extend(np.asarray(results[1].result))
-            for p in totals:
-                for kk in totals[p]:
-                    totals[p][kk] += ref.totals[p][kk]
-            for link, bits in ref.per_link.items():
-                link_online[link] = link_online.get(link, 0) \
-                    + bits["online"]
-            wall += max(r.wall_s for r in results)
-            _record_serve_metrics(len(X), cluster.task_walls[-1])
-            if ref.modeled_s is not None:
-                modeled = modeled or {p: 0.0 for p in ref.modeled_s}
-                for p, s in ref.modeled_s.items():
-                    modeled[p] += s
+        # the dispatch/accounting machinery is the gateway's (the
+        # single-cluster degenerate pool); batches stay sequential here
+        # -- submit, wait, submit -- so cluster.task_walls keep their
+        # per-batch round-trip meaning for the netbench measurements
+        gw = ServingGateway(predict_fn, clusters=[cluster],
+                            max_batch=batch_size, max_wait_ms=None,
+                            ring=ring, base_seed=seed, timeout=timeout)
+        try:
+            for k, X in enumerate(batches):
+                fut = gw.submit_batch(
+                    X, seed=seed + k,
+                    prep="bank" if prep is not None else None,
+                    prep_session=k if prep is not None else None,
+                    timeout=timeout)
+                br = fut.result(timeout=timeout + 60.0)
+                results = br.results
+                ref = results[0]
+                aborted = aborted or br.abort
+                preds.extend(np.asarray(results[1].result))
+                for p in totals:
+                    for kk in totals[p]:
+                        totals[p][kk] += ref.totals[p][kk]
+                for link, bits in ref.per_link.items():
+                    link_online[link] = link_online.get(link, 0) \
+                        + bits["online"]
+                wall += max(r.wall_s for r in results)
+                if ref.modeled_s is not None:
+                    modeled = modeled or {p: 0.0 for p in ref.modeled_s}
+                    for p, s in ref.modeled_s.items():
+                        modeled[p] += s
+        finally:
+            gw.close()
         report = {
             "queries": len(queries),
             "batches": len(batches),

@@ -321,3 +321,101 @@ class ClusterSGD:
         exporters plus the attached dealer's (``PartyCluster`` and
         ``DealerDaemon`` built with ``metrics=True``)."""
         return self.cluster.health(dealer=self.dealer, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel secure SGD: the global batch sharded across a cluster pool.
+# ---------------------------------------------------------------------------
+def shard_batch(batch: tuple, shards: int) -> list:
+    """Split every batch array into ``shards`` EQUAL row-shards.  Equal
+    sizes are required: each member's step normalizes its gradient by its
+    shard size, so the mean of the members' updates equals the full-batch
+    update only when the shards weigh the same."""
+    arrays = tuple(np.asarray(b) for b in batch)
+    n = arrays[0].shape[0]
+    if n % shards:
+        raise ValueError(
+            f"global batch of {n} rows does not shard evenly across "
+            f"{shards} pool members")
+    step = n // shards
+    return [tuple(a[i * step:(i + 1) * step] for a in arrays)
+            for i in range(shards)]
+
+
+class ShardedClusterSGD:
+    """Data-parallel ``Trainer`` step_fn over a POOL of party clusters:
+    step t splits the global batch into one equal shard per member, every
+    member runs the step on its shard CONCURRENTLY (``submit_nowait`` on
+    all members, then collect -- member k+1 executes while member k's
+    results are gathered), and the new parameters aggregate as the mean
+    across members.
+
+    The aggregation is the secure FedAvg mean: since each member's step
+    computes ``params - lr * grad_i`` with ``grad_i`` already normalized
+    by the (equal) shard size,
+
+        mean_i(params - lr * grad_i)  ==  params - lr * mean_i(grad_i),
+
+    i.e. ONE linear combination of the members' outputs -- free on the
+    wire in-protocol (lincombs move no bytes).  This runtime's step
+    contract declassifies params at every step boundary (plaintext
+    float64 trees, same as ``ClusterSGD``), so the mean is applied to the
+    declassified updates here; a deployment keeps the updates as shares
+    and applies the identical lincomb before any declassification.
+
+    Every member runs from the SAME ``seed_for_step(base_seed, t)`` --
+    members own independent meshes, so equal seeds just make each
+    member's trajectory self-consistent and replayable.
+    """
+
+    def __init__(self, clusters, task: SGDTask, *, base_seed: int = 0):
+        clusters = list(clusters)
+        if not clusters:
+            raise ValueError("ShardedClusterSGD needs at least one cluster")
+        self.clusters = clusters
+        self.task = task
+        self.base_seed = base_seed
+        self.results: list = []         # per-step [member -> [PartyResult x4]]
+
+    def step_fn(self, params, step, *batch):
+        params_np = {k: np.asarray(v) for k, v in params.items()}
+        shards = shard_batch(tuple(batch), len(self.clusters))
+        seed = seed_for_step(self.base_seed, step)
+        handles = [
+            cluster.submit_nowait(
+                functools.partial(_cluster_step_program, task=self.task,
+                                  params=params_np, batch=shard),
+                seed=seed)
+            for cluster, shard in zip(self.clusters, shards)]
+        per_member = [cluster.collect(h)
+                      for cluster, h in zip(self.clusters, handles)]
+        news, losses, abort = [], [], False
+        for m, results in enumerate(per_member):
+            ref = results[0].result
+            for r in results[1:]:
+                for k in ref["params"]:
+                    if not np.array_equal(r.result["params"][k],
+                                          ref["params"][k]):
+                        raise RuntimeError(
+                            f"cluster divergence at step {step}, member "
+                            f"{m}: P{r.rank} params[{k!r}] differs from P0")
+            news.append(ref["params"])
+            losses.append(float(ref["loss"]))
+            abort = abort or bool(ref["abort"]) \
+                or any(r.abort for r in results)
+        self.results.append(per_member)
+        mean = {k: np.mean([nw[k] for nw in news], axis=0)
+                for k in sorted(news[0])}
+        return mean, float(np.mean(losses)), abort
+
+    __call__ = step_fn
+
+    def offline_bits_on_mesh(self) -> int:
+        """Total offline-phase bits across every member's mesh."""
+        return sum(res[0].totals["offline"]["bits"]
+                   for step in self.results for res in step)
+
+    def health(self, **kw) -> dict:
+        """Per-member cluster health documents, keyed by member index."""
+        return {str(m): c.health(**kw)
+                for m, c in enumerate(self.clusters)}
