@@ -51,7 +51,7 @@ def check(path: Path, errors: list):
     for m in PATH_TOKEN.finditer(text):
         if not (ROOT / m.group(0)).exists():
             errors.append(f"{rel}: broken path pointer {m.group(0)!r}")
-    for m in DANGLING.finditer(text):
+    for _ in DANGLING.finditer(text):
         errors.append(f"{rel}: dangling DESIGN.md reference")
     if path.suffix == ".md":
         for m in MD_LINK.finditer(text):

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""tridentlint entry point: protocol-invariant static analyzer.
+
+Usage (from the repo root):
+
+    python scripts/tridentlint.py --baseline analysis/baseline.json
+    python scripts/tridentlint.py --list-rules
+    python scripts/tridentlint.py --pretend-path runtime/injected.py /tmp/x.py
+
+Exit status: 0 clean (modulo baseline), 1 when new findings appear.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""tridentlint: protocol-invariant static analyzer + concurrency audit.
+
+Rule families (see docs/ANALYSIS.md for the catalog):
+
+* PREP0xx — prep-seam discipline (randomness only via prep.acquire)
+* PHASE0x — phase discipline (round scopes, forbid_phase bypasses)
+* OBS0xx  — observability-seam coverage (traced protocols, byte booking)
+* CONC0xx — concurrency audit (lock graphs, shared attrs, thread hygiene)
+"""
+from .baseline import diff as baseline_diff, load as baseline_load, \
+    save as baseline_save
+from .core import (Finding, Module, Rule, all_rules, load_tree, register,
+                   run_rules)
+
+__all__ = [
+    "Finding", "Module", "Rule", "all_rules", "load_tree", "register",
+    "run_rules", "baseline_diff", "baseline_load", "baseline_save",
+]

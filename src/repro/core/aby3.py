@@ -133,7 +133,8 @@ def matmul(ctx: TridentContext, x: RShare, y: RShare,
     return RShare(jnp.stack(legs))
 
 
-def truncate(ctx: TridentContext, x: RShare, malicious: bool = True) -> RShare:
+def truncate(ctx: TridentContext, x: RShare,
+             malicious: bool = True) -> RShare:  # noqa: ARG001 -- API parity
     """SecureML-style pair truncation; ABY3's offline pair generation uses
     (2*ell-2)-round RCA circuits -- tallied, value emulated via the pair."""
     ring = ctx.ring

@@ -128,7 +128,7 @@ def _gamma_offline(ctx: TridentContext, lx: jax.Array, ly: jax.Array,
 
 def _mult_like(ctx: TridentContext, x: AShare, y: AShare, name: str,
                contract=None, out_shape=None,
-               online_terms=None) -> AShare:
+               _online_terms=None) -> AShare:
     """Shared skeleton of Pi_Mult / Pi_DotP / Pi_MatMul.
 
     online_terms(mx, my, lx, ly) must return (m_x*m_y, cross) where cross =
@@ -186,7 +186,7 @@ def mult(ctx: TridentContext, x: AShare, y: AShare) -> AShare:
 # ---------------------------------------------------------------------------
 # Pi_DotP (Fig. 9) / matrix multiplication (batched, jnp.matmul semantics).
 # ---------------------------------------------------------------------------
-def _mm(ring, a, b):
+def _mm(_ring, a, b):
     return jnp.matmul(a, b)
 
 

@@ -35,7 +35,8 @@ def _limbs(ell: int) -> int:
     return ell // 4
 
 
-def _limb_kernel(a_ref, b_ref, out_ref, *, ell: int, bk_steps: int):
+def _limb_kernel(a_ref, b_ref, out_ref, *, ell: int,
+                 bk_steps: int):  # noqa: ARG001 -- partial-bound grid arg
     """One (bm, bn) output tile; k-grid accumulates into out_ref."""
     L = _limbs(ell)
     dtype = out_ref.dtype

@@ -33,7 +33,7 @@ from ..core.ring import RING64
 from ..nn import model as M
 
 
-def _batch_rescale(cfg, shape_name, global_batch):
+def _batch_rescale(cfg, shape_name, _global_batch):
     """Microbatching knob per shape (activation memory control)."""
     if shape_name == "train_4k":
         return dataclasses_replace(cfg, microbatch=0)

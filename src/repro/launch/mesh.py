@@ -19,5 +19,5 @@ def data_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
-def model_axis(mesh) -> str:
+def model_axis(_mesh) -> str:
     return "model"

@@ -191,7 +191,7 @@ def param_shardings(cfg: ModelConfig, mesh, trident: bool = True,
            "final_norm": {"g": ns_for((None,), specs["final_norm"]["g"])},
            "lm_head": {"w": ns_for((None, mdl), specs["lm_head"]["w"])}}
     segs = []
-    for i, (kind, count) in enumerate(cfg.segments()):
+    for i, (kind, _count) in enumerate(cfg.segments()):
         if kind == "shared_attn":
             segs.append(None)
             continue

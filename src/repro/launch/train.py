@@ -54,7 +54,7 @@ def main(argv=None):
         kw["enc_inputs"] = eng.from_plain(
             rng.randn(args.batch, cfg.frontend_tokens, cfg.d_model) * 0.1)
 
-    def step_fn(params, step, ids, labels):
+    def step_fn(params, _step, ids, labels):
         new_params, loss, _ = M.train_step(eng, cfg, params, ids, labels,
                                            lr=args.lr, **kw)
         return new_params, loss, ctx.abort_flag()

@@ -71,7 +71,7 @@ def embedding_bwd(eng: Engine, params, cache, dy):
 # ---------------------------------------------------------------------------
 # RMSNorm
 # ---------------------------------------------------------------------------
-def rmsnorm_init(rng, d: int):
+def rmsnorm_init(_rng, d: int):
     return {"g": np.ones((d,), np.float64)}
 
 
@@ -87,7 +87,7 @@ def rmsnorm_fwd(eng: Engine, params, x, eps: float = 1e-5):
     return y, (xhat, inv, params["g"])
 
 
-def rmsnorm_bwd(eng: Engine, params, cache, dy):
+def rmsnorm_bwd(eng: Engine, _params, cache, dy):
     xhat, inv, g = cache
     g_b = _broadcast_param(eng, g, dy)
     dxhat = eng.mul(dy, g_b)
@@ -457,7 +457,7 @@ def attention_prefill(eng: Engine, params, cfg: AttnConfig, x,
     return y, kv
 
 
-def _wrap_chunked(eng, x):
+def _wrap_chunked(_eng, x):
     return x
 
 

@@ -210,7 +210,7 @@ def params_to_engine(eng: Engine, params):
     return out
 
 
-def _unstack_layer(eng, p):
+def _unstack_layer(_eng, p):
     """Scan-xs element (AShare data (4,...)) is already a valid share."""
     return p
 
@@ -261,7 +261,8 @@ def _block_fwd(eng, cfg: ModelConfig, kind: str, p, x, enc_out=None):
     raise ValueError(kind)
 
 
-def _block_bwd(eng, cfg: ModelConfig, kind: str, p, cache, dy, enc_out=None):
+def _block_bwd(eng, cfg: ModelConfig, kind: str, p, cache, dy,
+               enc_out=None):  # noqa: ARG001 -- kw contract (cross-attn)
     """Returns (dx, grads[, d_enc])."""
     if kind in ("attn_mlp", "enc", "shared_attn"):
         c1, ca, c2, cm = cache
@@ -652,7 +653,7 @@ def _stacked_upd(eng, lr):
     return f
 
 
-def _tree_map2(eng, f, a, b):
+def _tree_map2(_eng, f, a, b):
     return jax.tree_util.tree_map(
         f, a, b, is_leaf=lambda x: _is_tensor(x))
 
@@ -875,7 +876,8 @@ def serve_decode(eng: Engine, cfg: ModelConfig, params, ids_last, caches,
     return logits, new_caches
 
 
-def _decode_block(eng, cfg, kind, p, x, cache, pos, enc_out, long_ctx):
+def _decode_block(eng, cfg, kind, p, x, cache, pos,
+                  enc_out, long_ctx):  # noqa: ARG001 -- contract slot
     window = (cfg.long_window if long_ctx else None) or cfg.window
     if kind in ("attn_mlp", "enc", "attn_moe"):
         kv = {"k": kv_expand(eng, cache["k"]),
@@ -954,6 +956,6 @@ def _seg_decode_scan(eng, cfg, kind, stacked, x, seg_cache, count, pos,
     return _wrap(eng, y), ys["c"]
 
 
-def prepare_decode_caches(eng, cfg, prefill_caches):
+def prepare_decode_caches(eng, cfg, prefill_caches):  # noqa: ARG001 -- API
     """Identity today: serve_prefill already emits scan-layout caches."""
     return prefill_caches

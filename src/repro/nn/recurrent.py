@@ -146,7 +146,7 @@ def _wrap(eng, x):
     return AShare(x) if isinstance(eng, TridentEngine) else x
 
 
-def _scan_ctx(eng):
+def _scan_ctx(_eng):
     class _Null:
         def __enter__(self):
             return self

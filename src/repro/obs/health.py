@@ -218,6 +218,9 @@ class HealthMonitor:
         self._dealer = dealer
         self._interval = interval
         self._probe_kw = probe_kw
+        # CONC002: stop() can race the poll thread's _record when the
+        # join times out, so probe accumulation is lock-guarded
+        self._rec_lock = threading.Lock()
         self.scrapes = 0
         self.probes_fired_ever: list = []
         self._seen: set = set()
@@ -227,12 +230,13 @@ class HealthMonitor:
         self._thread.start()
 
     def _record(self, doc: dict) -> None:
-        self.scrapes += 1
-        for p in doc["probes"]:
-            key = (p["probe"], p.get("rank"))
-            if key not in self._seen:
-                self._seen.add(key)
-                self.probes_fired_ever.append(p)
+        with self._rec_lock:
+            self.scrapes += 1
+            for p in doc["probes"]:
+                key = (p["probe"], p.get("rank"))
+                if key not in self._seen:
+                    self._seen.add(key)
+                    self.probes_fired_ever.append(p)
 
     def _run(self) -> None:
         while not self._stop.wait(self._interval):
@@ -246,7 +250,8 @@ class HealthMonitor:
         self._thread.join(timeout=10.0)
         doc = cluster_health(self._cluster, self._dealer, **self._probe_kw)
         self._record(doc)
-        doc["scrapes"] = self.scrapes
-        doc["probes_fired_ever"] = self.probes_fired_ever
-        doc["healthy"] = doc["healthy"] and not self.probes_fired_ever
+        with self._rec_lock:
+            doc["scrapes"] = self.scrapes
+            doc["probes_fired_ever"] = list(self.probes_fired_ever)
+        doc["healthy"] = doc["healthy"] and not doc["probes_fired_ever"]
         return doc

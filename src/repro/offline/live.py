@@ -263,14 +263,17 @@ def _dealer_daemon_main(cfg, ctrl_qs, status_q):
             q.put(("dealer_done", session))
     except BaseException:
         tb = traceback.format_exc()
+        # CONC003: best-effort delivery -- OSError/ValueError mean the
+        # driver already tore the queue down, Full that a consumer stalled;
+        # the watcher's hard-death path covers anything undelivered
         try:
             status_q.put(("error", tb))
-        except Exception:
+        except (OSError, ValueError):
             pass
         for q in ctrl_qs:
             try:
                 q.put(("dealer_error", tb), timeout=5.0)
-            except Exception:
+            except (_queue.Full, OSError, ValueError):
                 pass
     finally:
         if exporter is not None:
@@ -321,6 +324,9 @@ class DealerDaemon:
         cluster = clusters[0]           # defaults source (ring/trace/metrics)
         self.total = total
         self._ctrl_qs = ctrl_qs
+        # CONC002: the watcher thread writes these while driver-side
+        # properties poll them mid-stream; _slock makes the handoff atomic
+        self._slock = threading.Lock()
         self._dealt = 0
         self._done = False
         self._error: str | None = None
@@ -355,17 +361,18 @@ class DealerDaemon:
     # -- status -------------------------------------------------------------
     def _on_status(self, item) -> None:
         kind = item[0]
-        if kind == "dealt":
-            self._dealt = item[1] + 1
-        elif kind == "done":
-            self._done = True
-            self._dealt = item[1]
-        elif kind == "error":
-            self._error = item[1]
-        elif kind == "trace":
-            self.trace_chunks.append(item[1])
-        elif kind == "metrics_port":
-            self.metrics_port = item[1]
+        with self._slock:
+            if kind == "dealt":
+                self._dealt = item[1] + 1
+            elif kind == "done":
+                self._done = True
+                self._dealt = item[1]
+            elif kind == "error":
+                self._error = item[1]
+            elif kind == "trace":
+                self.trace_chunks.append(item[1])
+            elif kind == "metrics_port":
+                self.metrics_port = item[1]
 
     def _watch(self) -> None:
         while True:
@@ -379,23 +386,24 @@ class DealerDaemon:
                 self._on_status(self._status_q.get_nowait())
             except _queue.Empty:
                 break
-        if self._closed or self._done:
-            return
-        if self._error is None:
-            # hard death: the process never posted its own error
-            self._error = (
-                f"dealer daemon died hard (exitcode {self._proc.exitcode}) "
-                f"after streaming {self._dealt} session(s) -- no further "
-                "live prep will arrive")
+        with self._slock:
+            if self._closed or self._done:
+                return
+            if self._error is None:
+                # hard death: the process never posted its own error
+                self._error = (
+                    f"dealer daemon died hard (exitcode "
+                    f"{self._proc.exitcode}) after streaming {self._dealt} "
+                    "session(s) -- no further live prep will arrive")
+            dealt, error = self._dealt, self._error
         _log.error("dealer daemon failed after %d session(s); poisoning "
-                   "the party daemons' live banks:\n%s",
-                   self._dealt, self._error)
+                   "the party daemons' live banks:\n%s", dealt, error)
         # poison every party daemon's bank so blocked steps fail loudly
         # and named.  On a soft failure this is redundant with the dealer
         # process's own best-effort poisoning (harmless: bank.fail is
         # idempotent and the control threads ignore trailing messages);
         # on a hard kill it is the ONLY delivery path.
-        self._poison_banks(self._error)
+        self._poison_banks(error)
 
     def _poison_banks(self, msg: str) -> None:
         for rank, q in enumerate(self._ctrl_qs):
@@ -418,16 +426,19 @@ class DealerDaemon:
     @property
     def dealt(self) -> int:
         """Sessions fully streamed to all four party daemons."""
-        return self._dealt
+        with self._slock:
+            return self._dealt
 
     @property
     def done(self) -> bool:
-        return self._done
+        with self._slock:
+            return self._done
 
     @property
     def failed(self) -> str | None:
         """The dealer's traceback (or death notice), if it failed."""
-        return self._error
+        with self._slock:
+            return self._error
 
     # -- lifecycle ----------------------------------------------------------
     def kill(self) -> None:

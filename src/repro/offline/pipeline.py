@@ -46,6 +46,10 @@ class PrepPipeline:
         self._factory = transport_factory
         self._runtime_kwargs = runtime_kwargs
         self._q: queue.Queue = queue.Queue(maxsize=capacity)
+        # CONC002: written by the producer thread, raised on the consumer
+        # side; the lock makes the handoff explicit rather than relying on
+        # the _DONE sentinel's queue ordering
+        self._err_lock = threading.Lock()
         self._error: BaseException | None = None
         self._taken = 0
         self._stop = threading.Event()
@@ -81,7 +85,8 @@ class PrepPipeline:
                 if not self._offer((k, store, report)):
                     return
         except BaseException as e:          # surfaced on the consumer side
-            self._error = e
+            with self._err_lock:
+                self._error = e
         finally:
             self._offer(_DONE)
 
@@ -97,8 +102,10 @@ class PrepPipeline:
                 f"(session {self._taken} not yet produced)") from None
         if item is _DONE:
             self._q.put(_DONE)              # stay terminal for later calls
-            if self._error is not None:
-                raise self._error
+            with self._err_lock:
+                error = self._error
+            if error is not None:
+                raise error
             raise PrepError(
                 f"prep pipeline exhausted after {self._taken} sessions")
         self._taken += 1
@@ -109,8 +116,10 @@ class PrepPipeline:
         while self._taken < len(self._programs):
             yield self.next_store()
         # drain the terminal sentinel so producer errors still surface
-        if self._error is not None:
-            raise self._error
+        with self._err_lock:
+            error = self._error
+        if error is not None:
+            raise error
 
     def close(self) -> None:
         """Cancel the producer: no further sessions are dealt, and a

@@ -108,7 +108,7 @@ def and_bshare(rt: FourPartyRuntime, x: DistBShare, y: DistBShare,
             return rt.kernels.bool_gamma_pieces(
                 x.views[party].lam, y.views[party].lam, masks, js)
 
-        gamma = [dict() for _ in PARTIES]
+        gamma = [{} for _ in PARTIES]
         gamma[0] = pieces(0, (1, 2, 3))
         for j in (1, 2, 3):
             gamma[GAMMA_LOCAL[j]].update(pieces(GAMMA_LOCAL[j], (j,)))

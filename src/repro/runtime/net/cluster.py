@@ -290,7 +290,12 @@ def _ctrl_loop(ctrl_q, bank, rank):
                        "sessions streamed into the live bank so far")
     try:
         while True:
-            item = ctrl_q.get()
+            # CONC005: bounded wait so a dealer killed without posting the
+            # sentinel cannot park this thread forever
+            try:
+                item = ctrl_q.get(timeout=1.0)
+            except _queue.Empty:
+                continue
             if item is None:
                 return
             kind = item[0]

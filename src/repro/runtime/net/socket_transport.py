@@ -130,10 +130,10 @@ class SocketTransport(MeasuredTransport):
                 self._tune(sock)
                 sock.sendall(bytes([self.rank]))
                 return sock
-            except OSError:
+            except OSError as e:
                 if time.monotonic() > deadline:
                     raise TransportTimeout(
-                        f"P{self.rank} could not reach {endpoint}")
+                        f"P{self.rank} could not reach {endpoint}") from e
                 time.sleep(0.05)
 
     @staticmethod

@@ -220,6 +220,7 @@ def _ash_pieces(rt: FourPartyRuntime, v0, *, tag: str,
             {1: v1, 2: v2}]              # P3
 
 
+@traced_protocol("ash_by_p0")   # OBS001: public entry, wire bytes traced
 def ash_by_p0(rt: FourPartyRuntime, v0) -> list:
     """Public entry point mirroring core.protocols.ash_by_p0."""
     return _ash_pieces(rt, v0, tag=rt.next_tag("ash"))
@@ -246,7 +247,7 @@ def _gamma_exchange(rt: FourPartyRuntime, x: DistAShare, y: DistAShare,
         return rt.kernels.gamma_pieces(kind, op, x.views[party].lam,
                                        y.views[party].lam, masks, js)
 
-    gamma = [dict() for _ in PARTIES]
+    gamma = [{} for _ in PARTIES]
     gamma[0] = pieces(0, (1, 2, 3))
     for j in (1, 2, 3):
         gamma[GAMMA_LOCAL[j]].update(pieces(GAMMA_LOCAL[j], (j,)))

@@ -210,7 +210,7 @@ class _Dispatch:
     handle: object = None        # member backend's dispatch handle
 
 
-def _predict_batch(rt, rank, predict_fn=None, X=None):
+def _predict_batch(rt, _rank, predict_fn=None, X=None):
     """Party-daemon task: one batch through predict_fn on this runtime
     (module-level: the daemons are spawned, so it travels by name)."""
     return np.asarray(predict_fn(rt, X))
@@ -221,7 +221,7 @@ def _zero_predict_program(predict_fn, X0, rt):
     predict_fn(rt, X0)
 
 
-def _gw_program_for_step(step, *, predict_fn, X0):
+def _gw_program_for_step(_step, *, predict_fn, X0):
     """Picklable ``step -> deal program`` for the shared live dealer:
     every dynamic batch is padded to the same shape, so every session
     traces the same (data-independent) offline program."""
@@ -658,20 +658,25 @@ class ServingGateway:
         padded batch fixes the session program shape).  Caller holds the
         gateway lock."""
         from ..offline.live import DealerDaemon
-        clusters = [m.backend.cluster for m in self._members
-                    if m.alive and not m.backend.local]
-        self.dealer = DealerDaemon(
-            clusters,
-            functools.partial(_gw_program_for_step,
-                              predict_fn=self.predict_fn,
-                              X0=np.zeros_like(X_template)),
-            ring=self.ring, base_seed=self.base_seed,
-            ahead=self.live_ahead, total=None)
+        with self._lock:     # CONC002: re-entrant -- the dispatcher holds it
+            clusters = [m.backend.cluster for m in self._members
+                        if m.alive and not m.backend.local]
+            self.dealer = DealerDaemon(
+                clusters,
+                functools.partial(_gw_program_for_step,
+                                  predict_fn=self.predict_fn,
+                                  X0=np.zeros_like(X_template)),
+                ring=self.ring, base_seed=self.base_seed,
+                ahead=self.live_ahead, total=None)
 
     # -- collection ---------------------------------------------------------
     def _collect_loop(self, member: _Member) -> None:
         while True:
-            d = member.q.get()
+            # CONC005: bounded wait; close() still exits via the sentinel
+            try:
+                d = member.q.get(timeout=0.5)
+            except _queue.Empty:
+                continue
             if d is None:
                 return
             t0 = time.perf_counter()
@@ -763,10 +768,12 @@ class ServingGateway:
         while not self._closed:
             idle = True
             for q in ctrl_qs:
+                # CONC003: Empty is the idle case; OSError/ValueError mean
+                # the evicted member's queue is already torn down
                 try:
                     q.get_nowait()
                     idle = False
-                except Exception:
+                except (_queue.Empty, OSError, ValueError):
                     pass
             if idle:
                 time.sleep(0.05)
@@ -800,8 +807,9 @@ class ServingGateway:
                     "busy_s": m.busy_s,
                     "utilization": (m.busy_s / span) if span else 0.0,
                 } for m in self._members}
-        if self.dealer is not None:
-            out["live_sessions_streamed"] = self.dealer.dealt
+            dealer = self.dealer
+        if dealer is not None:
+            out["live_sessions_streamed"] = dealer.dealt
         return out
 
     def health(self, **kw) -> dict:
@@ -812,6 +820,7 @@ class ServingGateway:
         with self._lock:
             members = list(self._members)
             evictions = list(self.evictions)
+            dealer = self.dealer
         pool = {}
         for m in members:
             if not m.alive:
@@ -827,12 +836,12 @@ class ServingGateway:
         doc = {
             "pool": pool,
             "evictions": evictions,
-            "dealer_failed": (self.dealer.failed
-                              if self.dealer is not None else None),
+            "dealer_failed": (dealer.failed
+                              if dealer is not None else None),
             "healthy": (bool(alive_ok)
                         and all(h.get("healthy", False) for h in alive_ok)
-                        and (self.dealer is None
-                             or self.dealer.failed is None)),
+                        and (dealer is None
+                             or dealer.failed is None)),
         }
         return doc
 
@@ -850,13 +859,14 @@ class ServingGateway:
         self._batcher.join(timeout=5.0)
         with self._lock:
             members = list(self._members)
+            dealer = self.dealer
         for m in members:
             m.q.put(None)
         for m in members:
             if m.thread is not None:
                 m.thread.join(timeout=5.0)
-        if self.dealer is not None:
-            self.dealer.close()
+        if dealer is not None:
+            dealer.close()
         for m in members:
             if not m.owned:
                 continue

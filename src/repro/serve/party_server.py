@@ -199,7 +199,7 @@ class PartyPredictionServer:
         gw = self._gateway()
         futs = [gw.submit_batch(X, n=n) for X, n in batches]
         out: list = []
-        for (X, n), fut in zip(batches, futs):
+        for (_X, n), fut in zip(batches, futs):
             out.extend(np.asarray(fut.result().preds)[:n])
         return out
 
@@ -251,7 +251,7 @@ class PartyPredictionServer:
 # ---------------------------------------------------------------------------
 # Distributed serving: four long-lived party daemons over TCP.
 # ---------------------------------------------------------------------------
-def _serve_batch(rt, rank, predict_fn=None, X=None):
+def _serve_batch(rt, _rank, predict_fn=None, X=None):
     """Party-daemon task: one batch through predict_fn on this runtime."""
     return np.asarray(predict_fn(rt, X))
 

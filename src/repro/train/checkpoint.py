@@ -102,7 +102,7 @@ def restore(path: str, tree_like, host: int = 0):
     data = np.load(os.path.join(path, f"shard_{host}.npz"))
     leaves, treedef = _flatten(tree_like)
     out = []
-    for i, ref in enumerate(leaves):
+    for i, _ref in enumerate(leaves):
         if manifest["none_mask"][i]:
             out.append(None)
             continue

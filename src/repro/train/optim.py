@@ -21,7 +21,7 @@ def _is_tensor(x):
     return isinstance(x, (AShare, jnp.ndarray, jax.Array))
 
 
-def tree_map2(eng, f, a, b):
+def tree_map2(_eng, f, a, b):
     """tree_map that passes through non-tensor leaves (segment kind tags)."""
     def g(x, y):
         return f(x, y) if _is_tensor(x) else x

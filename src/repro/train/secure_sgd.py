@@ -151,7 +151,7 @@ def step_program(task: SGDTask, params: dict, batch: tuple):
     return program
 
 
-def zero_inputs(task: SGDTask, params: dict, batch: tuple):
+def zero_inputs(_task: SGDTask, params: dict, batch: tuple):
     """Shape-preserving zero (params, batch) for dealing ahead of data."""
     zp = {k: np.zeros_like(np.asarray(v, np.float64))
           for k, v in params.items()}
@@ -214,7 +214,7 @@ class PrepAheadSGD:
 # ---------------------------------------------------------------------------
 # Distributed training: one PartyCluster task per step.
 # ---------------------------------------------------------------------------
-def _cluster_step_program(rt, rank, task=None, params=None, batch=None):
+def _cluster_step_program(rt, _rank, task=None, params=None, batch=None):
     """Module-level (spawn-picklable) per-step program for the daemons."""
     eng = RuntimeEngine(rt)
     new, loss, abort = task.run(eng, params, batch)
@@ -227,7 +227,7 @@ def _live_deal_program(rt, task=None, params=None, batch=None):
     task.run(RuntimeEngine(rt), params, batch)
 
 
-def _live_program_for_step(step, *, task, params, batch):
+def _live_program_for_step(_step, *, task, params, batch):
     """Picklable ``step -> program`` for the ContinuousDealer inside the
     dealer daemon (every step traces the same shapes)."""
     return functools.partial(_live_deal_program, task=task, params=params,

@@ -1,0 +1,24 @@
+"""CONC001 negative fixture: two locks acquired in opposite orders on
+two paths -- classic AB/BA deadlock, one hop of it through a method
+call made while holding a lock."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self._sub_lock = threading.Lock()
+        self._res_lock = threading.Lock()
+        self._t = threading.Thread(target=self.collect, daemon=True)
+
+    def submit(self, task):
+        with self._sub_lock:                  # sub -> res
+            with self._res_lock:
+                return task
+
+    def collect(self):
+        with self._res_lock:                  # res -> sub (via _requeue)
+            self._requeue()
+
+    def _requeue(self):
+        with self._sub_lock:
+            pass

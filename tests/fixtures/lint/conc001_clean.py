@@ -1,0 +1,22 @@
+"""CONC001 clean fixture: consistent lock order (sub before res on every
+path) and a Condition sharing its owner lock (alias, not a second
+lock)."""
+import threading
+
+
+class Pool:
+    def __init__(self):
+        self._sub_lock = threading.Lock()
+        self._res_lock = threading.Lock()
+        self._res_cond = threading.Condition(self._res_lock)
+        self._t = threading.Thread(target=self.collect, daemon=True)
+
+    def submit(self, task):
+        with self._sub_lock:
+            with self._res_lock:
+                return task
+
+    def collect(self):
+        with self._res_cond:                  # aliases _res_lock
+            with self._res_lock:              # re-entrant same lock: no edge
+                pass

@@ -1,0 +1,20 @@
+"""CONC002 negative fixture: counters and an error slot crossing the
+collector-thread/driver boundary with no guarding lock."""
+import threading
+
+
+class Collector:
+    def __init__(self):
+        self._q = []
+        self.done = 0
+        self.error = None
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            self.done += 1                    # CONC002: thread-side write
+            self.error = "boom"               # CONC002
+
+    def status(self):
+        return {"done": self.done, "error": self.error}   # driver-side read

@@ -1,0 +1,26 @@
+"""CONC002 clean fixture: the same shape with the shared fields guarded
+by one lock on both sides, plus an exempt bool stop-flag."""
+import threading
+
+
+class Collector:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.done = 0
+        self.error = None
+        self._closed = False
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            with self._lock:
+                self.done += 1
+                self.error = "boom"
+
+    def status(self):
+        with self._lock:
+            return {"done": self.done, "error": self.error}
+
+    def close(self):
+        self._closed = True                   # bool flag: exempt

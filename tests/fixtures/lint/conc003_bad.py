@@ -1,0 +1,13 @@
+"""CONC003 negative fixture: a bare except and a swallowed broad
+except."""
+
+
+def teardown(conn):
+    try:
+        conn.close()
+    except:                                   # CONC003: bare
+        print("ignored")
+    try:
+        conn.flush()
+    except Exception:                         # CONC003: swallowed
+        pass

@@ -1,0 +1,16 @@
+"""CONC003 clean fixture: narrowed types may pass silently; a broad
+except that actually handles (logs) the error is allowed."""
+import logging
+
+_log = logging.getLogger(__name__)
+
+
+def teardown(conn):
+    try:
+        conn.close()
+    except (OSError, ValueError):             # narrow + silent: fine
+        pass
+    try:
+        conn.flush()
+    except Exception as e:                    # broad but handled: fine
+        _log.warning("flush failed: %s", e)

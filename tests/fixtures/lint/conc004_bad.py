@@ -1,0 +1,9 @@
+"""CONC004 negative fixture: a non-daemon thread this module never
+joins -- it would pin the interpreter open after the driver exits."""
+import threading
+
+
+def start_watcher(fn):
+    t = threading.Thread(target=fn)           # CONC004: no daemon, no join
+    t.start()
+    return t

@@ -1,0 +1,15 @@
+"""CONC004 clean fixture: daemon threads, and a non-daemon thread whose
+module joins it."""
+import threading
+
+
+def start_watcher(fn):
+    t = threading.Thread(target=fn, daemon=True)
+    t.start()
+    return t
+
+
+def run_to_completion(fn):
+    t = threading.Thread(target=fn)
+    t.start()
+    t.join()

@@ -1,0 +1,28 @@
+"""CONC005 negative fixture: thread loops parked on no-timeout
+Queue.get() -- a dead producer strands them forever.  One class-method
+target, one module-function target."""
+import queue
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.q = queue.Queue()
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            item = self.q.get()               # CONC005
+            if item is None:
+                return
+
+
+def _drain(q):
+    while True:
+        if q.get() is None:                   # CONC005
+            return
+
+
+def start(q):
+    threading.Thread(target=_drain, args=(q,), daemon=True).start()

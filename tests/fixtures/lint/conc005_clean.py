@@ -1,0 +1,21 @@
+"""CONC005 clean fixture: bounded waits that re-check liveness, and a
+dict .get(key) that must not be mistaken for a queue read."""
+import queue
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self.q = queue.Queue()
+        self.opts = {}
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        while True:
+            try:
+                item = self.q.get(timeout=0.5)
+            except queue.Empty:
+                continue
+            if item is None or self.opts.get("stop"):
+                return

@@ -1,0 +1,17 @@
+"""OBS001 negative fixture: public protocol entries touching the
+transport without @traced_protocol -- directly, and through an
+undecorated underscore helper."""
+
+
+def open_value(rt, x):
+    rt.transport.send(0, 1, x, tag="op", nbits=64, phase="online")  # OBS001
+    return x
+
+
+def open_via_helper(rt, x):
+    return _exchange(rt, x)                   # OBS001 (transitive)
+
+
+def _exchange(rt, x):
+    with rt.transport.round("online", "ex"):
+        return x

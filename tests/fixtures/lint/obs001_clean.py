@@ -1,0 +1,17 @@
+"""OBS001 clean fixture: traced entries, local-only math, and wrappers
+shielded by traced callees."""
+from repro.obs import traced_protocol
+
+
+@traced_protocol("open_value")
+def open_value(rt, x):
+    rt.transport.send(0, 1, x, tag="op", nbits=64, phase="online")
+    return x
+
+
+def scale_public(rt, x, c):
+    return x * c                              # local compute: no transport
+
+
+def open_twice(rt, x):
+    return open_value(rt, open_value(rt, x))  # shielded by traced callee

@@ -1,0 +1,12 @@
+"""OBS002 negative fixture: a MeasuredTransport subclass overriding the
+byte-accounting seam, plus a raw socket write outside the framing
+layer."""
+from repro.runtime.transport import MeasuredTransport
+
+
+class ShortcutTransport(MeasuredTransport):
+    def send(self, src, dst, v, *, tag, nbits, phase="online"):  # OBS002
+        self._sock.sendall(v)                 # OBS002: unbooked bytes
+
+    def _put(self, src, dst, v, tag):
+        pass

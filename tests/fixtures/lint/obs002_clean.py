@@ -1,0 +1,14 @@
+"""OBS002 clean fixture: subclass implements only the _put/_get/
+_round_flush hooks; every byte flows through the accounting base."""
+from repro.runtime.transport import MeasuredTransport
+
+
+class QueueTransport(MeasuredTransport):
+    def _put(self, src, dst, v, tag):
+        self._q[dst].append((src, tag, v))
+
+    def _get(self, src, dst, tag):
+        return self._q[dst].pop(0)
+
+    def _round_flush(self, phase, label):
+        pass

@@ -1,0 +1,10 @@
+"""OBS003 negative fixture: registry metrics outside the trident_
+namespace (invisible to the exporter dashboards and the
+bench-regression gate's name filters)."""
+from repro.obs import get_registry
+
+
+def record(n):
+    reg = get_registry()
+    reg.counter("gateway_dispatches", "off-namespace").inc(n)   # OBS003
+    reg.gauge("bank_depth", "off-namespace").set(n)             # OBS003

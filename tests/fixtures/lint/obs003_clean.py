@@ -1,0 +1,12 @@
+"""OBS003 clean fixture: namespaced metrics; non-registry .counter()
+receivers (collections.Counter) are out of scope."""
+import collections
+
+from repro.obs import get_registry
+
+
+def record(n, words):
+    reg = get_registry()
+    reg.counter("trident_gateway_dispatches_total", "ok").inc(n)
+    reg.gauge("trident_live_bank_depth", "ok").set(n)
+    return collections.Counter(words)

@@ -1,0 +1,7 @@
+"""PHASE001 negative fixture: send booked to a phase other than the
+enclosing round scope's."""
+
+
+def reconstruct(rt, tp, x):
+    with tp.round("online", "reconstruct"):
+        tp.send(0, 1, x, tag="rec", nbits=64, phase="offline")  # PHASE001

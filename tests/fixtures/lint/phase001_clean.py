@@ -1,0 +1,8 @@
+"""PHASE001 clean fixture: send phase matches the round scope."""
+
+
+def reconstruct(rt, tp, x):
+    with tp.round("online", "reconstruct"):
+        tp.send(0, 1, x, tag="rec", nbits=64, phase="online")
+    with tp.round("offline", "deal"):
+        tp.send(0, 1, x, tag="lam", nbits=64, phase="offline")

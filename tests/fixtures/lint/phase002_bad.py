@@ -1,0 +1,7 @@
+"""PHASE002 negative fixture: literal-phase send with no round scope
+(bytes escape round accounting; MeasuredTransport would assert at
+runtime on the uncovered path)."""
+
+
+def share(rt, tp, v):
+    tp.send(0, 1, v, tag="sh", nbits=64, phase="online")   # PHASE002

@@ -1,0 +1,11 @@
+"""PHASE002 clean fixture: literal-phase sends sit inside round scopes;
+helpers taking phase as a parameter inherit the caller's scope."""
+
+
+def share(rt, tp, v):
+    with tp.round("online", "share"):
+        tp.send(0, 1, v, tag="sh", nbits=64, phase="online")
+
+
+def _jmp(tp, src, dst, v, *, tag, phase):
+    tp.send(src, dst, v, tag=tag, nbits=64, phase=phase)   # caller-scoped

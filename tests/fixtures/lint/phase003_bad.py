@@ -1,0 +1,12 @@
+"""PHASE003 negative fixture: forbid_phase bypass outside a lifecycle
+owner (scanned with a non-owner pretend path)."""
+
+
+def sneak_offline_bytes(tp, v):
+    tp.allow_phase("offline")                 # PHASE003: re-opens the seal
+    tp.send(0, 1, v, tag="x", nbits=64, phase="offline")
+
+
+class Backdoor:
+    def disarm(self, tp):
+        tp._forbidden = set()                 # PHASE003: direct write

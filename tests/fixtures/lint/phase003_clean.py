@@ -1,0 +1,6 @@
+"""PHASE003 clean fixture: sealing a phase (forbid) is allowed anywhere;
+only re-opening (allow) is owner-restricted."""
+
+
+def seal(tp):
+    tp.forbid_phase("offline")

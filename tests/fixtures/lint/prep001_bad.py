@@ -1,0 +1,25 @@
+"""PREP001 negative fixture: sampling outside the prep.acquire seam.
+
+Scanned with pretend-path runtime/protocols.py.  Four violations: raw
+sample in a protocol body, np.random in a protocol body, a helper
+reachable from a public entry, and a fresh PRNGKey.
+"""
+import numpy as np
+import jax
+
+
+def mult(rt, x, y):
+    lam = rt.sample((0, 1), x.shape)          # PREP001: online-path sample
+    noise = np.random.randint(0, 1 << 16)     # PREP001: host RNG
+    key = jax.random.PRNGKey(0)               # PREP001: fresh PRF root
+    return _leak_helper(rt, x), lam, noise, key
+
+
+def _leak_helper(rt, x):
+    return rt.sample_bounded((1, 2), x.shape, 16)   # PREP001 via mult
+
+
+def share(rt, v):
+    def build():
+        return rt.sample((0, 1), v.shape)     # OK: build handed to acquire
+    return rt.prep.acquire(rt.next_tag("sh"), "pair", build)

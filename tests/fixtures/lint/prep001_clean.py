@@ -1,0 +1,25 @@
+"""PREP001 clean fixture: every sanctioned sampling context.
+
+Scanned with pretend-path runtime/protocols.py; must produce no
+PREP001 findings.
+"""
+
+
+def mult(rt, x, y):
+    def build():
+        return rt.sample((0, 1), x.shape), _offline_half(rt, x)
+    lam = rt.prep.acquire(rt.next_tag("mul"), "triple", build)
+    return lam
+
+
+def _offline_half(rt, x):
+    # sampled only from builds: build-only helper (fixpoint context)
+    return rt.sample_bounded((1, 2), x.shape, 16)
+
+
+def bit_extract(rt, x):
+    if rt.prep.consuming:
+        lam = rt.prep.acquire(rt.next_tag("bx"), "pair", lambda: None)
+    else:
+        lam = rt.sample((0, 1), x.shape)      # consuming-guard context
+    return lam

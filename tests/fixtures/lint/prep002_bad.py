@@ -1,0 +1,19 @@
+"""PREP002 negative fixture: prep tag allocated under a prep-mode
+conditional (deal/consume transcripts would disagree on the tag
+stream)."""
+
+
+def truncate(rt, x):
+    if rt.prep.consuming:
+        lam = rt.prep.acquire(rt.next_tag("tr"), "pair", lambda: None)
+    else:
+        lam = None
+    return lam
+
+
+def b2a(rt, b):
+    if not rt.prep.skip_online:
+        tag = rt.next_tag("b2a")              # PREP002: conditional mint
+    else:
+        tag = None
+    return tag

@@ -1,0 +1,9 @@
+"""PREP002 clean fixture: tags minted unconditionally in every mode."""
+
+
+def truncate(rt, x):
+    tag = rt.next_tag("tr")
+    lam = rt.prep.acquire(tag, "pair", lambda: None)
+    if rt.prep.consuming:
+        return lam
+    return lam, x

@@ -1,0 +1,115 @@
+"""tridentlint test suite: every rule fires on its negative fixture and
+stays silent on its clean twin; the full-tree run matches the committed
+baseline; the baseline diff machinery classifies new/matched/stale."""
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Finding, all_rules, baseline_diff, baseline_load,
+                            baseline_save, load_tree, run_rules)
+from repro.analysis.core import Module
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+SRC = REPO / "src" / "repro"
+BASELINE = REPO / "analysis" / "baseline.json"
+
+# rule id -> (pretend relpath, expected finding count in the bad fixture)
+CASES = {
+    "PREP001": ("runtime/protocols.py", 4),
+    "PREP002": ("runtime/protocols.py", 2),
+    "PHASE001": ("runtime/protocols.py", 1),
+    "PHASE002": ("runtime/protocols.py", 1),
+    "PHASE003": ("serve/custom.py", 2),
+    "OBS001": ("runtime/protocols.py", 2),
+    "OBS002": ("serve/custom.py", 2),
+    "OBS003": ("serve/custom.py", 2),
+    "CONC001": ("serve/gateway.py", 1),
+    "CONC002": ("serve/gateway.py", 2),
+    "CONC003": ("serve/gateway.py", 2),
+    "CONC004": ("serve/gateway.py", 1),
+    "CONC005": ("serve/gateway.py", 2),
+}
+
+
+def run_fixture(rule_id: str, kind: str):
+    relpath, _ = CASES[rule_id]
+    path = FIXTURES / f"{rule_id.lower()}_{kind}.py"
+    mod = Module.load(path, relpath)
+    return run_rules([mod], rules=[rule_id])
+
+
+def test_every_rule_has_a_case():
+    assert set(CASES) == set(all_rules()), \
+        "CASES must enumerate exactly the registered rules"
+
+
+@pytest.mark.parametrize("rule_id", sorted(CASES))
+def test_rule_fires_on_negative_fixture(rule_id):
+    findings = run_fixture(rule_id, "bad")
+    assert len(findings) == CASES[rule_id][1], \
+        f"{rule_id}: {[f.render() for f in findings]}"
+    assert all(f.rule == rule_id for f in findings)
+    assert all(f.line > 0 for f in findings)
+
+
+@pytest.mark.parametrize("rule_id", sorted(CASES))
+def test_rule_silent_on_clean_fixture(rule_id):
+    findings = run_fixture(rule_id, "clean")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_full_tree_matches_baseline():
+    findings = run_rules(load_tree(SRC))
+    new, matched, stale = baseline_diff(findings, baseline_load(BASELINE))
+    assert new == [], "new findings vs baseline:\n" + "\n".join(
+        f.render() for f in new)
+    assert stale == [], f"stale baseline entries (prune them): {stale}"
+    assert matched == len(findings)
+
+
+def test_baseline_diff_classification(tmp_path):
+    f1 = Finding("PREP001", "runtime/a.py", 10, "f", "m")
+    f2 = Finding("CONC003", "serve/b.py", 20, "g", "m")
+    p = tmp_path / "b.json"
+    baseline_save(p, [f1])
+    base = baseline_load(p)
+    assert base == Counter({f1.key: 1})
+    new, matched, stale = baseline_diff([f1, f2], base)
+    assert new == [f2] and matched == 1 and stale == []
+    # fixing f1 leaves its entry stale, not fatal
+    new, matched, stale = baseline_diff([f2], base)
+    assert new == [f2] and matched == 0 and stale == [f1.key]
+    # line moves do not churn the match (key is line-free)
+    moved = Finding("PREP001", "runtime/a.py", 99, "f", "m")
+    new, matched, stale = baseline_diff([moved], base)
+    assert new == [] and matched == 1 and stale == []
+
+
+def test_injected_seam_violation_fails(tmp_path):
+    """The CI negative check: a raw np.random call in a protocol body
+    must produce a PREP001 finding when scanned at a runtime/ path."""
+    bad = tmp_path / "injected.py"
+    bad.write_text(
+        "import numpy as np\n\n\n"
+        "def mult(rt, x, y):\n"
+        "    return x * y + np.random.randint(0, 7)\n")
+    mod = Module.load(bad, "runtime/injected.py")
+    findings = run_rules([mod])
+    assert any(f.rule == "PREP001" for f in findings)
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    from repro.analysis.cli import main
+    # clean run against the real tree + committed baseline
+    assert main(["--root", str(SRC), "--baseline", str(BASELINE)]) == 0
+    # injected violation flips the exit code
+    bad = tmp_path / "injected.py"
+    bad.write_text("import numpy as np\n\n\n"
+                   "def mult(rt, x):\n"
+                   "    return np.random.rand(*x.shape)\n")
+    rc = main(["--root", str(SRC), "--baseline", str(BASELINE),
+               "--pretend-path", "runtime/injected.py", str(bad)])
+    captured = capsys.readouterr()
+    assert rc == 1 and "PREP001" in captured.out

@@ -36,7 +36,7 @@ def test_param_specs_match_real_init(arch):
     real_s = jax.tree_util.tree_structure(real)
     spec_s = jax.tree_util.tree_structure(spec)
     assert real_s == spec_s, (arch, real_s, spec_s)
-    for (pa, a), (pb, b) in zip(
+    for (pa, a), (_pb, b) in zip(
             jax.tree_util.tree_leaves_with_path(real),
             jax.tree_util.tree_leaves_with_path(spec)):
         assert tuple(a.shape) == tuple(b.shape), (arch, pa, a.shape, b.shape)
@@ -62,7 +62,7 @@ def test_decode_cache_specs_match_prefill(arch):
     got_s = jax.tree_util.tree_structure(caches)
     want_s = jax.tree_util.tree_structure(spec)
     assert got_s == want_s, (arch, got_s, want_s)
-    for (pa, a), (pb, b) in zip(
+    for (pa, a), (_pb, b) in zip(
             jax.tree_util.tree_leaves_with_path(caches),
             jax.tree_util.tree_leaves_with_path(spec)):
         assert tuple(a.shape) == tuple(b.shape), (arch, pa, a.shape, b.shape)

@@ -256,7 +256,7 @@ class TestPipeline:
         with PrepPipeline([prog] * 3, ring=RING64, base_seed=SEED,
                           capacity=2) as pipe:
             seen = 0
-            for k, store, drep in pipe.stores():
+            for k, store, _drep in pipe.stores():
                 got, orep = run_online(prog, store, ring=RING64)
                 rt0 = FourPartyRuntime(RING64, seed=SEED + k)
                 want = prog(rt0)

@@ -24,7 +24,7 @@ from repro.core.context import make_context
 from repro.core.ring import RING64
 from repro.nn.engine import PlainEngine, TridentEngine
 from repro.nn.runtime_engine import RuntimeEngine
-from repro.offline import (ContinuousDealer, PrepKindError,
+from repro.offline import (ContinuousDealer, PrepError, PrepKindError,
                            PrepMissingError, PrepReplayError, PrepStore,
                            deal, run_online)
 from repro.runtime import FourPartyRuntime
@@ -192,7 +192,7 @@ class TestContinuousDealer:
             # deal from the step-indexed seed
             ref, _ = deal(_tiny_program, seed=seed_for_step(0, 3))
             assert stores[3].tags() == ref.tags()
-            with pytest.raises(Exception):
+            with pytest.raises(PrepError):
                 dealer.next_store(timeout=0.5)   # exhausted after total
 
     def test_store_for_step_seeks_forward_and_replay_raises(self):

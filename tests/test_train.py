@@ -234,7 +234,7 @@ class TestServe:
             return eng.to_plain(p)
 
         srv = PredictionServer(predict, batch_size=4, seed=1)
-        for i in range(10):
+        for _ in range(10):
             srv.submit(rng.randn(8))
         out = srv.flush()
         assert len(out) == 10
